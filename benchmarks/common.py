@@ -1,0 +1,176 @@
+"""Shared harness for the paper-table benchmarks.
+
+Pipeline per table cell (mirrors the paper's experimental protocol at
+container scale — see DESIGN.md §8):
+  1. train a full-precision TEACHER on the synthetic task (classification);
+  2. estimate sigma_Q/K (Eq. 12) on training minibatches;
+  3. distill a student variant through the 4-stage recipe (or an ablation);
+  4. evaluate teacher and student accuracy on held-out batches.
+
+Variants: "had" (the paper's method), "sab" (BiViT-style binarized
+attention matrix), "no_ad" (no attention-map distillation loss),
+"no_tanh" (STE-only schedule), "fp_topn" (full-precision Q/K + top-N only —
+the fig. 3 N-sweep protocol).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import losses
+from repro.core.distill import DistillConfig, no_tanh_schedule, tiny_schedule
+from repro.models import ModelConfig
+from repro.models import model as M
+from repro.models.config import HADConfig
+from repro.optim import adam
+from repro.train.steps import estimate_and_set_sigmas
+
+
+def encoder_cfg(*, d=64, layers=2, heads=4, vocab=512, seq=64, frontend=0,
+                name="bench") -> ModelConfig:
+    return ModelConfig(
+        name=name, family="encoder", n_layers=layers, d_model=d,
+        n_heads=heads, n_kv_heads=heads, head_dim=max(d // heads, 16),
+        d_ff=2 * d, vocab_size=vocab, causal=False,
+        pos="learned", max_pos=seq, frontend_dim=frontend, act="gelu",
+        had=HADConfig(n_min=4), param_dtype="float32", q_block=32,
+        remat=False)
+
+
+def causal_cfg(*, d=64, layers=2, heads=4, vocab=512, name="bench-lm"
+               ) -> ModelConfig:
+    return ModelConfig(
+        name=name, family="dense", n_layers=layers, d_model=d,
+        n_heads=heads, n_kv_heads=heads, head_dim=max(d // heads, 16),
+        d_ff=2 * d, vocab_size=vocab, had=HADConfig(n_min=4),
+        param_dtype="float32", q_block=32, remat=False)
+
+
+def _cls_position(cfg: ModelConfig) -> int:
+    return 0 if cfg.is_encoder else -1
+
+
+def class_logits(cfg, params, batch, *, mode="std", att=None):
+    out = M.forward(params, batch, cfg=cfg, mode=mode, att=att)
+    return out.logits[:, _cls_position(cfg), :cfg.vocab_size]
+
+
+def _jnp_batch(tb):
+    return jax.tree.map(jnp.asarray, tb.inputs), jnp.asarray(tb.labels)
+
+
+def train_teacher(cfg: ModelConfig, task: Iterator, *, steps: int,
+                  lr: float = 3e-4, seed: int = 0) -> dict:
+    params = M.init_params(jax.random.PRNGKey(seed), cfg)
+    opt_cfg = adam.AdamWConfig(grad_clip=1.0)
+    opt = adam.init(params, opt_cfg)
+
+    @jax.jit
+    def step(params, opt, batch, labels):
+        def loss_fn(p):
+            return losses.softmax_cross_entropy(
+                class_logits(cfg, p, batch), labels)
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        params, opt, _ = adam.update(g, opt, params, lr=lr, cfg=opt_cfg)
+        return params, opt, loss
+
+    for _ in range(steps):
+        batch, labels = _jnp_batch(next(task))
+        params, opt, loss = step(params, opt, batch, labels)
+    return params
+
+
+def evaluate(cfg: ModelConfig, params: dict, task: Iterator, *,
+             n_batches=20, mode="std", n: int | None = None) -> float:
+    att = {"n": n} if n is not None else None
+    fn = jax.jit(lambda p, b: class_logits(cfg, p, b, mode=mode, att=att))
+    correct = total = 0
+    for _ in range(n_batches):
+        tb = next(task)
+        lg = fn(params, jax.tree.map(jnp.asarray, tb.inputs))
+        correct += int((np.asarray(lg).argmax(-1) == tb.labels).sum())
+        total += len(tb.labels)
+    return correct / total
+
+
+@dataclasses.dataclass
+class DistillResult:
+    params: dict
+    accuracy: float
+    train_time_s: float
+    us_per_step: float
+
+
+def distill_variant(cfg: ModelConfig, teacher: dict, task: Iterator, *,
+                    variant: str = "had", topn: int,
+                    steps_per_stage: int = 40,
+                    eval_task: Iterator | None = None,
+                    eval_batches: int = 20) -> DistillResult:
+    """Run one table-1/2 column: distill `variant` from `teacher`."""
+    if variant == "no_tanh":
+        sched = no_tanh_schedule(4 * steps_per_stage)
+    else:
+        sched = tiny_schedule(steps_per_stage)
+    dcfg = DistillConfig(schedule=sched, lr_stages_123=1e-4, lr_stage_4=1e-5,
+                         attention_loss=(variant != "no_ad"))
+    opt_cfg = adam.AdamWConfig(grad_clip=dcfg.grad_clip)
+
+    # Eq. 12 sigma estimation on training minibatches
+    teacher = estimate_and_set_sigmas(
+        teacher, cfg,
+        (jax.tree.map(jnp.asarray, next(task).inputs) for _ in range(5)),
+        n_batches=5)
+
+    student = M.student_subset(cfg, teacher)
+    opt = adam.init(student, opt_cfg)
+
+    @jax.jit
+    def dstep(student, opt, step, batch, labels):
+        def loss_fn(student):
+            pos = _cls_position(cfg)
+            if variant in ("sab", "fp_topn"):
+                # output-KL-only distillation of the modified attention
+                lt = class_logits(cfg, teacher, batch)
+                eff = M.merge_student(cfg, teacher, student)
+                mode = "sab_train" if variant == "sab" else "fp_topn"
+                ls = class_logits(cfg, eff, batch, mode=mode,
+                                  att={"n": topn})
+                out_kl = losses.output_kl(lt, ls)
+                return out_kl, (jnp.zeros(()), out_kl)
+            att = {"n": topn, "sched": dcfg.schedule, "step": step}
+            out = M.forward_distill(teacher, student, batch, cfg=cfg, att=att)
+            lt = out.teacher_logits[:, pos, :cfg.vocab_size]
+            ls = out.student_logits[:, pos, :cfg.vocab_size]
+            out_kl = losses.output_kl(lt, ls)
+            loss = losses.combined_distill_loss(
+                out.attention_kl, out_kl,
+                use_attention_loss=dcfg.use_attention_loss_at(step))
+            return loss, (out.attention_kl, out_kl)
+
+        (loss, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(student)
+        student, opt, _ = adam.update(g, opt, student, lr=dcfg.lr_at(step),
+                                      cfg=opt_cfg)
+        return student, opt, loss
+
+    t0 = time.perf_counter()
+    for i in range(dcfg.total_steps):
+        batch, labels = _jnp_batch(next(task))
+        student, opt, loss = dstep(student, opt, jnp.asarray(i), batch,
+                                   labels)
+    dt = time.perf_counter() - t0
+
+    eff = M.merge_student(cfg, teacher, student)
+    eval_mode = {"sab": "sab_eval", "fp_topn": "fp_topn"}.get(variant,
+                                                              "had_eval")
+    acc = evaluate(cfg, eff, eval_task or task, mode=eval_mode, n=topn,
+                   n_batches=eval_batches)
+    return DistillResult(eff, acc, dt, dt / max(dcfg.total_steps, 1) * 1e6)
+
+
+def csv_line(name: str, us: float, derived) -> str:
+    return f"{name},{us:.1f},{derived}"

@@ -1,0 +1,67 @@
+"""Paper Fig. 1 analogue — attention's share of cost vs context length.
+
+The paper measures BERT-Base latency with/without attention on an L40 GPU,
+showing attention dominating past a few thousand tokens. Here: (a) the
+analytic FLOPs share of attention vs everything else for a BERT-Base-shaped
+encoder across context lengths, and (b) a CPU wall-clock of the attention
+op vs the FFN path at small scale (direction-of-effect check).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flops_share(ctx: int, *, d=768, layers=12, heads=12, ff=3072) -> float:
+    per_tok_linear = 2 * (4 * d * d + 2 * d * ff)          # qkvo + mlp
+    per_tok_attn = 2 * 2 * ctx * d                         # logits + AV
+    total = per_tok_linear + per_tok_attn
+    return per_tok_attn / total
+
+
+def run(print_fn=print) -> list[str]:
+    print_fn("fig1: attention share of per-token FLOPs (BERT-Base shape)")
+    ctxs = [128, 256, 512, 1024, 2048, 4096, 8192, 16384]
+    for ctx in ctxs:
+        share = flops_share(ctx)
+        bar = "#" * int(40 * share)
+        print_fn(f"  ctx={ctx:>6}  attention {100 * share:5.1f}%  {bar}")
+
+    # wall-clock: attention op vs ffn op at growing ctx (tiny dims for CPU)
+    d, h = 64, 4
+    rng = jax.random.PRNGKey(0)
+    t_att, t_ffn = {}, {}
+    for ctx in (128, 512, 2048):
+        x = jax.random.normal(rng, (1, ctx, d))
+        q = jax.random.normal(rng, (1, h, ctx, d // h))
+        w1 = jax.random.normal(rng, (d, 4 * d))
+        w2 = jax.random.normal(rng, (4 * d, d))
+        att = jax.jit(lambda q: jax.nn.softmax(
+            jnp.einsum("bhqd,bhkd->bhqk", q, q), -1) @ q)
+        ffn = jax.jit(lambda x: jax.nn.gelu(x @ w1) @ w2)
+        jax.block_until_ready(att(q)); jax.block_until_ready(ffn(x))
+        t0 = time.perf_counter()
+        for _ in range(10):
+            jax.block_until_ready(att(q))
+        t_att[ctx] = (time.perf_counter() - t0) / 10 * 1e6
+        t0 = time.perf_counter()
+        for _ in range(10):
+            jax.block_until_ready(ffn(x))
+        t_ffn[ctx] = (time.perf_counter() - t0) / 10 * 1e6
+    print_fn("fig1: wall-clock us (attention vs ffn), CPU")
+    for ctx in t_att:
+        print_fn(f"  ctx={ctx:>5}: attention {t_att[ctx]:8.0f}us   "
+                 f"ffn {t_ffn[ctx]:8.0f}us   ratio "
+                 f"{t_att[ctx] / t_ffn[ctx]:.2f}")
+    grows = (t_att[2048] / t_ffn[2048]) > (t_att[128] / t_ffn[128])
+    share_16k = flops_share(16384)
+    return [f"fig1_runtime,{t_att[2048]:.1f},attn_share_16k={share_16k:.3f};"
+            f"attn_dominates_with_ctx={grows}"]
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

@@ -1,0 +1,50 @@
+"""Paper Fig. 3 analogue — accuracy while distilling over decreasing N.
+
+Full-precision student (no binarization) distilled with top-N sparsity
+only, over a decreasing N ladder — the paper's protocol for picking N on
+DeiT-T (plateau down to N~30 of 197, then a cliff).
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common as C
+from repro.data import patch_task
+
+N_PATCHES = 25
+LADDER = [25, 12, 8, 5, 3, 2, 1]   # ~ paper's 100 -> 10 of 197
+
+
+def run(print_fn=print, *, steps_teacher=400, steps_per_stage=15,
+        eval_batches=15) -> list[str]:
+    t0 = time.perf_counter()
+    cfg = C.encoder_cfg(d=64, layers=2, heads=4, vocab=8, seq=N_PATCHES,
+                        frontend=32, name="fig3")
+
+    def mk(s):
+        return patch_task(dim=32, n_patches=N_PATCHES, n_classes=8,
+                          batch=32, seed=s)
+
+    teacher = C.train_teacher(cfg, mk(1), steps=steps_teacher, lr=1e-3)
+    base = C.evaluate(cfg, teacher, mk(2), n_batches=eval_batches)
+    print_fn(f"fig3: accuracy vs N (fp distill + top-N, teacher={base:.3f})")
+    accs = {}
+    for n in LADDER:
+        r = C.distill_variant(cfg, teacher, mk(1), variant="fp_topn",
+                              topn=n, steps_per_stage=steps_per_stage,
+                              eval_task=mk(2), eval_batches=eval_batches)
+        accs[n] = r.accuracy
+        bar = "#" * int(40 * r.accuracy)
+        print_fn(f"  N={n:>3}/{N_PATCHES}: {r.accuracy:.3f} {bar}")
+    dt = time.perf_counter() - t0
+    # claim: plateau at moderate N, cliff at very small N
+    plateau = accs[8] >= accs[25] - 0.08
+    cliff = accs[1] < accs[8]
+    return [f"fig3_topn,{dt * 1e6 / len(LADDER):.1f},"
+            f"acc_full={accs[25]:.3f};acc_N8={accs[8]:.3f};"
+            f"acc_N1={accs[1]:.3f};plateau={plateau};cliff={cliff}"]
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

@@ -1,0 +1,52 @@
+"""Paper Fig. 4 — exact numerical reproduction.
+
+"Given standard gaussian inputs, the percentage of the largest softmax
+outputs required to sum to the threshold probability" across softmax sizes.
+Shows the fraction needed for a fixed mass falls/concentrates with size —
+the justification for linearly-scaled (then capped) N (paper §3.2, §4.3).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def mass_fraction(size: int, threshold: float, *, trials: int = 20,
+                  seed: int = 0) -> float:
+    """Fraction of the largest softmax outputs needed to reach `threshold`
+    probability mass, for standard-gaussian logits of `size`."""
+    rng = np.random.default_rng(seed)
+    fracs = []
+    for _ in range(trials):
+        z = rng.standard_normal(size)
+        p = np.exp(z - z.max())
+        p /= p.sum()
+        p_sorted = np.sort(p)[::-1]
+        k = int(np.searchsorted(np.cumsum(p_sorted), threshold)) + 1
+        fracs.append(k / size)
+    return float(np.mean(fracs))
+
+
+def run(print_fn=print) -> list[str]:
+    lines = []
+    t0 = time.perf_counter()
+    sizes = [128, 256, 512, 1024, 2048, 4096, 8192]
+    print_fn("fig4: % of largest softmax outputs reaching the mass threshold")
+    print_fn(f"{'size':>6} " + " ".join(f"p={p:.2f}" for p in (0.5, 0.9, 0.99)))
+    for size in sizes:
+        row = [mass_fraction(size, p) for p in (0.5, 0.9, 0.99)]
+        print_fn(f"{size:>6} " + " ".join(f"{100 * f:5.1f}%" for f in row))
+        lines.append(("fig4_softmax_mass", size, row))
+    dt_us = (time.perf_counter() - t0) * 1e6 / len(sizes)
+    # derived claim: the p=0.9 fraction at 8192 is well below that at 128
+    f_small = mass_fraction(128, 0.9)
+    f_large = mass_fraction(8192, 0.9)
+    csv = [f"fig4_softmax,{dt_us:.1f},frac90_128={f_small:.4f};"
+           f"frac90_8192={f_large:.4f};concentrates={f_large < f_small}"]
+    return csv
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

@@ -1,0 +1,59 @@
+"""Paper Fig. 5 analogue — long-context QA accuracy across context lengths.
+
+QuALITY-proxy: a retrieval-QA task where the answer token hides at a random
+position; contexts 64..512 (paper: 128..1024) with N scaled LINEARLY with
+context (paper §4.3: 15@128 .. 120@1024 — same 11.7% here). Teacher
+(full-precision causal LM classifier) vs HAD student at each length.
+
+Claim validated: HAD tracks the baseline's accuracy-vs-context trend
+within a few points at every length.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common as C
+from repro.data import retrieval_qa_task
+
+CTXS = [64, 128, 256]   # paper: 128..1024; CPU budget caps at 256
+FRAC = 0.117   # paper's N/ctx ratio
+
+
+def run(print_fn=print, *, steps_teacher=300, steps_per_stage=15,
+        eval_batches=10, ctxs=None) -> list[str]:
+    t0 = time.perf_counter()
+    ctxs = ctxs or CTXS
+    print_fn("fig5 (QuALITY-proxy): accuracy vs context (N = 11.7% of ctx)")
+    print_fn(f"{'ctx':>6} {'N':>4} {'baseline':>9} {'HAD':>7} {'gap':>6}")
+    results = {}
+    for ctx in ctxs:
+        n = max(int(round(FRAC * ctx)), 4)
+        # head_dim 64 (paper-scale): binary-score resolution grows with
+        # sqrt(d_k) — 16-dim heads cannot single out a needle key at 256+ ctx
+        cfg = C.causal_cfg(d=64, layers=2, heads=1, vocab=128,
+                           name=f"fig5-{ctx}")
+
+        def mk(s):
+            return retrieval_qa_task(vocab=128, batch=16, seq=ctx,
+                                     n_classes=8, seed=s)
+
+        teacher = C.train_teacher(cfg, mk(1), steps=steps_teacher, lr=1e-3)
+        base = C.evaluate(cfg, teacher, mk(2), n_batches=eval_batches)
+        r = C.distill_variant(cfg, teacher, mk(1), variant="had", topn=n,
+                              steps_per_stage=steps_per_stage,
+                              eval_task=mk(2), eval_batches=eval_batches)
+        results[ctx] = (base, r.accuracy)
+        print_fn(f"{ctx:>6} {n:>4} {base:>9.3f} {r.accuracy:>7.3f} "
+                 f"{base - r.accuracy:>6.3f}")
+    dt = time.perf_counter() - t0
+    worst_gap = max(b - h for b, h in results.values())
+    tracks = worst_gap <= 0.08   # paper: within ~3% of baseline
+    parts = ";".join(f"ctx{c}={results[c][0]:.2f}/{results[c][1]:.2f}"
+                     for c in ctxs)
+    return [f"fig5_quality,{dt * 1e6 / len(ctxs):.1f},{parts};"
+            f"worst_gap={worst_gap:.3f};tracks_baseline={tracks}"]
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

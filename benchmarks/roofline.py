@@ -1,0 +1,65 @@
+"""§Roofline table builder — reads experiments/dryrun/*.json cell records."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_cells(dryrun_dir: str = "experiments/dryrun") -> list[dict]:
+    cells = []
+    for fn in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(fn) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def table(cells: list[dict], *, mesh: str = "16x16") -> str:
+    lines = [
+        f"| arch | shape | dom | t_comp (s) | t_mem (s) | t_coll (s) | "
+        f"MODEL_FLOPs/HLO | mem/dev GB |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c.get("mesh") != mesh:
+            continue
+        if c.get("status") == "skipped":
+            lines.append(f"| {c['arch']} | {c['shape']} | — skipped: "
+                         f"{c['reason']} | | | | | |")
+            continue
+        if c.get("status") != "ok":
+            lines.append(f"| {c['arch']} | {c['shape']} | ERROR | | | | | |")
+            continue
+        r = c["roofline"]
+        m = c["memory"]
+        mem = m.get("per_device_total_gb_tpu_corrected",
+                    m.get("per_device_total_gb"))
+        ratio = c.get("useful_flop_ratio")
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {r['dominant']} "
+            f"| {r['t_compute_s']:.3g} | {r['t_memory_s']:.3g} "
+            f"| {r['t_collective_s']:.3g} "
+            f"| {ratio:.2f} | {mem} |" if ratio is not None else
+            f"| {c['arch']} | {c['shape']} | {r['dominant']} | | | | | |")
+    return "\n".join(lines)
+
+
+def run(print_fn=print) -> list[str]:
+    cells = load_cells()
+    if not cells:
+        print_fn("roofline: no dry-run records found — run "
+                 "`python -m repro.launch.dryrun --all --mesh both --out "
+                 "experiments/dryrun` first")
+        return ["roofline,0.0,cells=0"]
+    ok = sum(c.get("status") == "ok" for c in cells)
+    skipped = sum(c.get("status") == "skipped" for c in cells)
+    err = sum(c.get("status") == "error" for c in cells)
+    print_fn(table(cells))
+    print_fn(f"\ncells: {ok} ok, {skipped} skipped, {err} errors "
+             f"(both meshes)")
+    return [f"roofline,0.0,ok={ok};skipped={skipped};errors={err}"]
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

@@ -1,0 +1,2 @@
+"""Atomic, elastic checkpointing."""
+from repro.checkpoint.manager import CheckpointManager

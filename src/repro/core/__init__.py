@@ -1,0 +1,22 @@
+"""HAD core: binarization, Hamming scores, top-N sparsification, losses.
+
+The paper's contribution as composable JAX functions. See DESIGN.md §1.
+"""
+from repro.core.binarize import (CSchedule, Stage, binarize_inference,
+                                 binarize_scheduled, estimate_sigma,
+                                 estimate_sigmas_from_capture, hard_sign,
+                                 ste_sign)
+from repro.core.binarize import binarize as binarize_stage
+from repro.core.distill import DistillConfig, tiny_schedule
+from repro.core.hamming import (binary_scores, binary_scores_dense,
+                                hamming_distance, pack_bits, packed_words,
+                                score_levels, unpack_bits)
+from repro.core.losses import (attention_kl, combined_distill_loss,
+                               kl_divergence, output_kl,
+                               softmax_cross_entropy)
+from repro.core.topn import (scale_n_with_context, score_histogram,
+                             sparse_softmax, threshold_from_histogram,
+                             topn_mask, topn_mask_binary)
+from repro.core.attention import (DistillAttnOut, distill_pair_attention,
+                                  had_infer_attention, had_topn_attention,
+                                  standard_attention)

@@ -1,0 +1,287 @@
+"""Attention variants: standard (teacher), HAD train-time, HAD inference.
+
+Shape contract (grouped-query attention throughout):
+  q: [B, H, Sq, D]     (H query heads)
+  k: [B, Hk, Sk, D]    (Hk KV heads; H % Hk == 0)
+  v: [B, Hk, Sk, Dv]
+  out: [B, H, Sq, Dv]
+
+All train-time functions are differentiable and chunk over query blocks so
+the [Sq, Sk] logit rows are materialized only one block at a time (memory
+O(bq * Sk) per head, recomputed in the backward pass via jax.checkpoint).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hamming, losses, topn
+from repro.distributed.constraints import constrain
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+# Attention compute dtype for the train-path logit blocks (§Perf iteration):
+#   f32  — paper-faithful baseline (default)
+#   bf16 — halves the HBM traffic of the logit matmuls, sort, and AV
+#          accumulation; softmax/KL still reduce in f32 internally.
+ATTN_DTYPE = jnp.float32
+
+
+def set_attn_compute_dtype(dtype) -> None:
+    global ATTN_DTYPE
+    ATTN_DTYPE = dtype
+
+
+def choose_block(s: int, target: int = 512) -> int:
+    """Largest divisor of s that is <= target (>=1)."""
+    b = min(s, target)
+    while s % b:
+        b -= 1
+    return b
+
+
+def _group(q: Array, hk: int) -> Array:
+    """[B, H, Sq, D] -> [B, Hk, G, Sq, D]."""
+    b, h, sq, d = q.shape
+    return q.reshape(b, hk, h // hk, sq, d)
+
+
+def _ungroup(x: Array) -> Array:
+    """[B, Hk, G, Sq, Dv] -> [B, H, Sq, Dv]."""
+    b, hk, g, sq, dv = x.shape
+    return x.reshape(b, hk * g, sq, dv)
+
+
+def _key_mask(sq: int, sk: int, *, causal: bool, q_offset: Array | int,
+              kv_valid: Array | None, batch: int) -> Array | None:
+    """Validity mask [B?, 1, 1, sq, sk] (True = key usable)."""
+    mask = None
+    if causal:
+        qi = jnp.arange(sq)[:, None] + q_offset
+        kj = jnp.arange(sk)[None, :]
+        mask = kj <= qi  # [sq, sk]
+        mask = mask[None, None, None]
+    if kv_valid is not None:
+        kvm = kv_valid[:, None, None, None, :]  # [B,1,1,1,sk]
+        mask = kvm if mask is None else jnp.logical_and(mask, kvm)
+    return mask
+
+
+def standard_attention(q: Array, k: Array, v: Array, *, scale: float,
+                       causal: bool = True, q_offset: Array | int = 0,
+                       kv_valid: Array | None = None) -> Array:
+    """Dense softmax attention (the teacher / baseline path)."""
+    hk = k.shape[1]
+    qg = _group(q, hk)
+    logits = constrain(jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                                  k.astype(jnp.float32)), "bm...") * scale
+    mask = _key_mask(q.shape[2], k.shape[2], causal=causal, q_offset=q_offset,
+                     kv_valid=kv_valid, batch=q.shape[0])
+    if mask is not None:
+        logits = jnp.where(mask, logits, NEG_INF)
+    a = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", a, v.astype(jnp.float32))
+    return _ungroup(out).astype(v.dtype)
+
+
+def had_topn_attention(q: Array, k: Array, v: Array, *, n: int, scale: float,
+                       causal: bool = True, q_offset: Array | int = 0,
+                       kv_valid: Array | None = None,
+                       return_logits: bool = False):
+    """HAD student attention, Eq. 5-8 (dense compute, top-N mask).
+
+    q/k are the (possibly tanh-softened or STE-binarized) Q/K. The top-N
+    mask is computed on the *unscaled* logits (Eq. 6), then softmax applies
+    the 1/sqrt(d_k) scale within the mask (Eq. 7). Returns out
+    (and optionally the scaled pre-mask logits for the Eq. 9 KL).
+    """
+    hk = k.shape[1]
+    qg = _group(q, hk)
+    raw = constrain(jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(ATTN_DTYPE),
+                               k.astype(ATTN_DTYPE)), "bm...")
+    mask = _key_mask(q.shape[2], k.shape[2], causal=causal, q_offset=q_offset,
+                     kv_valid=kv_valid, batch=q.shape[0])
+    valid = None if mask is None else jnp.broadcast_to(mask, raw.shape)
+    keep = topn.topn_mask(raw, n, valid=valid)
+    a = topn.sparse_softmax(raw, keep, scale=scale).astype(ATTN_DTYPE)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", a, v.astype(ATTN_DTYPE))
+    out = _ungroup(out).astype(v.dtype)
+    if return_logits:
+        logits = raw * scale
+        if valid is not None:
+            logits = jnp.where(valid, logits, NEG_INF)
+        return out, logits
+    return out
+
+
+class DistillAttnOut(NamedTuple):
+    teacher_out: Array
+    student_out: Array
+    kl_sum: Array      # sum of per-row KL over all rows/heads in this call
+    row_count: Array   # number of rows contributing
+
+
+def distill_pair_attention(qt: Array, kt: Array, vt: Array,
+                           qs: Array, ks: Array, vs: Array, *, n: int,
+                           scale: float, causal: bool = True,
+                           kv_valid: Array | None = None,
+                           q_block: int = 512) -> DistillAttnOut:
+    """Fused teacher + student attention with Eq. 9 KL accumulation.
+
+    Scans over query blocks; each block materializes the full [bq, Sk]
+    teacher and student logit rows (needed for both exact top-N and the
+    row-wise KL), computes both attention outputs and the KL contribution,
+    then is freed. jax.checkpoint recomputes blocks in the backward pass.
+    """
+    b, h, sq, d = qt.shape
+    hk = kt.shape[1]
+    bq = choose_block(sq, q_block)
+    nblk = sq // bq
+
+    def blk(q_pair, offset):
+        qt_b, qs_b = q_pair  # [B, H, bq, D]
+        mask = _key_mask(bq, kt.shape[2], causal=causal, q_offset=offset,
+                         kv_valid=kv_valid, batch=b)
+        qt_g = _group(qt_b, hk)
+        qs_g = _group(qs_b, hk)
+        lt = constrain(jnp.einsum("bhgqd,bhkd->bhgqk",
+                                  qt_g.astype(ATTN_DTYPE),
+                                  kt.astype(ATTN_DTYPE)), "bm...") * scale
+        raw_s = constrain(jnp.einsum("bhgqd,bhkd->bhgqk",
+                                     qs_g.astype(ATTN_DTYPE),
+                                     ks.astype(ATTN_DTYPE)), "bm...")
+        ls = raw_s * scale
+        valid = None if mask is None else jnp.broadcast_to(mask, lt.shape)
+        # teacher: dense softmax (f32 reduction internally via jax.nn)
+        lt_m = lt if valid is None else jnp.where(valid, lt,
+                                                  jnp.asarray(NEG_INF, lt.dtype))
+        at = jax.nn.softmax(lt_m.astype(jnp.float32), axis=-1)
+        out_t = _ungroup(jnp.einsum("bhgqk,bhkd->bhgqd",
+                                    at.astype(ATTN_DTYPE),
+                                    vt.astype(ATTN_DTYPE)))
+        # student: top-N masked softmax (mask from raw logits, Eq. 6)
+        keep = topn.topn_mask(raw_s, n, valid=valid)
+        as_ = topn.sparse_softmax(raw_s, keep, scale=scale)
+        out_s = _ungroup(jnp.einsum("bhgqk,bhkd->bhgqd",
+                                    as_.astype(ATTN_DTYPE),
+                                    vs.astype(ATTN_DTYPE)))
+        # Eq. 9 KL on pre-top-N logits (both causally masked)
+        kl = losses.kl_divergence(lt, ls, mask=valid)  # [B,Hk,G,bq]
+        return out_t.astype(vt.dtype), out_s.astype(vs.dtype), jnp.sum(kl)
+
+    blk = jax.checkpoint(blk, policy=jax.checkpoint_policies.nothing_saveable)
+
+    qt_blocks = qt.reshape(b, h, nblk, bq, d).transpose(2, 0, 1, 3, 4)
+    qs_blocks = qs.reshape(b, h, nblk, bq, d).transpose(2, 0, 1, 3, 4)
+    offsets = jnp.arange(nblk, dtype=jnp.int32) * bq
+
+    out_t, out_s, kls = jax.lax.map(lambda args: blk((args[0], args[1]), args[2]),
+                                    (qt_blocks, qs_blocks, offsets))
+    # [nblk, B, H, bq, Dv] -> [B, H, Sq, Dv]
+    out_t = out_t.transpose(1, 2, 0, 3, 4).reshape(b, h, sq, vt.shape[-1])
+    out_s = out_s.transpose(1, 2, 0, 3, 4).reshape(b, h, sq, vs.shape[-1])
+    kl_sum = jnp.sum(kls)
+    rows = jnp.asarray(b * h * sq, dtype=jnp.float32)
+    return DistillAttnOut(out_t, out_s, kl_sum, rows)
+
+
+def had_infer_attention(q_bits: Array, k_bits: Array, v: Array, *, d: int,
+                        n: int, scale: float, causal: bool = True,
+                        q_offset: Array | int = 0,
+                        kv_valid: Array | None = None,
+                        q_block: int = 128, k_chunk: int = 1024) -> Array:
+    """Inference-path HAD attention from packed bits (pure-jnp reference).
+
+    q_bits: [B, H, Sq, W] uint32; k_bits: [B, Hk, Sk, W]; v: [B, Hk, Sk, Dv].
+    scale folds sigma_q * sigma_k / sqrt(d_k).
+
+    Mirrors the Pallas kernels' structure 1:1 (tests cross-check): a scan
+    over query blocks, each doing two passes over key chunks —
+      pass 1: integer scores -> cumulative level counts (comparison-based;
+              O(d) state, no [Sk, d] one-hot, no scatter) -> exact top-N
+              threshold;
+      pass 2: threshold-masked exp accumulation (exp(scale*(s-d)) <= 1, so
+              no running max is needed — a stability dividend of bounded
+              integer scores).
+    Memory: O(bq * Sk) int32 scores per block; everything partitions over
+    batch/heads AND over a sequence-sharded key axis (the per-level counts
+    and num/den are plain sums over Sk — SP-ready, DESIGN.md §5).
+    """
+    b, h, sq, w = q_bits.shape
+    hk = k_bits.shape[1]
+    sk = k_bits.shape[2]
+    dv = v.shape[-1]
+    bq = choose_block(sq, q_block)
+    bk = choose_block(sk, k_chunk)
+    nq, nk = sq // bq, sk // bk
+    levels = hamming.score_levels(d)                       # [d+1] ints
+    n_arr = jnp.asarray(n, jnp.int32)
+
+    k_chunks = k_bits.reshape(b, hk, nk, bk, w)
+    v_chunks = v.reshape(b, hk, nk, bk, dv)
+    kv_valid_chunks = (None if kv_valid is None
+                       else kv_valid.reshape(b, nk, bk))
+
+    def q_blk(args):
+        qb, offset = args                                  # [B,H,bq,W], scalar
+        qg = _group(qb, hk)                                # [B,Hk,G,bq,W]
+        qpos = offset + jnp.arange(bq)
+
+        def chunk_valid(ki):
+            kpos = ki * bk + jnp.arange(bk)
+            val = jnp.ones((b, 1, 1, bq, bk), bool)
+            if causal:
+                cm = kpos[None, :] <= qpos[:, None]
+                val = jnp.logical_and(val, cm[None, None, None])
+            if kv_valid_chunks is not None:
+                kvm = kv_valid_chunks[:, ki][:, None, None, None, :]
+                val = jnp.logical_and(val, kvm)
+            return val
+
+        def scores_for(ki):
+            kb = k_chunks[:, :, ki]                        # [B,Hk,bk,W]
+            return hamming.binary_scores(qg, kb[:, :, None], d)
+
+        # pass 1: cumulative counts cc[l] = #(score >= level_l)
+        def p1(cc, ki):
+            s = scores_for(ki)                             # [B,Hk,G,bq,bk]
+            val = chunk_valid(ki)
+            ge = jnp.logical_and(s[..., None] >= levels, val[..., None])
+            return cc + jnp.sum(ge.astype(jnp.int32), axis=-2), None
+
+        cc0 = jnp.zeros((b, hk, h // hk, bq, d + 1), jnp.int32)
+        cc, _ = jax.lax.scan(p1, cc0, jnp.arange(nk))
+        total = cc[..., 0:1]
+        n_eff = jnp.minimum(n_arr, total)
+        lv_idx = jax.lax.broadcasted_iota(jnp.int32, cc.shape, cc.ndim - 1)
+        idx = jnp.max(jnp.where(cc >= n_eff, lv_idx, -1), axis=-1)
+        thresh = 2 * jnp.maximum(idx, 0) - d               # [B,Hk,G,bq]
+
+        # pass 2: masked exp accumulation
+        def p2(carry, ki):
+            num, den = carry
+            s = scores_for(ki)
+            keep = jnp.logical_and(s >= thresh[..., None], chunk_valid(ki))
+            e = jnp.where(keep,
+                          jnp.exp(scale * (s - d).astype(jnp.float32)), 0.0)
+            vk = v_chunks[:, :, ki].astype(jnp.float32)    # [B,Hk,bk,Dv]
+            num = num + jnp.einsum("bhgqk,bhkd->bhgqd", e, vk)
+            den = den + jnp.sum(e, axis=-1, keepdims=True)
+            return (num, den), None
+
+        num0 = jnp.zeros((b, hk, h // hk, bq, dv), jnp.float32)
+        den0 = jnp.zeros((b, hk, h // hk, bq, 1), jnp.float32)
+        (num, den), _ = jax.lax.scan(p2, (num0, den0), jnp.arange(nk))
+        out = num / jnp.maximum(den, 1e-30)
+        return _ungroup(out)                               # [B,H,bq,Dv]
+
+    q_blocks = q_bits.reshape(b, h, nq, bq, w).transpose(2, 0, 1, 3, 4)
+    offsets = q_offset + jnp.arange(nq, dtype=jnp.int32) * bq
+    outs = jax.lax.map(q_blk, (q_blocks, offsets))         # [nq,B,H,bq,Dv]
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(b, h, sq, dv)
+    return out.astype(v.dtype)

@@ -1,0 +1,203 @@
+"""Binarization machinery for HAD (paper §3.4–3.8).
+
+Implements the three parameterizations of the Q/K transform used across the
+four distillation stages, the straight-through estimator, and the
+standardization-coefficient (sigma) estimation procedure.
+
+Stage semantics (c is the annealing scalar, sigma the per-layer std):
+  stage 1 (Eq. 13): x -> c*sigma * tanh(x / (c*sigma)),   c: 5.0 -> 1.0
+  stage 2 (Eq. 15): x ->   sigma * tanh(x / (c*sigma)),   c: 1.0 -> 0.05
+  stage 3 (Eq. 18): x ->   sigma * STE(x / sigma)         (sign fwd, clipped-identity bwd)
+  stage 4         : same transform as stage 3 (only the loss/lr change)
+  inference       : x ->   sigma * sign(x)  (packed to bits downstream)
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class Stage(enum.IntEnum):
+    """Distillation stage (Alg. 1)."""
+
+    STAGE1_TANH = 1
+    STAGE2_TIGHT_TANH = 2
+    STAGE3_STE = 3
+    STAGE4_REFINE = 4
+
+
+@jax.custom_vjp
+def ste_sign(x: Array) -> Array:
+    """sign(x) forward; clipped identity backward (Eq. 16-17).
+
+    sign(0) is mapped to +1 so the output is always in {-1, +1} (a 0 would
+    break the Hamming/bit-packing equivalence).
+    """
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def _ste_fwd(x: Array):
+    return ste_sign(x), x
+
+
+def _ste_bwd(x: Array, g: Array):
+    pass_through = (jnp.abs(x) <= 1.0).astype(g.dtype)
+    return (g * pass_through,)
+
+
+ste_sign.defvjp(_ste_fwd, _ste_bwd)
+
+
+def hard_sign(x: Array) -> Array:
+    """Non-differentiable sign in {-1, +1} (inference path)."""
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def binarize(x: Array, *, stage: Stage | int, c: Array | float, sigma: Array | float) -> Array:
+    """Apply the stage-appropriate Q/K transform.
+
+    Args:
+      x: continuous pre-binarization activations (Q_c or K_c).
+      stage: distillation stage.
+      c: annealing scalar (traced; allows c to be a step-dependent scalar
+         array so one compiled step serves a whole stage).
+      sigma: standardization coefficient for this projection (scalar or
+         broadcastable; paper uses a per-layer scalar).
+
+    Returns:
+      The transformed activations. In stages 3/4 the result is exactly
+      sigma * (+-1) with STE gradients.
+    """
+    stage = Stage(int(stage))
+    sigma = jnp.asarray(sigma, dtype=x.dtype)
+    c = jnp.asarray(c, dtype=x.dtype)
+    if stage == Stage.STAGE1_TANH:
+        cs = c * sigma
+        return cs * jnp.tanh(x / cs)
+    if stage == Stage.STAGE2_TIGHT_TANH:
+        return sigma * jnp.tanh(x / (c * sigma))
+    # Stages 3 & 4: STE binarization.
+    return sigma * ste_sign(x / sigma)
+
+
+def binarize_inference(x: Array, *, sigma: Array | float) -> Array:
+    """Inference-time transform: sigma * sign(x). No gradient defined."""
+    sigma = jnp.asarray(sigma, dtype=x.dtype)
+    return sigma * hard_sign(x)
+
+
+@dataclasses.dataclass(frozen=True)
+class CSchedule:
+    """Exponential c decay: c_t = c0 * decay**t, clamped at c_end.
+
+    The paper decays c by 0.9998 per minibatch; stage boundaries are where
+    c crosses 1.0 (stage 1 -> 2) and 0.05 (stage 2 -> 3).
+    """
+
+    c0: float = 5.0
+    decay: float = 0.9998
+    stage2_c: float = 1.0
+    stage3_c: float = 0.05
+    stage3_steps: int = 10_000
+    stage4_steps: int = 10_000
+
+    def steps_to(self, c_target: float, c_from: float | None = None) -> int:
+        import math
+
+        c_from = self.c0 if c_from is None else c_from
+        return max(0, math.ceil(math.log(c_target / c_from) / math.log(self.decay)))
+
+    @property
+    def stage1_end(self) -> int:
+        return self.steps_to(self.stage2_c)
+
+    @property
+    def stage2_end(self) -> int:
+        return self.steps_to(self.stage3_c)
+
+    @property
+    def stage3_end(self) -> int:
+        return self.stage2_end + self.stage3_steps
+
+    @property
+    def stage4_end(self) -> int:
+        return self.stage3_end + self.stage4_steps
+
+    def stage_at(self, step: int) -> Stage:
+        if step < self.stage1_end:
+            return Stage.STAGE1_TANH
+        if step < self.stage2_end:
+            return Stage.STAGE2_TIGHT_TANH
+        if step < self.stage3_end:
+            return Stage.STAGE3_STE
+        return Stage.STAGE4_REFINE
+
+    def c_at(self, step: Array | int) -> Array:
+        """c value as a traced function of step (valid in stages 1-2;
+        clamped to stage3_c afterwards)."""
+        step = jnp.asarray(step, dtype=jnp.float32)
+        c = self.c0 * jnp.power(jnp.float32(self.decay), step)
+        return jnp.clip(c, self.stage3_c, self.c0)
+
+    def stage_at_traced(self, step: Array | int) -> Array:
+        """Integer stage id as a traced function of step."""
+        step = jnp.asarray(step, dtype=jnp.int32)
+        s = jnp.where(step < self.stage1_end, 1, 2)
+        s = jnp.where(step >= self.stage2_end, 3, s)
+        s = jnp.where(step >= self.stage3_end, 4, s)
+        return s
+
+
+def binarize_scheduled(x: Array, *, step: Array, sched: CSchedule, sigma: Array | float) -> Array:
+    """Stage-dispatching transform usable inside one jitted train step.
+
+    Uses lax.switch over the traced stage id so a single compiled step
+    covers all four stages (stage boundaries do not trigger recompiles).
+    """
+    c = sched.c_at(step)
+    stage = sched.stage_at_traced(step)
+    sigma_arr = jnp.asarray(sigma, dtype=x.dtype)
+
+    def s1(x):
+        return binarize(x, stage=Stage.STAGE1_TANH, c=c, sigma=sigma_arr)
+
+    def s2(x):
+        return binarize(x, stage=Stage.STAGE2_TIGHT_TANH, c=c, sigma=sigma_arr)
+
+    def s34(x):
+        return binarize(x, stage=Stage.STAGE3_STE, c=c, sigma=sigma_arr)
+
+    return jax.lax.switch(jnp.clip(stage - 1, 0, 2), [s1, s2, s34], x)
+
+
+def estimate_sigma(samples: list[Array]) -> Array:
+    """Standardization coefficient per paper Eq. 12.
+
+    `samples` is a list of per-minibatch activation matrices (Q_c or K_c of
+    one layer). The std is taken over *all elements* of each minibatch and
+    averaged across minibatches.
+    """
+    stds = [jnp.std(s.astype(jnp.float32)) for s in samples]
+    return jnp.mean(jnp.stack(stds))
+
+
+def estimate_sigmas_from_capture(captures: list[dict[str, Array]]) -> dict[str, Array]:
+    """Aggregate per-layer sigma estimates from captured forward passes.
+
+    Args:
+      captures: one dict per minibatch mapping capture key (e.g.
+        "layer3/q") to the continuous Q_c/K_c activations.
+
+    Returns:
+      dict mapping capture key -> scalar sigma (float32).
+    """
+    if not captures:
+        raise ValueError("need at least one captured minibatch")
+    keys = captures[0].keys()
+    return {k: estimate_sigma([cap[k] for cap in captures]) for k in keys}

@@ -1,0 +1,60 @@
+"""Distillation stage controller (paper Alg. 1 + §3.9 training details)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.binarize import CSchedule, Stage
+
+
+@dataclasses.dataclass(frozen=True)
+class DistillConfig:
+    """Hyperparameters of the 4-stage recipe (paper defaults)."""
+
+    schedule: CSchedule = CSchedule()
+    lr_stages_123: float = 1e-5
+    lr_stage_4: float = 1e-6
+    grad_clip: float = 0.5
+    batch_size: int = 16
+    sigma_batches: int = 100       # Eq. 12: 100 minibatches of 16
+    sigma_batch_size: int = 16
+    topn: int = 30                 # N at the training context length
+    attention_loss: bool = True    # False = "w/o AD" ablation (table 1)
+
+    @property
+    def total_steps(self) -> int:
+        return self.schedule.stage4_end
+
+    def lr_at(self, step):
+        """Learning rate as a traced function of step (stage 4 drops lr)."""
+        s4 = self.schedule.stage3_end
+        return jnp.where(jnp.asarray(step) < s4, self.lr_stages_123, self.lr_stage_4)
+
+    def use_attention_loss_at(self, step):
+        """Eq. 11 vs Eq. 19: attention KL active through stage 3 only."""
+        if not self.attention_loss:
+            return jnp.asarray(False)
+        return jnp.asarray(step) < self.schedule.stage3_end
+
+    def stage_at(self, step: int) -> Stage:
+        return self.schedule.stage_at(step)
+
+
+def tiny_schedule(steps_per_stage: int = 25) -> CSchedule:
+    """A compressed schedule for tests/benchmarks: same 4-stage structure,
+    few steps. Decay chosen so c crosses the paper's stage boundaries."""
+    import math
+
+    # decay^steps_per_stage == 1/5  (stage 1: 5 -> 1)
+    d1 = math.exp(math.log(1 / 5) / steps_per_stage)
+    return CSchedule(c0=5.0, decay=d1, stage2_c=1.0, stage3_c=0.05,
+                     stage3_steps=steps_per_stage, stage4_steps=steps_per_stage)
+
+
+def no_tanh_schedule(total_steps: int) -> CSchedule:
+    """"w/o Tanh" ablation: stages 1-2 removed, replaced by an equivalent
+    number of STE steps (paper tables 1-2)."""
+    half = max(total_steps // 2, 1)
+    return CSchedule(c0=1.0, decay=0.5, stage2_c=1.0, stage3_c=1.0,
+                     stage3_steps=half, stage4_steps=total_steps - half)

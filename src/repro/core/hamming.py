@@ -1,0 +1,90 @@
+"""Bit packing and Hamming-distance score computation (pure JAX).
+
+The identity underlying HAD's efficiency claim: for q, k in {-1, +1}^d with
+bit encodings b(q), b(k) (bit 1 <=> +1),
+
+    dot(q, k) = d - 2 * popcount(b(q) XOR b(k))
+
+so the O(n^2 d) float QK^T becomes an O(n^2 d/32) XOR+popcount over packed
+uint32 words. These are the reference/pure-jnp implementations; the Pallas
+kernels in repro.kernels implement the same math with explicit VMEM tiling.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+WORD_BITS = 32
+
+
+def packed_words(d: int) -> int:
+    """Number of uint32 words needed for d bits."""
+    return (d + WORD_BITS - 1) // WORD_BITS
+
+
+def pack_bits(x: Array) -> Array:
+    """Pack the sign pattern of x along the last axis into uint32 words.
+
+    x: [..., d] real-valued (only the sign matters; >= 0 maps to bit 1).
+    Returns: [..., ceil(d/32)] uint32. If d % 32 != 0 the tail bits are 0,
+    which downstream score code corrects for via the true `d`.
+    """
+    d = x.shape[-1]
+    w = packed_words(d)
+    pad = w * WORD_BITS - d
+    bits = (x >= 0).astype(jnp.uint32)
+    if pad:
+        bits = jnp.pad(bits, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    bits = bits.reshape(*x.shape[:-1], w, WORD_BITS)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    return jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(packed: Array, d: int) -> Array:
+    """Inverse of pack_bits: [..., w] uint32 -> [..., d] in {-1., +1.}."""
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    bits = (packed[..., None] >> shifts) & jnp.uint32(1)
+    flat = bits.reshape(*packed.shape[:-1], packed.shape[-1] * WORD_BITS)
+    pm1 = jnp.where(flat[..., :d] == 1, 1.0, -1.0)
+    return pm1.astype(jnp.float32)
+
+
+def hamming_distance(a_bits: Array, b_bits: Array) -> Array:
+    """Elementwise Hamming distance between packed bit rows.
+
+    a_bits: [..., w], b_bits: [..., w] (broadcastable) -> [...] int32.
+    """
+    x = jnp.bitwise_xor(a_bits, b_bits)
+    return jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)
+
+
+def binary_scores(q_bits: Array, k_bits: Array, d: int) -> Array:
+    """Integer dot products of +-1 vectors from packed bits.
+
+    q_bits: [..., m, w]; k_bits: [..., n, w] -> scores [..., m, n] int32
+    where scores[i, j] = dot(q_i, k_j) = d - 2*ham(q_i, k_j).
+
+    Note on padded tail bits (d % 32 != 0): pack_bits zero-pads both inputs
+    identically, so pad positions contribute 0 to XOR and the identity holds
+    with the true d.
+    """
+    x = jnp.bitwise_xor(q_bits[..., :, None, :], k_bits[..., None, :, :])
+    ham = jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)
+    return d - 2 * ham
+
+
+def binary_scores_dense(q_pm1: Array, k_pm1: Array) -> Array:
+    """Oracle: integer scores from unpacked +-1 matrices via real matmul."""
+    return jnp.einsum("...md,...nd->...mn", q_pm1, k_pm1).astype(jnp.int32)
+
+
+def score_levels(d: int) -> Array:
+    """All possible binary-score values for dimension d: -d, -d+2, ..., d.
+
+    Binary dot products over {-1,+1}^d take exactly d+1 integer values with
+    step 2 and parity equal to d's parity. This small, static codomain is
+    what makes histogram-based top-N exact (see repro.core.topn).
+    """
+    return jnp.arange(-d, d + 1, 2, dtype=jnp.int32)

@@ -1,0 +1,112 @@
+"""Distillation losses (paper Eq. 9-11) and standard objectives.
+
+The paper's Eq. 9/10 are read as KL divergences between softmax
+distributions (see DESIGN.md §2): for a teacher logit row t and student
+logit row s,
+
+    KL(row) = sum_j p_t(j) * (log p_t(j) - log p_s(j)),   p = softmax.
+
+The attention KL is the unweighted mean over all rows of all attention maps
+(1/(M n) in Eq. 9; the inner sum over j is the KL of one row).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _masked_log_softmax(logits: Array, mask: Array | None) -> Array:
+    if mask is not None:
+        logits = jnp.where(mask, logits, NEG_INF)
+    return jax.nn.log_softmax(logits, axis=-1)
+
+
+def kl_divergence(teacher_logits: Array, student_logits: Array, *,
+                  mask: Array | None = None) -> Array:
+    """Row-wise KL(softmax(teacher) || softmax(student)) over the last axis.
+
+    mask: optional bool mask of valid entries (e.g. causal / padding);
+    masked entries get zero probability on both sides.
+    Returns [...]-shaped per-row KL.
+    """
+    lp_t = _masked_log_softmax(teacher_logits.astype(jnp.float32), mask)
+    lp_s = _masked_log_softmax(student_logits.astype(jnp.float32), mask)
+    p_t = jnp.exp(lp_t)
+    per = p_t * (lp_t - lp_s)
+    if mask is not None:
+        per = jnp.where(mask, per, 0.0)
+    return jnp.sum(per, axis=-1)
+
+
+def attention_kl(teacher_logits: Array, student_logits: Array, *,
+                 mask: Array | None = None,
+                 row_valid: Array | None = None) -> Array:
+    """Eq. 9: mean over all rows/heads/maps of the per-row attention KL.
+
+    teacher_logits/student_logits: [..., q, k] pre-softmax logit rows
+    (pre-top-N for the student; both already scaled by 1/sqrt(d_k)).
+    mask: key-validity (causal/pad) mask broadcastable to the logits.
+    row_valid: optional bool [..., q] marking rows that exist (padding
+    queries excluded from the mean).
+    """
+    per_row = kl_divergence(teacher_logits, student_logits, mask=mask)
+    if row_valid is not None:
+        per_row = jnp.where(row_valid, per_row, 0.0)
+        denom = jnp.maximum(jnp.sum(row_valid.astype(jnp.float32)), 1.0)
+        return jnp.sum(per_row) / denom
+    return jnp.mean(per_row)
+
+
+def output_kl(teacher_logits: Array, student_logits: Array, *,
+              valid: Array | None = None,
+              valid_size: int | None = None) -> Array:
+    """Eq. 10: KL on model output logits, mean over batch (and positions).
+
+    valid: optional bool mask over leading dims (e.g. non-pad token
+    positions for LM heads). valid_size: true vocab size when the logits'
+    last axis is padded for sharding (pad columns excluded from both
+    softmaxes).
+    """
+    mask = None
+    if valid_size is not None and valid_size != teacher_logits.shape[-1]:
+        mask = (jnp.arange(teacher_logits.shape[-1]) < valid_size)
+        mask = jnp.broadcast_to(mask, teacher_logits.shape)
+    per = kl_divergence(teacher_logits, student_logits, mask=mask)
+    if valid is not None:
+        per = jnp.where(valid, per, 0.0)
+        return jnp.sum(per) / jnp.maximum(jnp.sum(valid.astype(jnp.float32)), 1.0)
+    return jnp.mean(per)
+
+
+def softmax_cross_entropy(logits: Array, labels: Array, *,
+                          valid: Array | None = None,
+                          valid_size: int | None = None) -> Array:
+    """Token-level CE for the pretrain path. labels: int [...].
+
+    valid_size: true vocab size when the last axis is padded for sharding.
+    """
+    logits = logits.astype(jnp.float32)
+    if valid_size is not None and valid_size != logits.shape[-1]:
+        vmask = jnp.arange(logits.shape[-1]) < valid_size
+        logits = jnp.where(vmask, logits, NEG_INF)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    nll = -ll
+    if valid is not None:
+        nll = jnp.where(valid, nll, 0.0)
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(valid.astype(jnp.float32)), 1.0)
+    return jnp.mean(nll)
+
+
+def combined_distill_loss(att_kl: Array, out_kl: Array, *, use_attention_loss: Array | bool) -> Array:
+    """Eq. 11 (stages 1-3) / Eq. 19 (stage 4: attention term dropped).
+
+    use_attention_loss may be a traced bool so one compiled step covers the
+    stage-4 transition.
+    """
+    w = jnp.asarray(use_attention_loss, dtype=jnp.float32)
+    return w * att_kl + out_kl

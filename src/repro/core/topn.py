@@ -1,0 +1,191 @@
+"""Top-N attention sparsification (paper §3.2, Eq. 6-7).
+
+Two implementations:
+
+* `topn_threshold_exact` — continuous logits (training stages): the N-th
+  largest value per row via jax.lax.top_k; the mask keeps scores >= that
+  value (ties at the threshold are kept, matching the histogram path's tie
+  semantics so train and inference agree).
+
+* histogram path — integer binary logits (inference): scores live on the
+  d+1 lattice {-d, -d+2, ..., d}, so an O(d)-bin histogram + reverse
+  cumulative count yields the exact top-N threshold with no sort. The
+  histogram is a *sum over the key axis*, so it distributes across
+  sequence-sharded KV caches with a (d+1)-word all-reduce — this is the
+  TPU/distributed adaptation of the paper's CAM priority encoder.
+
+Tie semantics: every element with score >= threshold is kept, so the kept
+count is >= min(N, row_len). EXPERIMENTS.md quantifies the inflation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+# Threshold algorithm for continuous (training-time) scores:
+#   "sort"   — exact N-th value via jnp.sort (paper-faithful baseline).
+#   "bisect" — fixed-iteration bisection on the threshold: each step is a
+#     masked count (compare+sum), which XLA fuses and partitions freely; no
+#     O(k log k) sort, no sort-merge HBM traffic. Keeps >= n elements by
+#     invariant (count(x >= lo) >= n at every step). §Perf hillclimb A.
+THRESHOLD_METHOD = "sort"
+
+
+def set_threshold_method(method: str) -> str:
+    global THRESHOLD_METHOD
+    assert method in ("sort", "bisect"), method
+    prev = THRESHOLD_METHOD
+    THRESHOLD_METHOD = method
+    return prev
+
+
+def _bisect_threshold(scores: Array, n_eff: int, *,
+                      valid: Array | None = None, iters: int = 26) -> Array:
+    """Bisect on [min_valid, max_valid] so masked NEG_INF entries never
+    enter the search range (they'd destroy the 2^-iters convergence)."""
+    if valid is not None:
+        lo = jnp.min(jnp.where(valid, scores, jnp.inf), axis=-1)
+        hi = jnp.max(jnp.where(valid, scores, -jnp.inf), axis=-1)
+    else:
+        lo = jnp.min(scores, axis=-1)
+        hi = jnp.max(scores, axis=-1)
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        cnt = jnp.sum((scores >= mid[..., None]).astype(jnp.int32), axis=-1)
+        ge = cnt >= n_eff
+        lo = jnp.where(ge, mid, lo)
+        hi = jnp.where(ge, hi, mid)
+    return lo
+
+
+def topn_threshold_exact(scores: Array, n: int, *, valid: Array | None = None,
+                         method: str | None = None) -> Array:
+    """Per-row threshold = N-th largest valid score.
+
+    scores: [..., m, k] float; valid: broadcastable bool mask of usable keys.
+    Returns thresholds [..., m] such that (scores >= t) keeps >= min(n, row)
+    elements. Rows with fewer than n valid keys get threshold -inf.
+    """
+    if valid is not None:
+        scores = jnp.where(valid, scores, NEG_INF)
+    k = scores.shape[-1]
+    n_eff = min(n, k)
+    # stop_gradient: the top-N selection is a hard decision (gradients flow
+    # through the kept logits, not the threshold); also keeps autodiff off
+    # sort's JVP.
+    scores = jax.lax.stop_gradient(scores)
+    method = THRESHOLD_METHOD if method is None else method
+    if method == "bisect":
+        return _bisect_threshold(scores, n_eff, valid=valid)
+    # jnp.sort (ascending, take k-n) rather than lax.top_k: identical value,
+    # but XLA partitions sort along the (sharded) batch dims while TopK
+    # all-gathers them — observed 18 GB/device regression in the dry-run.
+    thresh = jnp.sort(scores, axis=-1)[..., k - n_eff]
+    # If fewer than n valid entries exist the n-th value is NEG_INF; keep all.
+    return thresh
+
+
+def topn_mask(scores: Array, n: int, *, valid: Array | None = None) -> Array:
+    """Boolean mask keeping (at least) the top-n valid scores per row."""
+    t = topn_threshold_exact(scores, n, valid=valid)
+    mask = scores >= t[..., None]
+    if valid is not None:
+        mask = jnp.logical_and(mask, valid)
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# Histogram (integer-score) path.
+# ---------------------------------------------------------------------------
+
+def score_to_level(scores: Array, d: int) -> Array:
+    """Map integer binary scores in {-d, -d+2, ..., d} to bin index 0..d."""
+    return (scores + d) // 2
+
+
+def level_to_score(level: Array, d: int) -> Array:
+    return 2 * level - d
+
+
+def score_histogram(scores: Array, d: int, *, valid: Array | None = None) -> Array:
+    """Histogram over the d+1 score levels, summed over the last (key) axis.
+
+    scores: [..., k] int32 in the binary-score lattice.
+    Returns [..., d+1] int32 counts (ascending level order).
+
+    Implemented as a batched scatter-add — a one_hot/[..., k, d+1] formulation
+    materializes T*(d+1) elements (1.9 TB at 500k context) where scatter
+    stays O(T + d).
+    """
+    levels = score_to_level(scores, d)
+    k = scores.shape[-1]
+    flat = levels.reshape(-1, k)
+    weights = (jnp.ones_like(flat) if valid is None
+               else valid.reshape(-1, k).astype(jnp.int32))
+    rows = jnp.arange(flat.shape[0])[:, None]
+    hist = jnp.zeros((flat.shape[0], d + 1), jnp.int32)
+    hist = hist.at[rows, flat].add(weights, mode="drop")
+    return hist.reshape(*scores.shape[:-1], d + 1)
+
+
+def threshold_from_histogram(hist: Array, n: int | Array, d: int) -> Array:
+    """Exact top-N threshold score from a level histogram.
+
+    hist: [..., d+1] counts. Returns the largest score t such that
+    count(score >= t) >= min(n, total); keeping scores >= t keeps at least
+    min(n, total) elements (ties included).
+    """
+    # reverse cumulative count: cc[l] = # scores with level >= l
+    cc = jnp.cumsum(hist[..., ::-1], axis=-1)[..., ::-1]
+    total = cc[..., 0]
+    n_eff = jnp.minimum(jnp.asarray(n, dtype=cc.dtype), total)
+    levels = jnp.arange(d + 1, dtype=jnp.int32)
+    # highest level index with cc >= n_eff  (cc is non-increasing in level)
+    ok = cc >= n_eff[..., None]
+    idx = jnp.max(jnp.where(ok, levels, -1), axis=-1)
+    idx = jnp.maximum(idx, 0)  # n_eff == 0 (empty row): keep-all threshold
+    return level_to_score(idx, d)
+
+
+def topn_mask_binary(scores: Array, n: int | Array, d: int, *, valid: Array | None = None) -> Array:
+    """Top-N mask for integer binary scores via the histogram threshold."""
+    hist = score_histogram(scores, d, valid=valid)
+    t = threshold_from_histogram(hist, n, d)
+    mask = scores >= t[..., None]
+    if valid is not None:
+        mask = jnp.logical_and(mask, valid)
+    return mask
+
+
+def sparse_softmax(logits: Array, mask: Array, *, scale: Array | float = 1.0) -> Array:
+    """softmax(scale * logits) restricted to mask (Eq. 7).
+
+    Rows with an empty mask return all zeros (consumers must guarantee at
+    least one valid key; decode always has the current token).
+    """
+    logits = logits.astype(jnp.float32)   # reduce in f32 (bf16-safe)
+    neg = jnp.asarray(NEG_INF, dtype=logits.dtype)
+    masked = jnp.where(mask, logits * scale, neg)
+    m = jnp.max(masked, axis=-1, keepdims=True)
+    # guard all-masked rows
+    m = jnp.where(m <= neg / 2, jnp.zeros_like(m), m)
+    e = jnp.where(mask, jnp.exp(masked - m), 0.0)
+    z = jnp.sum(e, axis=-1, keepdims=True)
+    return e / jnp.maximum(z, 1e-30)
+
+
+def scale_n_with_context(context_len: int, *, frac: float = 0.117, n_min: int = 16,
+                         n_max: int = 4096) -> int:
+    """Paper §4.3: N scales linearly with context length.
+
+    The paper uses N=30 @ 256 (11.7%) and 15@128 ... 120@1024 (constant
+    fraction). We default to that fraction, clamped: Fig. 4's concentration
+    argument says the needed fraction *falls* with context, so n_max caps
+    the linear rule for very long contexts (DESIGN.md §7).
+    """
+    return int(max(n_min, min(n_max, round(frac * context_len))))

@@ -1,0 +1,5 @@
+"""Synthetic data + sharded input pipeline."""
+from repro.data import pipeline, synthetic
+from repro.data.pipeline import accuracy, shard_batches, take
+from repro.data.synthetic import (TaskBatch, classification_task, lm_stream,
+                                  patch_task, retrieval_qa_task)

@@ -1,0 +1,8 @@
+"""Distribution: sharding rules, gradient compression, collective helpers."""
+from repro.distributed import compression, sharding
+from repro.distributed.compression import (CompressionConfig, compress_grads,
+                                           init_error, psum_compressed)
+from repro.distributed.sharding import (batch_axes, batch_spec,
+                                        cache_shardings, fsdp_axes,
+                                        param_pspecs, param_shardings,
+                                        replicated)

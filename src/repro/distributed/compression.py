@@ -1,0 +1,99 @@
+"""Gradient compression for cross-pod reduction (1-bit + int8, with EF).
+
+The paper binarizes attention activations; the same idea applied to the
+optimizer's communication is 1-bit sign compression with error feedback
+(signSGD-EF, Seide et al. / Karimireddy et al.): transmit sign(g + e) and a
+per-tensor scale, accumulate the quantization residual e locally. Cross-pod
+gradient all-reduce bytes drop 16x (bf16) / 32x (f32).
+
+Under single-controller jit the per-worker gradients aren't visible, so the
+codec is exposed two ways:
+  * `compress`/`decompress` (+ EF state) — pure functions, wrapped around
+    the gradient inside the train step to model the lossy channel (and
+    usable as-is inside a shard_map psum on real multi-pod meshes);
+  * `psum_compressed` — the shard_map building block: quantize locally,
+    psum the int8/sign payload, dequantize.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    method: str = "none"       # "none" | "onebit" | "int8"
+    ef: bool = True            # error feedback
+
+
+def init_error(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _onebit_one(g: Array, e: Array) -> tuple[Array, Array]:
+    x = g.astype(jnp.float32) + e
+    scale = jnp.mean(jnp.abs(x))
+    q = jnp.where(x >= 0, scale, -scale)
+    return q.astype(g.dtype), x - q
+
+
+def _int8_one(g: Array, e: Array) -> tuple[Array, Array]:
+    x = g.astype(jnp.float32) + e
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127) * scale
+    return q.astype(g.dtype), x - q
+
+
+def compress_grads(grads: Any, error: Any, cfg: CompressionConfig
+                   ) -> tuple[Any, Any]:
+    """Quantize-dequantize each gradient leaf with error feedback.
+
+    Returns (decompressed grads as seen after the lossy reduce, new error).
+    method="none" is the identity.
+    """
+    if cfg.method == "none":
+        return grads, error
+    fn = {"onebit": _onebit_one, "int8": _int8_one}[cfg.method]
+
+    def one(g, e):
+        q, resid = fn(g, e if cfg.ef else jnp.zeros_like(e))
+        return q, resid if cfg.ef else e
+
+    pairs = jax.tree.map(one, grads, error)
+    qs = jax.tree.map(lambda t: t[0], pairs,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    es = jax.tree.map(lambda t: t[1], pairs,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    return qs, es
+
+
+def psum_compressed(tree: Any, axis_name: str, cfg: CompressionConfig) -> Any:
+    """shard_map building block: compress -> psum -> average.
+
+    1-bit payload: sign as int8 + one f32 scale per leaf per worker
+    (the scale psum is negligible). Use inside shard_map over the pod axis.
+    """
+    if cfg.method == "none":
+        return jax.lax.pmean(tree, axis_name)
+
+    def one(g):
+        x = g.astype(jnp.float32)
+        if cfg.method == "onebit":
+            scale = jnp.mean(jnp.abs(x))
+            payload = jnp.where(x >= 0, jnp.int8(1), jnp.int8(-1))
+            summed = jax.lax.psum(payload.astype(jnp.int32), axis_name)
+            scale_sum = jax.lax.psum(scale, axis_name)
+            n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+            return (summed.astype(jnp.float32) * (scale_sum / n) / n).astype(g.dtype)
+        scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+        payload = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+        summed = jax.lax.psum((payload.astype(jnp.float32)) * scale, axis_name)
+        n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+        return (summed / n).astype(g.dtype)
+
+    return jax.tree.map(one, tree)

@@ -1,0 +1,101 @@
+"""Activation sharding constraints (MaxText-style logical annotations).
+
+GSPMD propagation can drop the batch sharding through scan/checkpoint/
+reshape chains (observed: per-device HLO holding global-batch [256, ...]
+tensors — 194 GB/device). Pinning activations at layer boundaries with
+with_sharding_constraint keeps propagation anchored.
+
+Models call `constrain(x, "b..")`-style annotations; outside a mesh context
+these are no-ops, so pure-CPU tests/benches are unaffected. The dry-run and
+launchers activate them with `activation_mesh(mesh)`.
+
+Pattern chars (one per tensor dim):
+  b  batch axes ("pod","data")     m  model/TP axis
+  e  expert axis -> model (EP)     s  sequence -> batch axes (SP, decode)
+  q  sequence -> model axis (Megatron-style sequence parallelism for
+     inter-layer activations: norms/FFN row work stays seq-local, GSPMD
+     inserts AG/RS around attention; cuts the scan-carry stack by 16x)
+  .  replicated
+A dim is only constrained when its size divides the axis size (GQA head
+counts like 9 or 15 don't divide 16 — those dims stay unconstrained).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def _current() -> Mesh | None:
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh: Mesh):
+    prev = _current()
+    _STATE.mesh = mesh
+    try:
+        yield
+    finally:
+        _STATE.mesh = prev
+
+
+def _axes_for(ch: str, mesh: Mesh):
+    if ch == "b":
+        return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if ch == "s":
+        return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if ch in ("m", "e", "q"):
+        return "model"
+    return None
+
+
+def constrain(x, pattern: str):
+    """Apply a sharding constraint to x per the pattern (no-op w/o mesh)."""
+    mesh = _current()
+    if mesh is None:
+        return x
+    assert len(pattern) == x.ndim, (pattern, x.shape)
+    spec = []
+    used = set()
+    for dim, ch in zip(x.shape, pattern):
+        axes = _axes_for(ch, mesh)
+        if axes is None:
+            spec.append(None)
+            continue
+        key = axes if isinstance(axes, str) else tuple(axes)
+        import numpy as np
+        size = int(np.prod([mesh.shape[a] for a in
+                            ((axes,) if isinstance(axes, str) else axes)]))
+        if key in used or size == 0 or dim % max(size, 1) != 0:
+            spec.append(None)
+            continue
+        used.add(key)
+        spec.append(axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def constrain_params_tree(tree):
+    """Re-pin parameter shardings on scan-body slices (no-op w/o mesh).
+
+    GSPMD can lose weight shardings through nested checkpoint/scan bodies
+    ("involuntary full rematerialization" -> fully replicated f32 weights,
+    observed +60 GB/device on jamba). param_spec right-aligns its rules, so
+    it applies to group-sliced leaves (no leading stack dim) directly.
+    """
+    mesh = _current()
+    if mesh is None:
+        return tree
+    from jax.sharding import NamedSharding
+    from repro.distributed.sharding import param_spec
+
+    def one(path, leaf):
+        spec = param_spec(path, leaf, mesh)
+        return jax.lax.with_sharding_constraint(
+            leaf, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map_with_path(one, tree)

@@ -1,0 +1,201 @@
+"""Sharding rules: FSDP x TP x EP x SP over the production mesh.
+
+Mesh axes: ("data", "model") single-pod 16x16; ("pod", "data", "model")
+multi-pod 2x16x16. Policy (DESIGN.md §5):
+
+* TP over "model": attention head projections, FFN hidden dim, vocab dim,
+  MoE expert axis (EP).
+* FSDP over ("pod","data"): the remaining large axis of every weight is
+  sharded ZeRO-3 style (jit inserts the gathers). Required to fit the
+  398B/1T archs: 1T bf16 = 2 TB -> ~3.9 GB/chip over 512 chips.
+* Batch over ("pod","data"); for decode cells with global_batch < data axis
+  (long_500k has batch 1) KV-cache *sequence* is sharded instead (SP) —
+  made exact for top-N by the histogram all-reduce (core/topn.py).
+
+Rules are name-based on the param path with divisibility-checked fallback:
+a dim is sharded over an axis only when divisible, otherwise the rule falls
+back to the next candidate or replication (GSPMD could pad, but exact
+divisibility keeps memory analysis honest).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Array = jax.Array
+
+
+def fsdp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return fsdp_axes(mesh)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    return axes is not None and dim % max(axis_size(mesh, axes), 1) == 0
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for p in path:
+        out.append(str(getattr(p, "key", getattr(p, "name", p))))
+    return out
+
+
+def param_spec(path, leaf, mesh: Mesh, *, fsdp_enabled: bool = True) -> P:
+    """PartitionSpec for one parameter leaf (see module docstring).
+
+    Rules are written against the *logical trailing dims* of each weight:
+    block parameters carry a leading stacked n_groups axis (scanned layers),
+    which stays unsharded — `pick` right-aligns the candidates.
+
+    fsdp_enabled=False keeps TP but replicates across the data axes —
+    the right call when (params + optimizer state)/TP fits per-device HBM:
+    it removes every FSDP all-gather from the step (§Perf hillclimb B).
+    """
+    names = _path_names(path)
+    name = names[-1]
+    shape = leaf.shape
+    fsdp = fsdp_axes(mesh) if fsdp_enabled else ()
+    tp = "model"
+
+    def pick(*cands):
+        """cands: ordered axis candidates per logical TRAILING dim."""
+        lead = max(len(shape) - len(cands), 0)
+        spec: list = [None] * lead
+        used: set = set()
+        for dim, options in zip(shape[lead:], cands):
+            chosen = None
+            for ax in options:
+                if ax is None or ax == ():
+                    continue
+                key = ax if isinstance(ax, str) else tuple(ax)
+                if key in used:
+                    continue
+                if _fits(dim, mesh, ax):
+                    chosen = ax
+                    used.add(key)
+                    break
+            spec.append(chosen)
+        return P(*spec)
+
+    if leaf.ndim == 0 or "sigma" in name or name in ("A_log", "D", "dt_bias",
+                                                     "w", "count"):
+        return P()
+    if name == "embed":                      # [V, D]
+        return pick((tp,), (fsdp,))
+    if name == "pos_embed":                  # [T, D]
+        return pick((fsdp,), (tp,))
+    if name == "lm_head":                    # [D, V]
+        return pick((fsdp,), (tp,))
+    if name == "frontend_proj":              # [FD, D]
+        return pick((None,), (tp,))
+    if name in ("w1", "w3") and leaf.ndim >= 4:   # MoE [G, E, D, F]
+        return pick((tp,), (fsdp,), (None,))
+    if name == "w2" and leaf.ndim >= 4:           # MoE [G, E, F, D]
+        return pick((tp,), (None,), (fsdp,))
+    if name in ("wq", "w1", "w3", "w_in"):   # [.., D, out(tp)]
+        return pick((fsdp,), (tp,))
+    if name in ("wk", "wv"):                 # [.., D, Hk*Dh]
+        return pick((fsdp,), (tp,))
+    if name in ("wo", "w2", "w_out"):        # [.., in(tp), D]
+        return pick((tp,), (fsdp,))
+    if name == "router":                     # [.., D, E]
+        return pick((fsdp,), (None,))
+    if name == "conv_w":                     # [.., K, Di]
+        return pick((None,), (tp,))
+    return P()
+
+
+def param_shardings(params: Any, mesh: Mesh, *,
+                    fsdp_enabled: bool = True) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, param_spec(path, leaf, mesh, fsdp_enabled=fsdp_enabled)),
+        params)
+
+
+def param_pspecs(params: Any, mesh: Mesh, *, fsdp_enabled: bool = True) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(path, leaf, mesh,
+                                      fsdp_enabled=fsdp_enabled), params)
+
+
+# ---------------------------------------------------------------------------
+# activations / batches / caches
+# ---------------------------------------------------------------------------
+
+def batch_spec(batch_like: Any, mesh: Mesh, *, global_batch: int) -> Any:
+    """Input batch sharding: batch dim over (pod, data) when divisible,
+    else replicated (tiny decode batches)."""
+    ba = batch_axes(mesh)
+    ok = global_batch % max(axis_size(mesh, ba), 1) == 0
+
+    def one(leaf):
+        spec = [None] * leaf.ndim
+        if ok and leaf.ndim >= 1:
+            spec[0] = ba
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, batch_like)
+
+
+def cache_spec(path, leaf, mesh: Mesh, *, global_batch: int) -> P:
+    """KV-cache/SSM-state sharding for serving.
+
+    Batch >= data axis: batch over (pod, data); sequence over model when
+    divisible (decode_32k). Batch too small (long_500k, B=1): SP — sequence
+    over (pod, data, model) flattened as ("pod","data") x "model" split
+    across the two sequence-bearing dims... sequence gets the full device
+    set via a single flattened tuple when divisible.
+    """
+    names = _path_names(path)
+    name = names[-1]
+    ba = batch_axes(mesh)
+    all_axes = ba + ("model",)
+    batch_fits = global_batch % max(axis_size(mesh, ba), 1) == 0
+
+    # sequence-axis index per cache leaf
+    seq_axis = {"k_bits": 3, "v": 2, "k": 2}.get(name)
+    # leading n_groups dim shifts everything by 1
+    if seq_axis is not None:
+        seq_axis += 1
+        bdim = 1
+        spec: list = [None] * leaf.ndim
+        if batch_fits:
+            spec[bdim] = ba
+            if leaf.shape[seq_axis] % axis_size(mesh, "model") == 0:
+                spec[seq_axis] = "model"
+        else:
+            if leaf.shape[seq_axis] % axis_size(mesh, all_axes) == 0:
+                spec[seq_axis] = all_axes
+            elif leaf.shape[seq_axis] % axis_size(mesh, ba) == 0:
+                spec[seq_axis] = ba
+        return P(*spec)
+    # SSM state leaves: [G, B, ...] — batch when divisible else replicate
+    spec = [None] * leaf.ndim
+    if batch_fits and leaf.ndim >= 2:
+        spec[1] = ba
+    return P(*spec)
+
+
+def cache_shardings(caches: Any, mesh: Mesh, *, global_batch: int) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, cache_spec(path, leaf, mesh, global_batch=global_batch)),
+        caches)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the HAD inference path.
+
+hamming_score            packed-bit QK^T (XOR+popcount / int8-MXU variants)
+binary_decode_attention  fused decode: scores + histogram top-N + softmax*V
+binary_prefill_attention fused causal prefill, flash-shaped two-pass
+
+ops.py — jit'd wrappers (layout, GQA, padding, interpret switch)
+ref.py — pure-jnp oracles used by the allclose test sweeps
+"""
+from repro.kernels import ops, ref
+from repro.kernels.ops import (decode_attention, hamming_scores,
+                               prefill_attention, to_bitplanes)

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: packed-bit Hamming attention scores (QK^T analogue).
+
+Computes integer binary scores s[i, j] = d - 2 * ham(q_i, k_j) from packed
+uint32 bit rows, the HAD replacement for the float QK^T (paper Eq. 5 /
+DESIGN.md §3).
+
+TPU layout note: keys are consumed in *bit-plane* layout [W, N] (W = d/32
+words) so the XOR/popcount vectorizes along the key axis in the 8x128 VPU
+lanes; the tiny W axis is unrolled in registers. Queries stay row-major
+[M, W] (one row per query, W words each).
+
+Two methods:
+  * "xor"  — XOR + population_count on the VPU (d/32 words per pair).
+    Optimal when scores are memory-bound (decode; long context).
+  * "int8" — unpack bits to ±1 int8 and issue an MXU int8 matmul
+    (2x bf16 MAC throughput). Optimal when compute-bound (prefill).
+    See EXPERIMENTS.md §Perf for the napkin math and crossover.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _score_tile(q_blk: Array, k_blk: Array, d: int) -> Array:
+    """[bm, W] uint32 x [W, bn] uint32 -> [bm, bn] int32 binary scores."""
+    w = q_blk.shape[-1]
+    ham = jnp.zeros((q_blk.shape[0], k_blk.shape[1]), dtype=jnp.int32)
+    for wi in range(w):  # W <= 8; fully unrolled, VPU-vectorized over bn
+        x = jnp.bitwise_xor(q_blk[:, wi][:, None], k_blk[wi, :][None, :])
+        ham += jax.lax.population_count(x).astype(jnp.int32)
+    return d - 2 * ham
+
+
+def _unpack_pm1_int8(bits: Array, d: int, *, axis_last: bool) -> Array:
+    """[m, W] or [W, n] uint32 -> ±1 int8 of shape [m, d] / [d, n]."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    if axis_last:  # [m, W] -> [m, W*32] -> [m, d]
+        b = (bits[..., None] >> shifts) & jnp.uint32(1)
+        flat = b.reshape(bits.shape[0], bits.shape[1] * 32)[:, :d]
+    else:  # [W, n] -> [W*32, n] -> [d, n]
+        b = (bits[:, None, :] >> shifts[None, :, None]) & jnp.uint32(1)
+        flat = b.reshape(bits.shape[0] * 32, bits.shape[1])[:d]
+    return (2 * flat.astype(jnp.int8) - 1).astype(jnp.int8)
+
+
+def _hamming_score_kernel(q_ref, k_ref, o_ref, *, d: int, method: str):
+    if method == "xor":
+        o_ref[...] = _score_tile(q_ref[...], k_ref[...], d)
+    else:  # int8 MXU path
+        q8 = _unpack_pm1_int8(q_ref[...], d, axis_last=True)   # [bm, d]
+        k8 = _unpack_pm1_int8(k_ref[...], d, axis_last=False)  # [d, bn]
+        o_ref[...] = jax.lax.dot_general(
+            q8, k8, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+
+
+def hamming_score(q_bits: Array, k_bits_planes: Array, d: int, *,
+                  block_m: int = 128, block_n: int = 128,
+                  method: str = "xor", interpret: bool = True) -> Array:
+    """Tiled binary-score matrix.
+
+    Args:
+      q_bits: [M, W] uint32 packed query bits (row-major).
+      k_bits_planes: [W, N] uint32 packed key bits (bit-plane layout).
+      d: true head dimension (bits per vector; W = ceil(d/32)).
+      block_m/block_n: VMEM tile sizes (MXU/VPU-aligned multiples of 8/128
+        on real hardware; any divisor works in interpret mode).
+
+    Returns: [M, N] int32 scores in {-d, -d+2, ..., d}.
+    """
+    m, w = q_bits.shape
+    w2, n = k_bits_planes.shape
+    assert w == w2, (w, w2)
+    bm, bn = min(block_m, m), min(block_n, n)
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    kernel = functools.partial(_hamming_score_kernel, d=d, method=method)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((w, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(q_bits, k_bits_planes)

@@ -1,0 +1,143 @@
+"""jit'd public wrappers over the Pallas kernels.
+
+Handle layout (row-major <-> bit-plane), GQA grouping, padding to block
+multiples, and the interpret-mode switch (CPU containers run the kernel
+bodies in Python via interpret=True; on TPU set REPRO_PALLAS_INTERPRET=0).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hamming
+from repro.kernels import binary_decode_attention as _dec
+from repro.kernels import binary_prefill_attention as _pre
+from repro.kernels import hamming_score as _hs
+
+Array = jax.Array
+
+
+def default_interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def to_bitplanes(k_bits: Array) -> Array:
+    """Row-major packed bits [..., T, W] -> bit-plane layout [..., W, T]."""
+    return jnp.swapaxes(k_bits, -1, -2)
+
+
+def _pad_to(x: Array, axis: int, mult: int) -> Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("d", "block_m", "block_n",
+                                             "method", "interpret"))
+def hamming_scores(q_bits: Array, k_bits: Array, d: int, *,
+                   block_m: int = 128, block_n: int = 128,
+                   method: str = "xor",
+                   interpret: bool | None = None) -> Array:
+    """Binary scores for row-major packed bits with arbitrary leading dims.
+
+    q_bits: [..., M, W]; k_bits: [..., N, W] -> [..., M, N] int32.
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    lead = q_bits.shape[:-2]
+    m, w = q_bits.shape[-2:]
+    n = k_bits.shape[-2]
+    qf = q_bits.reshape(-1, m, w)
+    kf = to_bitplanes(k_bits.reshape(-1, n, w))
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    qf = _pad_to(qf, 1, bm)
+    kf = _pad_to(kf, 2, bn)
+
+    fn = functools.partial(_hs.hamming_score, d=d, block_m=bm, block_n=bn,
+                           method=method, interpret=interpret)
+    out = jax.vmap(fn)(qf, kf)
+    return out[:, :m, :n].reshape(*lead, m, n)
+
+
+@functools.partial(jax.jit, static_argnames=("d", "block_t", "interpret",
+                                             "bitplanes"))
+def decode_attention(q_bits: Array, k_bits: Array, v: Array, *, d: int,
+                     nsel: Array | int, scale: Array | float,
+                     lengths: Array, block_t: int = 512,
+                     interpret: bool | None = None,
+                     bitplanes: bool = False) -> Array:
+    """HAD decode attention for one new token.
+
+    q_bits: [B, H, W] uint32; k_bits: [B, Hk, T, W] (row-major) or
+    [B, Hk, W, T] when bitplanes=True; v: [B, Hk, T, Dv];
+    lengths: [B] int32 valid cache lengths. Returns [B, H, Dv] f32.
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    b, h, w = q_bits.shape
+    if bitplanes:
+        _, hk, w2, t = k_bits.shape
+        kf = k_bits.reshape(b * hk, w, t)
+    else:
+        _, hk, t, w2 = k_bits.shape
+        kf = to_bitplanes(k_bits).reshape(b * hk, w, t)
+    assert w == w2
+    g = h // hk
+    dv = v.shape[-1]
+    qf = q_bits.reshape(b, hk, g, w).reshape(b * hk, g, w)
+    vf = v.reshape(b * hk, t, dv)
+    bt = min(block_t, t)
+    kf = _pad_to(kf, 2, bt)
+    vf = _pad_to(vf, 1, bt)
+    len_f = jnp.broadcast_to(lengths[:, None], (b, hk)).reshape(-1)
+    out = _dec.decode_attention(
+        qf, kf, vf, d=d,
+        nsel=jnp.asarray([nsel], dtype=jnp.int32).reshape(1),
+        scale=jnp.asarray([scale], dtype=jnp.float32).reshape(1),
+        lengths=len_f.astype(jnp.int32), block_t=bt, interpret=interpret)
+    return out.reshape(b, h, dv)
+
+
+@functools.partial(jax.jit, static_argnames=("d", "causal", "block_q",
+                                             "block_t", "interpret"))
+def prefill_attention(q_bits: Array, k_bits: Array, v: Array, *, d: int,
+                      nsel: Array | int, scale: Array | float,
+                      kv_length: Array | int, q_offset: Array | int = 0,
+                      causal: bool = True, block_q: int = 256,
+                      block_t: int = 512,
+                      interpret: bool | None = None) -> Array:
+    """HAD prefill attention over a query chunk.
+
+    q_bits: [B, H, S, W]; k_bits: [B, Hk, T, W] row-major; v: [B, Hk, T, Dv].
+    Returns [B, H, S, Dv] float32.
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    b, h, s, w = q_bits.shape
+    _, hk, t, w2 = k_bits.shape
+    assert w == w2
+    g = h // hk
+    dv = v.shape[-1]
+    bq = min(block_q, s)
+    bt = min(block_t, t)
+    qf = q_bits.reshape(b * h, s, w)
+    qf = _pad_to(qf, 1, bq)
+    kf = _pad_to(to_bitplanes(k_bits).reshape(b * hk, w, t), 2, bt)
+    vf = _pad_to(v.reshape(b * hk, t, dv), 1, bt)
+    out = _pre.prefill_attention(
+        qf, kf, vf, d=d,
+        nsel=jnp.asarray([nsel], dtype=jnp.int32).reshape(1),
+        scale=jnp.asarray([scale], dtype=jnp.float32).reshape(1),
+        kv_length=jnp.asarray([kv_length], dtype=jnp.int32).reshape(1),
+        q_offset=jnp.asarray([q_offset], dtype=jnp.int32).reshape(1),
+        group_size=g, n_kv_heads=hk, causal=causal, block_q=bq, block_t=bt,
+        interpret=interpret)
+    return out[:, :s].reshape(b, h, s, dv)

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for the Pallas kernels (same math, no tiling).
+
+These reuse the independently-tested repro.core implementations, so kernel
+tests validate the tiled/streamed Pallas versions against code whose own
+correctness is anchored to dense ±1 matmuls.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hamming, topn
+
+Array = jax.Array
+
+
+def hamming_score_ref(q_bits: Array, k_bits: Array, d: int) -> Array:
+    """q_bits [M, W], k_bits [N, W] (row-major) -> [M, N] int32."""
+    return hamming.binary_scores(q_bits, k_bits, d)
+
+
+def _masked_topn_softmax_av(scores: Array, v: Array, *, d: int, nsel: int,
+                            scale: float, valid: Array) -> Array:
+    """scores [Q, T] int32, v [T, Dv], valid [Q, T] -> [Q, Dv] f32."""
+    keep = topn.topn_mask_binary(scores, nsel, d, valid=valid)
+    a = topn.sparse_softmax(scores.astype(jnp.float32), keep, scale=scale)
+    return a @ v.astype(jnp.float32)
+
+
+def decode_attention_ref(q_bits: Array, k_bits: Array, v: Array, *, d: int,
+                         nsel: int, scale: float, lengths: Array) -> Array:
+    """Oracle for binary_decode_attention.
+
+    q_bits: [BHk, G, W]; k_bits: [BHk, T, W] (row-major); v: [BHk, T, Dv];
+    lengths: [BHk] int32. Returns [BHk, G, Dv] float32.
+    """
+    t = k_bits.shape[1]
+
+    def one(qb, kb, vv, ln):
+        scores = hamming.binary_scores(qb, kb, d)          # [G, T]
+        valid = (jnp.arange(t) < ln)[None, :]
+        valid = jnp.broadcast_to(valid, scores.shape)
+        return _masked_topn_softmax_av(scores, vv, d=d, nsel=nsel,
+                                       scale=scale, valid=valid)
+
+    return jax.vmap(one)(q_bits, k_bits, v, lengths)
+
+
+def prefill_attention_ref(q_bits: Array, k_bits: Array, v: Array, *, d: int,
+                          nsel: int, scale: float, kv_length: int,
+                          q_offset: int, group_size: int,
+                          causal: bool = True) -> Array:
+    """Oracle for binary_prefill_attention.
+
+    q_bits: [BH, S, W]; k_bits: [BHk, T, W] row-major; v: [BHk, T, Dv].
+    Returns [BH, S, Dv] float32.
+    """
+    bh, s, w = q_bits.shape
+    t = k_bits.shape[1]
+    g = group_size
+
+    def one(qb, kb, vv, qoff):
+        scores = hamming.binary_scores(qb, kb, d)          # [S, T]
+        qpos = qoff + jnp.arange(s)[:, None]
+        kpos = jnp.arange(t)[None, :]
+        valid = kpos < kv_length
+        if causal:
+            valid = jnp.logical_and(valid, kpos <= qpos)
+        valid = jnp.broadcast_to(valid, scores.shape)
+        return _masked_topn_softmax_av(scores, vv, d=d, nsel=nsel,
+                                       scale=scale, valid=valid)
+
+    kb_g = jnp.repeat(k_bits, g, axis=0)                   # [BH, T, W]
+    v_g = jnp.repeat(v, g, axis=0)
+    qoffs = jnp.full((bh,), q_offset, dtype=jnp.int32)
+    return jax.vmap(one)(q_bits, kb_g, v_g, qoffs)

@@ -1,0 +1,7 @@
+"""Model zoo: dense GQA / MoE / SSM / hybrid / VLM / encoder assemblies."""
+from repro.models.config import HADConfig, ModelConfig
+from repro.models.model import (SHAPES, ShapeSpec, active_param_count,
+                                forward, forward_distill, init_caches,
+                                init_params, input_specs, merge_student,
+                                param_count, serve_step, shape_applicable,
+                                student_subset)

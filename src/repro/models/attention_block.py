@@ -1,0 +1,300 @@
+"""GQA attention block with first-class HAD support.
+
+Modes:
+  std        — full-precision softmax attention (teacher / baseline / non-HAD)
+  had_train  — stage-scheduled binarization (tanh/STE) + top-N (student)
+  had_eval   — hard-sign binarization + top-N (student eval, dense jnp)
+  distill    — fused teacher+student forward returning both outputs + Eq. 9 KL
+  prefill/decode — packed-bit inference with KV cache (Pallas kernels or
+                   the pure-jnp reference, cfg.had.use_kernels)
+
+Binarization is applied *after* RoPE so positional structure survives in the
+sign pattern (the paper's models use absolute positions; this is the
+decoder-arch extension, DESIGN.md §2). Sigmas live in the block params as
+non-trainable buffers ("sigma_q"/"sigma_k"), excluded by the optimizer mask.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import attention as A
+from repro.core import binarize as BZ
+from repro.core import hamming
+from repro.distributed.constraints import constrain
+from repro.kernels import ops as kops
+from repro.models import common
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def attn_params(key, cfg: ModelConfig, *, cross: bool = False) -> dict:
+    d, h, hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    ks = jax.random.split(key, 4)
+    dt = cfg.dtype
+    p = {
+        "wq": common.dense_init(ks[0], (d, h * dh), dt),
+        "wk": common.dense_init(ks[1], (d, hk * dh), dt),
+        "wv": common.dense_init(ks[2], (d, hk * dh), dt),
+        "wo": common.dense_init(ks[3], (h * dh, d), dt),
+        "sigma_q": jnp.asarray(cfg.had.sigma_init, jnp.float32),
+        "sigma_k": jnp.asarray(cfg.had.sigma_init, jnp.float32),
+    }
+    return p
+
+
+def _project_qkv(p: dict, x: Array, x_kv: Array, cfg: ModelConfig):
+    """-> q [B,H,S,Dh], k/v [B,Hk,Skv,Dh]."""
+    b, s, _ = x.shape
+    skv = x_kv.shape[1]
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    q = (x @ p["wq"]).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    k = (x_kv @ p["wk"]).reshape(b, skv, hk, dh).transpose(0, 2, 1, 3)
+    v = (x_kv @ p["wv"]).reshape(b, skv, hk, dh).transpose(0, 2, 1, 3)
+    return (constrain(q, "bm.."), constrain(k, "bm.."), constrain(v, "bm.."))
+
+
+def _rope(q: Array, k: Array, q_pos: Array, k_pos: Array, cfg: ModelConfig):
+    if cfg.pos == "rope":
+        q = common.apply_rope(q, q_pos, theta=cfg.rope_theta)
+        k = common.apply_rope(k, k_pos, theta=cfg.rope_theta)
+    return q, k
+
+
+def _out(p: dict, ctx: Array, cfg: ModelConfig) -> Array:
+    b, h, s, dh = ctx.shape
+    y = ctx.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+    return y.astype(p["wo"].dtype) @ p["wo"]
+
+
+class AttnAux(NamedTuple):
+    kl_sum: Array
+    row_count: Array
+
+
+def attn_forward(p: dict, x: Array, *, cfg: ModelConfig, mode: str,
+                 att: dict[str, Any], x_kv: Array | None = None,
+                 cross: bool = False) -> tuple[Array, AttnAux]:
+    """Training/eval forward (no cache). att carries step/sched/n/kv_valid."""
+    x_kv = x if x_kv is None else x_kv
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, x, x_kv, cfg)
+    q_pos = jnp.arange(s)
+    k_pos = jnp.arange(x_kv.shape[1])
+    if not cross:
+        q, k = _rope(q, k, q_pos, k_pos, cfg)
+    causal = cfg.causal and not cross
+    scale = cfg.dh ** -0.5
+    kv_valid = att.get("kv_valid_cross") if cross else att.get("kv_valid")
+    zero = jnp.zeros((), jnp.float32)
+
+    if mode == "std" or not cfg.had.enabled:
+        y = A.standard_attention(q, k, v, scale=scale, causal=causal,
+                                 kv_valid=kv_valid)
+        return _out(p, y, cfg), AttnAux(zero, zero)
+
+    n = att["n"]
+    if mode == "fp_topn":
+        # full-precision Q/K with top-N sparsification only (paper fig. 3)
+        y = A.had_topn_attention(q, k, v, n=n, scale=scale, causal=causal,
+                                 kv_valid=kv_valid)
+        return _out(p, y, cfg), AttnAux(zero, zero)
+
+    if mode == "had_train":
+        sched: BZ.CSchedule = att["sched"]
+        step = att["step"]
+        qb = BZ.binarize_scheduled(q, step=step, sched=sched, sigma=p["sigma_q"])
+        kb = BZ.binarize_scheduled(k, step=step, sched=sched, sigma=p["sigma_k"])
+        y = A.had_topn_attention(qb, kb, v, n=n, scale=scale, causal=causal,
+                                 kv_valid=kv_valid)
+        return _out(p, y, cfg), AttnAux(zero, zero)
+
+    if mode == "had_eval":
+        qb = BZ.binarize_inference(q, sigma=p["sigma_q"])
+        kb = BZ.binarize_inference(k, sigma=p["sigma_k"])
+        y = A.had_topn_attention(qb, kb, v, n=n, scale=scale, causal=causal,
+                                 kv_valid=kv_valid)
+        return _out(p, y, cfg), AttnAux(zero, zero)
+
+    if mode in ("sab_train", "sab_eval"):
+        # "w/ SAB" ablation (paper tables 1-2): BiViT-style softmax-aware
+        # binarization of the ATTENTION MATRIX (Q/K stay full precision).
+        # A row is binarized to {0, alpha} with alpha chosen to preserve
+        # the kept mass; STE passes gradients through the comparison.
+        y = A.standard_attention(q, k, v, scale=scale, causal=causal,
+                                 kv_valid=kv_valid)  # shape reference
+        hk = k.shape[1]
+        qg = q.reshape(q.shape[0], hk, q.shape[1] // hk, q.shape[2], q.shape[3])
+        logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        if causal:
+            qi = jnp.arange(q.shape[2])[:, None]
+            kj = jnp.arange(k.shape[2])[None, :]
+            logits = jnp.where((kj <= qi)[None, None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        thresh = jnp.mean(probs, axis=-1, keepdims=True)
+        keep = (probs >= thresh).astype(jnp.float32)
+        keep = keep + (probs - jax.lax.stop_gradient(probs))  # STE
+        alpha = (jnp.sum(probs * jax.lax.stop_gradient(keep), -1, keepdims=True)
+                 / jnp.maximum(jnp.sum(jax.lax.stop_gradient(keep), -1,
+                                       keepdims=True), 1.0))
+        a_bin = keep * alpha
+        a_bin = a_bin / jnp.maximum(jnp.sum(a_bin, -1, keepdims=True), 1e-9)
+        ctx = jnp.einsum("bhgqk,bhkd->bhgqd", a_bin, v.astype(jnp.float32))
+        ctx = ctx.reshape(q.shape[0], -1, q.shape[2], v.shape[-1])
+        return _out(p, ctx.astype(v.dtype), cfg), AttnAux(zero, zero)
+
+    raise ValueError(f"unknown mode {mode}")
+
+
+def attn_forward_distill(pt: dict, ps: dict, xt: Array, xs: Array, *,
+                         cfg: ModelConfig, att: dict[str, Any],
+                         xt_kv: Array | None = None,
+                         xs_kv: Array | None = None,
+                         cross: bool = False) -> tuple[Array, Array, AttnAux]:
+    """Teacher + student fused forward with attention-KL (Eq. 9)."""
+    xt_kv = xt if xt_kv is None else xt_kv
+    xs_kv = xs if xs_kv is None else xs_kv
+    b, s, _ = xt.shape
+    qt, kt, vt = _project_qkv(pt, xt, xt_kv, cfg)
+    qs, ks, vs = _project_qkv(ps, xs, xs_kv, cfg)
+    q_pos = jnp.arange(s)
+    k_pos = jnp.arange(xt_kv.shape[1])
+    if not cross:
+        qt, kt = _rope(qt, kt, q_pos, k_pos, cfg)
+        qs, ks = _rope(qs, ks, q_pos, k_pos, cfg)
+    causal = cfg.causal and not cross
+    scale = cfg.dh ** -0.5
+    sched: BZ.CSchedule = att["sched"]
+    step = att["step"]
+    qs = BZ.binarize_scheduled(qs, step=step, sched=sched, sigma=ps["sigma_q"])
+    ks = BZ.binarize_scheduled(ks, step=step, sched=sched, sigma=ps["sigma_k"])
+    kv_valid = att.get("kv_valid_cross") if cross else att.get("kv_valid")
+    res = A.distill_pair_attention(qt, kt, vt, qs, ks, vs, n=att["n"],
+                                   scale=scale, causal=causal,
+                                   kv_valid=kv_valid, q_block=cfg.q_block)
+    yt = _out(pt, res.teacher_out, cfg)
+    ys = _out(ps, res.student_out, cfg)
+    return yt, ys, AttnAux(res.kl_sum, res.row_count)
+
+
+# ---------------------------------------------------------------------------
+# Serving (KV cache) paths
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+               binary: bool) -> dict:
+    """Per-attention-layer cache. Binary: packed bit-plane K + bf16 V
+    (16x smaller K than bf16 — the paper's long-context memory win)."""
+    hk, dh = cfg.n_kv_heads, cfg.dh
+    if binary:
+        w = hamming.packed_words(dh)
+        return {
+            "k_bits": jnp.zeros((batch, hk, w, max_len), jnp.uint32),
+            "v": jnp.zeros((batch, hk, max_len, dh), cfg.dtype),
+        }
+    return {
+        "k": jnp.zeros((batch, hk, max_len, dh), cfg.dtype),
+        "v": jnp.zeros((batch, hk, max_len, dh), cfg.dtype),
+    }
+
+
+def _update_binary_cache(cache: dict, k: Array, v: Array, pos: Array) -> dict:
+    """k,v: [B, Hk, S_new, Dh]; pos: scalar start index."""
+    kb = hamming.pack_bits(k.astype(jnp.float32))          # [B,Hk,S,W]
+    kb = jnp.swapaxes(kb, -1, -2)                          # bit-planes [B,Hk,W,S]
+    cache = dict(cache)
+    cache["k_bits"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_bits"], kb, pos, axis=3)
+    cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), pos, axis=2)
+    return cache
+
+
+def _update_std_cache(cache: dict, k: Array, v: Array, pos: Array) -> dict:
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), pos, axis=2)
+    cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), pos, axis=2)
+    return cache
+
+
+def attn_serve(p: dict, x: Array, *, cfg: ModelConfig, cache: dict,
+               pos: Array, n: int, binary: bool,
+               cross: bool = False) -> tuple[Array, dict]:
+    """Prefill (S>1) or decode (S=1) step against a KV cache.
+
+    x: [B, S, D]; pos: scalar int32 — index of x[:, 0] in the sequence.
+    Returns (y [B, S, D], updated cache). Cross-attention layers read a
+    static cache (filled by `fill_cross_cache`) and do not update it.
+    """
+    b, s, _ = x.shape
+    dh = cfg.dh
+    h = cfg.n_heads
+    q = (x @ p["wq"]).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    t_max = (cache["v"].shape[2])
+    q_pos = pos + jnp.arange(s)
+    if not cross:
+        hk = cfg.n_kv_heads
+        k = (x @ p["wk"]).reshape(b, s, hk, dh).transpose(0, 2, 1, 3)
+        v = (x @ p["wv"]).reshape(b, s, hk, dh).transpose(0, 2, 1, 3)
+        q, k = _rope(q, k, q_pos, q_pos, cfg)
+
+    scale_t = dh ** -0.5
+    if binary:
+        scale = (p["sigma_q"] * p["sigma_k"]).astype(jnp.float32) * scale_t
+        if not cross:
+            cache = _update_binary_cache(cache, k, v, pos)
+        kv_len = pos + s if not cross else cache.get("len", t_max)
+        qb = hamming.pack_bits(q.astype(jnp.float32))      # [B,H,S,W]
+        if cfg.had.use_kernels:
+            if s == 1:
+                y = kops.decode_attention(
+                    qb[:, :, 0], cache["k_bits"], cache["v"], d=dh,
+                    nsel=n, scale=scale,
+                    lengths=jnp.full((b,), kv_len, jnp.int32),
+                    block_t=cfg.had.kernel_block_t, bitplanes=True)
+                y = y[:, :, None]                          # [B,H,1,Dh]
+            else:
+                y = kops.prefill_attention(
+                    qb, jnp.swapaxes(cache["k_bits"], -1, -2), cache["v"],
+                    d=dh, nsel=n, scale=scale, kv_length=kv_len,
+                    q_offset=pos, causal=cfg.causal and not cross,
+                    block_q=cfg.had.kernel_block_q,
+                    block_t=cfg.had.kernel_block_t)
+        else:
+            kb_rows = jnp.swapaxes(cache["k_bits"], -1, -2)  # [B,Hk,T,W]
+            kv_valid = (jnp.arange(t_max) < kv_len)[None, :]
+            kv_valid = jnp.broadcast_to(kv_valid, (b, t_max))
+            y = A.had_infer_attention(qb, kb_rows, cache["v"], d=dh, n=n,
+                                      scale=scale,
+                                      causal=cfg.causal and not cross,
+                                      q_offset=pos, kv_valid=kv_valid)
+        y = y.astype(x.dtype)
+    else:
+        if not cross:
+            cache = _update_std_cache(cache, k, v, pos)
+        kv_len = pos + s if not cross else cache.get("len", t_max)
+        kv_valid = (jnp.arange(t_max) < kv_len)[None, :]
+        kv_valid = jnp.broadcast_to(kv_valid, (b, t_max))
+        y = A.standard_attention(q, cache["k"], cache["v"], scale=scale_t,
+                                 causal=cfg.causal and not cross,
+                                 q_offset=pos, kv_valid=kv_valid)
+    return _out(p, y, cfg), cache
+
+
+def fill_cross_cache(p: dict, image_embeds: Array, *, cfg: ModelConfig,
+                     binary: bool) -> dict:
+    """Compute the static cross-attention K/V cache from frontend embeds."""
+    b, t, _ = image_embeds.shape
+    hk, dh = cfg.n_kv_heads, cfg.dh
+    k = (image_embeds @ p["wk"]).reshape(b, t, hk, dh).transpose(0, 2, 1, 3)
+    v = (image_embeds @ p["wv"]).reshape(b, t, hk, dh).transpose(0, 2, 1, 3)
+    if binary:
+        kb = jnp.swapaxes(hamming.pack_bits(k.astype(jnp.float32)), -1, -2)
+        return {"k_bits": kb, "v": v}
+    return {"k": k, "v": v}

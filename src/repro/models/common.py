@@ -1,0 +1,92 @@
+"""Shared neural-net building blocks (pure JAX pytrees, functional apply)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, *, scale: float | None = None) -> Array:
+    """Truncated-normal fan-in init (maxtext-style)."""
+    fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else fan_in ** -0.5
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape,
+                                              jnp.float32)).astype(dtype)
+
+
+def embed_init(key, shape, dtype) -> Array:
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_params(d: int, dtype) -> dict:
+    return {"w": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(params: dict, x: Array, *, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["w"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(dh: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+
+
+def apply_rope(x: Array, positions: Array, *, theta: float = 10_000.0) -> Array:
+    """x: [B, H, S, Dh]; positions: [S] or [B, S] int."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # [Dh/2]
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [(B,)S,Dh/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    while cos.ndim < x.ndim:  # broadcast to [B?, 1(H), S, Dh/2]
+        cos, sin = cos[None], sin[None]
+    x1, x2 = x[..., 0::2].astype(jnp.float32), x[..., 1::2].astype(jnp.float32)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    out = jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_params(key, d: int, f: int, dtype, *, act: str) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"w1": dense_init(ks[0], (d, f), dtype),
+         "w2": dense_init(ks[1], (f, d), dtype)}
+    if act == "swiglu":
+        p["w3"] = dense_init(ks[2], (d, f), dtype)
+    return p
+
+
+def mlp(params: dict, x: Array, *, act: str) -> Array:
+    h = x @ params["w1"]
+    if act == "swiglu":
+        h = jax.nn.silu(h) * (x @ params["w3"])
+    else:
+        h = jax.nn.gelu(h)
+    return h @ params["w2"]
+
+
+# ---------------------------------------------------------------------------
+# embeddings / heads
+# ---------------------------------------------------------------------------
+
+def unembed(x: Array, w: Array) -> Array:
+    """x: [..., D] @ w [D, V] -> logits f32."""
+    return (x.astype(jnp.float32) @ w.astype(jnp.float32))

@@ -1,0 +1,137 @@
+"""Public model API: init/apply/serve dispatch + dry-run input specs."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import HADConfig, ModelConfig
+
+Array = jax.Array
+
+init_params = T.init_params
+student_subset = T.student_subset
+merge_student = T.merge_student
+forward = T.forward
+forward_distill = T.forward_distill
+init_caches = T.init_caches
+serve_step = T.serve_step
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One assigned input-shape cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Whether an (arch, shape) cell runs; reason when skipped (DESIGN.md §6)."""
+    if cfg.is_encoder and shape.kind == "decode":
+        return False, "encoder-only arch has no autoregressive decode step"
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec,
+                *, batch_override: int | None = None) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    Training cells feed (tokens, labels); prefill feeds the prompt tokens;
+    decode feeds one new token per sequence (the seq_len is the KV-cache
+    length, allocated by the serve-step builder, not an input here).
+    Modality stubs: hubert feeds frame embeddings, the VLM adds
+    precomputed patch embeddings (per the assignment, frontends are stubs).
+    """
+    b = batch_override if batch_override is not None else shape.global_batch
+    s = shape.seq_len
+    i32 = jnp.int32
+    specs: dict[str, Any] = {}
+    if shape.kind == "train":
+        if cfg.frontend_dim and not cfg.layer_pattern.count("C"):
+            specs["frames"] = jax.ShapeDtypeStruct((b, s, cfg.frontend_dim),
+                                                   jnp.bfloat16)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+    elif shape.kind == "prefill":
+        if cfg.frontend_dim and not cfg.layer_pattern.count("C"):
+            specs["frames"] = jax.ShapeDtypeStruct((b, s, cfg.frontend_dim),
+                                                   jnp.bfloat16)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+    else:  # decode: one new token against a cache of length s
+        specs["tokens"] = jax.ShapeDtypeStruct((b, 1), i32)
+    if cfg.layer_pattern.count("C") and shape.kind != "decode":
+        specs["image_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_image_tokens, cfg.frontend_dim), jnp.bfloat16)
+    return specs
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Analytic parameter count (no allocation)."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.padded_vocab
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    total = v * d  # embed
+    if not cfg.tie_embeddings:
+        total += d * v
+    if cfg.pos == "learned":
+        total += cfg.max_pos * d
+    if cfg.frontend_dim:
+        total += cfg.frontend_dim * d
+    total += d  # final norm
+    for i, ch in enumerate(cfg.layer_pattern):
+        per = d  # norm1
+        if ch in ("A", "C"):
+            per += d * h * dh + 2 * d * hk * dh + h * dh * d + 2
+        else:
+            di, n, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+            per += d * (2 * di + 2 * n + nh) + di * d + 3 * nh + 4 * di + di
+        if f > 0:
+            per += d  # norm2
+            n_mats = 3 if cfg.act == "swiglu" else 2
+            if _uses_moe(cfg, i):
+                per += d * cfg.n_experts + cfg.n_experts * n_mats * d * f
+            else:
+                per += n_mats * d * f
+        total += per * cfg.n_groups
+    return total
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Active-per-token parameters (MoE: top-k experts only)."""
+    if not cfg.n_experts:
+        return param_count(cfg)
+    d, f = cfg.d_model, cfg.d_ff
+    n_mats = 3 if cfg.act == "swiglu" else 2
+    inactive_per_moe = (cfg.n_experts - cfg.experts_per_token) * n_mats * d * f
+    n_moe_layers = sum(cfg.n_groups for i, ch in enumerate(cfg.layer_pattern)
+                       if _uses_moe(cfg, i))
+    return param_count(cfg) - inactive_per_moe * n_moe_layers
+
+
+def trainable_param_count(cfg: ModelConfig) -> int:
+    """Parameters in the student's trainable subset (optimizer-state load)."""
+    if cfg.trainable == "all":
+        return param_count(cfg)
+    d, h, hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    per_attn = d * h * dh + 2 * d * hk * dh + h * dh * d + d + 2
+    n_attn = sum(cfg.n_groups for ch in cfg.layer_pattern if ch in ("A", "C"))
+    return per_attn * n_attn
+
+
+def _uses_moe(cfg: ModelConfig, pos: int) -> bool:
+    return T._position_uses_moe(cfg, pos)

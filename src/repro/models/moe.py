@@ -1,0 +1,106 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-based dispatch.
+
+GShard/MaxText-style grouped dispatch: tokens are reshaped into groups
+(sharded over the data axis), each group dispatches to per-expert capacity
+slots via one-hot einsums, expert FFNs run with the expert axis sharded
+over the `model` mesh axis (EP), and results are combined with the gate
+weights. Overflowed tokens (beyond capacity) are dropped (standard), which
+the load-balance auxiliary loss keeps rare.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.constraints import constrain
+from repro.models import common
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def moe_params(key, cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    dt = cfg.dtype
+    p = {
+        "router": common.dense_init(ks[0], (d, e), jnp.float32, scale=0.02),
+        "w1": common.dense_init(ks[1], (e, d, f), dt),
+        "w2": common.dense_init(ks[2], (e, f, d), dt),
+    }
+    if cfg.act == "swiglu":
+        p["w3"] = common.dense_init(ks[3], (e, d, f), dt)
+    return p
+
+
+def _capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
+    k, e = cfg.experts_per_token, cfg.n_experts
+    cap = int(tokens_per_group * k * cfg.capacity_factor / e) + 1
+    return max(cap, 1)
+
+
+def moe_ffn(p: dict, x: Array, *, cfg: ModelConfig, group_size: int = 512,
+            no_drop: bool = False) -> tuple[Array, Array]:
+    """x: [B, S, D] -> (y [B, S, D], aux load-balance loss scalar).
+
+    no_drop=True (serving) sizes capacity so no token ever overflows —
+    inference must not drop tokens; training keeps the capacity bound.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    tokens = b * s
+    tg = min(group_size, tokens)
+    while tokens % tg:
+        tg -= 1
+    g = tokens // tg
+    xg = x.reshape(g, tg, d)
+
+    logits = (xg.astype(jnp.float32) @ p["router"])          # [G, Tg, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)          # [G, Tg, k]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    if no_drop:
+        # serving: enough headroom that drops are negligible (4x the
+        # expected per-expert load), but bounded — cap=tg at 384 experts
+        # allocated [G,512,384,512] dispatch tensors (~100 GB/device at the
+        # kimi prefill cell, §Perf hillclimb C)
+        expected = tg * k / e
+        cap = min(tg, max(int(4 * expected) + 1, 16))
+    else:
+        cap = _capacity(tg, cfg)
+    # Positions within each expert's capacity buffer, per k-slot in priority
+    # order (slot 0 claims space first — standard GShard semantics).
+    dispatch = jnp.zeros((g, tg, e, cap), dtype=xg.dtype)
+    combine = jnp.zeros((g, tg, e, cap), dtype=jnp.float32)
+    fill = jnp.zeros((g, e), dtype=jnp.int32)
+    for slot in range(k):
+        oh = jax.nn.one_hot(expert_idx[..., slot], e, dtype=jnp.int32)  # [G,Tg,E]
+        pos_in_e = fill[:, None, :] + jnp.cumsum(oh, axis=1) - oh
+        keep = (pos_in_e < cap) & (oh > 0)
+        pos_oh = jax.nn.one_hot(jnp.where(keep, pos_in_e, cap), cap,
+                                dtype=jnp.float32)           # [G,Tg,E,cap]
+        sel = pos_oh * keep[..., None]
+        dispatch = dispatch + sel.astype(xg.dtype)
+        combine = combine + sel * gate_vals[..., slot][..., None, None]
+        fill = fill + jnp.sum(oh, axis=1)
+
+    expert_in = jnp.einsum("gtec,gtd->gecd", dispatch, xg)   # [G,E,cap,D]
+    expert_in = constrain(expert_in, "be..")  # EP: experts over model
+    h = jnp.einsum("gecd,edf->gecf", expert_in, p["w1"])
+    if cfg.act == "swiglu":
+        gate_h = jnp.einsum("gecd,edf->gecf", expert_in, p["w3"])
+        h = jax.nn.silu(h) * gate_h
+    else:
+        h = jax.nn.gelu(h)
+    expert_out = constrain(jnp.einsum("gecf,efd->gecd", h, p["w2"]), "be..")
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(expert_out.dtype),
+                   expert_out)
+
+    # Switch-style load-balance aux loss: E * sum_e f_e * p_e
+    top1 = jax.nn.one_hot(expert_idx[..., 0], e, dtype=jnp.float32)
+    frac_tokens = jnp.mean(top1, axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,188 @@
+"""Mamba2 (SSD — state-space duality) block, chunked TPU-native form.
+
+Scalar-per-head decay (the SSD restriction) lets the sequence mixing be
+written as chunked matmuls (MXU work) with a short inter-chunk scan:
+
+  h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t^T        (state [N, P])
+  y_t = C_t^T h_t + D * x_t
+
+Within a chunk of length L the kernel is the masked Gram matrix
+M[t, s] = (C_t . B_s) * exp(cum_t - cum_s) * dt_s (s <= t), giving
+y_intra = M @ x; the carried state contributes y_inter = decay_t * C_t @ h.
+
+Decode is a single recurrence step on the carried state (no cache growth —
+the long-context story for the SSM family).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.constraints import constrain
+from repro.models import common
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def ssm_params(key, cfg: ModelConfig) -> dict:
+    d, di, n, hd = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    nh = cfg.ssm_heads
+    ks = jax.random.split(key, 6)
+    dt = cfg.dtype
+    return {
+        # in_proj -> [x (di), z (di), B (n), C (n), dt (nh)]
+        "w_in": common.dense_init(ks[0], (d, 2 * di + 2 * n + nh), dt),
+        "w_out": common.dense_init(ks[1], (di, d), dt),
+        "A_log": jnp.zeros((nh,), jnp.float32),          # A = -exp(A_log)
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "conv_w": common.dense_init(ks[2], (4, di), dt, scale=0.5),
+        "norm": common.rmsnorm_params(di, dt),
+    }
+
+
+def _split_in(p, x, cfg: ModelConfig):
+    di, n, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    proj = x @ p["w_in"]
+    xs, z, bmat, cmat, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    return xs, z, bmat, cmat, dt
+
+
+def _conv_causal(xs: Array, w: Array, state: Array | None = None):
+    """Depthwise causal conv, kernel size K. xs: [B, S, Di]; w: [K, Di].
+
+    Returns (y, new_state[K-1 last inputs]) so decode can continue.
+    """
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xs.shape[0], k - 1, xs.shape[2]), xs.dtype)
+    else:
+        pad = state.astype(xs.dtype)
+    xp = jnp.concatenate([pad, xs], axis=1)              # [B, S+K-1, Di]
+    y = sum(xp[:, i:i + xs.shape[1]] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else pad
+    return jax.nn.silu(y), new_state
+
+
+def ssd_chunked(xh: Array, dt: Array, bmat: Array, cmat: Array, a: Array,
+                d_skip: Array, *, chunk: int,
+                h0: Array | None = None) -> tuple[Array, Array]:
+    """Chunked SSD sequence mixing.
+
+    xh:   [B, S, NH, P]  per-head inputs
+    dt:   [B, S, NH]     softplus'd step sizes
+    bmat: [B, S, N], cmat: [B, S, N]  (single B/C group, Mamba2 style)
+    a:    [NH] negative decay rates (A = -exp(A_log))
+    d_skip: [NH] skip gains
+    h0:   optional initial state [B, NH, N, P]
+    Returns (y [B, S, NH, P], final state [B, NH, N, P]).
+    """
+    b, s, nh, p = xh.shape
+    n = bmat.shape[-1]
+    l = min(chunk, s)
+    while s % l:
+        l -= 1
+    nc = s // l
+    xc = xh.reshape(b, nc, l, nh, p)
+    dtc = dt.reshape(b, nc, l, nh)
+    bc = bmat.reshape(b, nc, l, n)
+    cc = cmat.reshape(b, nc, l, n)
+
+    xc = constrain(xc, "b..m.")   # SSD heads shard over model (TP)
+    loga = dtc * a[None, None, None, :]                   # [B,NC,L,NH] (<=0)
+    cum = jnp.cumsum(loga, axis=2)                        # within-chunk cumsum
+
+    # intra-chunk: M[t,s] = (C_t.B_s) exp(cum_t - cum_s) dt_s for s<=t
+    gram = jnp.einsum("bctn,bcsn->bcts", cc, bc)          # [B,NC,L,L]
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # [B,NC,L,L,NH]
+    tri = jnp.tril(jnp.ones((l, l), bool))
+    m = jnp.where(tri[None, None, :, :, None],
+                  gram[..., None] * decay * dtc[:, :, None, :, :], 0.0)
+    m = constrain(m, "b...m")     # [B,NC,L,L,NH]: the SSD quadratic tensor
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", m, xc)
+
+    # chunk-final states: h_c = exp(cum_L - cum_s) dt_s B_s x_s^T (summed)
+    tail = jnp.exp(cum[:, :, -1:, :] - cum) * dtc         # [B,NC,L,NH]
+    h_chunk = jnp.einsum("bcsh,bcsn,bcshp->bchnp", tail, bc, xc)
+
+    # inter-chunk scan carrying h
+    chunk_decay = jnp.exp(cum[:, :, -1, :])               # [B,NC,NH]
+    h_init = (jnp.zeros((b, nh, n, p), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+
+    def scan_fn(h, inputs):
+        hc, dec = inputs                                  # [B,NH,N,P], [B,NH]
+        h_new = h * dec[:, :, None, None] + hc
+        return h_new, h
+    hs_in = (jnp.moveaxis(h_chunk, 1, 0).astype(jnp.float32),
+             jnp.moveaxis(chunk_decay, 1, 0))
+    h_final, h_prev = jax.lax.scan(scan_fn, h_init, hs_in)
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                   # [B,NC,NH,N,P]
+
+    # inter-chunk contribution: y_t += exp(cum_t) C_t . h_prev
+    y_inter = jnp.einsum("bcth,bctn,bchnp->bcthp",
+                         jnp.exp(cum), cc, h_prev)
+    y = (y_intra + y_inter).reshape(b, s, nh, p)
+    y = y + xh * d_skip[None, None, :, None]
+    return y.astype(xh.dtype), h_final
+
+
+def ssd_step(xh: Array, dt: Array, bvec: Array, cvec: Array, a: Array,
+             d_skip: Array, h: Array) -> tuple[Array, Array]:
+    """Single-token recurrence. xh: [B, NH, P]; dt: [B, NH];
+    bvec/cvec: [B, N]; h: [B, NH, N, P]."""
+    dec = jnp.exp(dt * a[None, :])                        # [B,NH]
+    upd = jnp.einsum("bh,bn,bhp->bhnp", dt, bvec, xh.astype(jnp.float32))
+    h_new = h * dec[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", cvec, h_new)
+    y = y + xh.astype(jnp.float32) * d_skip[None, :, None]
+    return y.astype(xh.dtype), h_new
+
+
+def ssm_forward(p: dict, x: Array, *, cfg: ModelConfig,
+                state: dict | None = None) -> tuple[Array, dict]:
+    """Full-sequence forward. x: [B, S, D]. state carries (h, conv) for
+    serving; pass None for training (zero init, state returned anyway)."""
+    b, s, d = x.shape
+    nh, hd = cfg.ssm_heads, cfg.ssm_head_dim
+    xs, z, bmat, cmat, dt = _split_in(p, x, cfg)
+    conv_state = None if state is None else state["conv"]
+    xs, conv_state = _conv_causal(xs, p["conv_w"], conv_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+    xh = xs.reshape(b, s, nh, hd)
+    h0 = None if state is None else state["h"]
+    y, h = ssd_chunked(xh.astype(jnp.float32), dt,
+                       bmat.astype(jnp.float32), cmat.astype(jnp.float32),
+                       a, p["D"], chunk=cfg.ssm_chunk, h0=h0)
+    y = y.reshape(b, s, cfg.d_inner).astype(x.dtype)
+    y = common.rmsnorm(p["norm"], y, eps=cfg.norm_eps) * jax.nn.silu(z)
+    out = y @ p["w_out"]
+    return out, {"h": h, "conv": conv_state}
+
+
+def ssm_init_state(cfg: ModelConfig, batch: int) -> dict:
+    return {
+        "h": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+                       jnp.float32),
+        "conv": jnp.zeros((batch, 3, cfg.d_inner), cfg.dtype),
+    }
+
+
+def ssm_decode(p: dict, x: Array, *, cfg: ModelConfig,
+               state: dict) -> tuple[Array, dict]:
+    """One-token step. x: [B, 1, D]."""
+    b = x.shape[0]
+    nh, hd = cfg.ssm_heads, cfg.ssm_head_dim
+    xs, z, bmat, cmat, dt = _split_in(p, x, cfg)
+    xs, conv_state = _conv_causal(xs, p["conv_w"], state["conv"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]
+    a = -jnp.exp(p["A_log"])
+    xh = xs[:, 0].reshape(b, nh, hd)
+    y, h = ssd_step(xh, dt, bmat[:, 0].astype(jnp.float32),
+                    cmat[:, 0].astype(jnp.float32), a, p["D"], state["h"])
+    y = y.reshape(b, 1, cfg.d_inner).astype(x.dtype)
+    y = common.rmsnorm(p["norm"], y, eps=cfg.norm_eps) * jax.nn.silu(z)
+    return y @ p["w_out"], {"h": h, "conv": conv_state}

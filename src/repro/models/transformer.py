@@ -1,0 +1,388 @@
+"""Model assembly: embeddings + scanned layer groups + head.
+
+The layer stack is organized as `n_groups` repetitions of `layer_pattern`
+(e.g. jamba: "MMMAMMMM" x 9). Parameters for each pattern position are
+stacked along a leading n_groups axis and the group is `jax.lax.scan`ned,
+keeping compiled HLO size O(group) instead of O(n_layers) — essential for
+the 61/72-layer dry-runs. Within a group the (short) pattern is unrolled.
+
+FFN selection: position i in the pattern uses MoE iff cfg.n_experts > 0 and
+(i % cfg.moe_every == cfg.moe_every - 1) — static within the scan (requires
+group_size % moe_every == 0, enforced at init).
+
+Distillation runs teacher and student through one combined scan so per-layer
+attention-KL (Eq. 9) accumulates without materializing any [S, S] map.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.constraints import (constrain, constrain_params_tree)
+from repro.models import attention_block as AB
+from repro.models import common, moe, ssm
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+# Inter-layer carry sharding (§Perf iteration): "bq." = Megatron-style
+# sequence parallelism (seq over model axis; AG/RS around attention);
+# "b.." = batch-only (no per-layer collectives, larger saved carries).
+CARRY_PATTERN = "bq."
+
+
+def set_carry_pattern(pattern: str) -> None:
+    global CARRY_PATTERN
+    assert pattern in ("bq.", "b.."), pattern
+    CARRY_PATTERN = pattern
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _position_uses_moe(cfg: ModelConfig, pos: int) -> bool:
+    return cfg.n_experts > 0 and (pos % cfg.moe_every == cfg.moe_every - 1)
+
+
+def _layer_params(key, cfg: ModelConfig, ch: str, pos: int) -> dict:
+    ks = jax.random.split(key, 4)
+    dt = cfg.dtype
+    p: dict[str, Any] = {"norm1": common.rmsnorm_params(cfg.d_model, dt)}
+    if ch == "A":
+        p["mixer"] = AB.attn_params(ks[0], cfg)
+    elif ch == "C":
+        p["mixer"] = AB.attn_params(ks[0], cfg, cross=True)
+    elif ch == "M":
+        p["mixer"] = ssm.ssm_params(ks[0], cfg)
+    else:
+        raise ValueError(ch)
+    if cfg.d_ff > 0:
+        p["norm2"] = common.rmsnorm_params(cfg.d_model, dt)
+        if _position_uses_moe(cfg, pos):
+            p["ffn"] = moe.moe_params(ks[1], cfg)
+        else:
+            p["ffn"] = common.mlp_params(ks[1], cfg.d_model, cfg.d_ff, dt,
+                                         act=cfg.act)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    if cfg.n_experts:
+        assert cfg.group_size % cfg.moe_every == 0, cfg.name
+    ks = jax.random.split(key, cfg.group_size + 4)
+    dt = cfg.dtype
+    params: dict[str, Any] = {}
+    params["embed"] = common.embed_init(ks[-1], (cfg.padded_vocab, cfg.d_model), dt)
+    if cfg.pos == "learned":
+        assert cfg.max_pos > 0, f"{cfg.name}: learned pos needs max_pos"
+        params["pos_embed"] = common.embed_init(ks[-2], (cfg.max_pos, cfg.d_model), dt)
+    if cfg.frontend_dim:
+        params["frontend_proj"] = common.dense_init(
+            ks[-3], (cfg.frontend_dim, cfg.d_model), dt)
+    params["final_norm"] = common.rmsnorm_params(cfg.d_model, dt)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = common.dense_init(ks[-4], (cfg.d_model, cfg.padded_vocab), dt)
+
+    blocks: dict[str, Any] = {}
+    for i, ch in enumerate(cfg.layer_pattern):
+        gks = jax.random.split(ks[i], cfg.n_groups)
+        per_group = [_layer_params(gks[g], cfg, ch, i)
+                     for g in range(cfg.n_groups)]
+        blocks[f"pos{i}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per_group)
+    params["blocks"] = blocks
+    return params
+
+
+def student_subset(cfg: ModelConfig, params: dict) -> dict:
+    """The student's own copy of parameters per cfg.trainable.
+
+    "all" -> full deep copy; "attention" -> attention mixers (+norm1) of
+    'A'/'C' positions only. Non-copied weights stay tied to the teacher.
+    """
+    if cfg.trainable == "all":
+        return jax.tree.map(lambda x: x, params)
+    blocks = {}
+    for i, ch in enumerate(cfg.layer_pattern):
+        if ch in ("A", "C"):
+            src = params["blocks"][f"pos{i}"]
+            blocks[f"pos{i}"] = {"mixer": jax.tree.map(lambda x: x, src["mixer"]),
+                                 "norm1": jax.tree.map(lambda x: x, src["norm1"])}
+    return {"blocks": blocks}
+
+
+def merge_student(cfg: ModelConfig, teacher: dict, student: dict) -> dict:
+    """Overlay the student's trainable subset onto the (frozen) teacher."""
+    if cfg.trainable == "all":
+        return student
+    merged = dict(teacher)
+    blocks = dict(teacher["blocks"])
+    for key, sub in student["blocks"].items():
+        base = dict(blocks[key])
+        base.update(sub)
+        blocks[key] = base
+    merged["blocks"] = blocks
+    return merged
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params: dict, batch: dict, cfg: ModelConfig) -> Array:
+    if "frames" in batch:  # audio/vision stub frontend (DESIGN.md §6)
+        x = batch["frames"].astype(cfg.dtype) @ params["frontend_proj"]
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    if cfg.pos == "learned":
+        s = x.shape[1]
+        x = x + params["pos_embed"][:s][None]
+    return x
+
+
+def _image_context(params: dict, batch: dict, cfg: ModelConfig) -> Array | None:
+    if cfg.layer_pattern.count("C") == 0 or "image_embeds" not in batch:
+        return None  # decode steps reuse the prefilled cross cache
+    embeds = batch["image_embeds"].astype(cfg.dtype)      # [B, Timg, FD]
+    return embeds @ params["frontend_proj"]
+
+
+def _apply_ffn(p: dict, x: Array, cfg: ModelConfig, pos: int,
+               no_drop: bool = False):
+    if _position_uses_moe(cfg, pos):
+        return moe.moe_ffn(p, x, cfg=cfg, no_drop=no_drop)
+    return common.mlp(p, x, act=cfg.act), jnp.zeros((), jnp.float32)
+
+
+def _layer_fwd(p: dict, x: Array, ch: str, pos: int, *, cfg: ModelConfig,
+               mode: str, att: dict, img: Array | None):
+    h = common.rmsnorm(p["norm1"], x, eps=cfg.norm_eps)
+    if ch == "M":
+        mix, _ = ssm.ssm_forward(p["mixer"], h, cfg=cfg)
+        aux = AB.AttnAux(jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+    elif ch == "C":
+        mix, aux = AB.attn_forward(p["mixer"], h, cfg=cfg, mode=mode, att=att,
+                                   x_kv=img, cross=True)
+    else:
+        mix, aux = AB.attn_forward(p["mixer"], h, cfg=cfg, mode=mode, att=att)
+    x = x + mix
+    moe_aux = jnp.zeros((), jnp.float32)
+    if cfg.d_ff > 0:
+        h2 = common.rmsnorm(p["norm2"], x, eps=cfg.norm_eps)
+        y, moe_aux = _apply_ffn(p["ffn"], h2, cfg, pos)
+        x = x + y
+    return x, aux, moe_aux
+
+
+class ForwardOut(NamedTuple):
+    logits: Array
+    moe_aux: Array
+
+
+def forward(params: dict, batch: dict, *, cfg: ModelConfig, mode: str = "std",
+            att: dict | None = None) -> ForwardOut:
+    """Full forward. mode: std | had_train | had_eval (see attention_block)."""
+    att = dict(att or {})
+    x = constrain(_embed_inputs(params, batch, cfg), CARRY_PATTERN)
+    img = _image_context(params, batch, cfg)
+
+    def one_layer(p_i, x, ch, i):
+        return _layer_fwd(p_i, x, ch, i, cfg=cfg, mode=mode, att=att, img=img)
+
+    if cfg.remat and cfg.group_size > 1:
+        # nested remat: per-layer residuals instead of per-group (a jamba
+        # group unrolls 8 layers — without this the in-group backward holds
+        # all 8 layers' recomputed intermediates at once)
+        one_layer = jax.checkpoint(
+            one_layer, policy=jax.checkpoint_policies.nothing_saveable,
+            static_argnums=(2, 3))
+
+    def group_fwd(carry, gp):
+        x, moe_acc = carry
+        for i, ch in enumerate(cfg.layer_pattern):
+            x, _aux, m = one_layer(gp[f"pos{i}"], x, ch, i)
+            x = constrain(x, CARRY_PATTERN)
+            moe_acc = moe_acc + m
+        return (x, moe_acc), None
+
+    if cfg.remat:
+        group_fwd = jax.checkpoint(
+            group_fwd, policy=jax.checkpoint_policies.nothing_saveable)
+    (x, moe_acc), _ = jax.lax.scan(group_fwd,
+                                   (x, jnp.zeros((), jnp.float32)),
+                                   params["blocks"])
+    x = common.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = constrain(common.unembed(x, head), "b.m")
+    return ForwardOut(logits, moe_acc / max(cfg.n_layers, 1))
+
+
+class DistillOut(NamedTuple):
+    teacher_logits: Array
+    student_logits: Array
+    attention_kl: Array     # Eq. 9 mean over all rows/maps
+    moe_aux: Array
+
+
+def forward_distill(teacher: dict, student: dict, batch: dict, *,
+                    cfg: ModelConfig, att: dict) -> DistillOut:
+    """Combined teacher/student forward for the distillation step.
+
+    Teacher activations flow through the standard path; student through the
+    stage-scheduled binarized path; Eq. 9 KL accumulates across every
+    attention map of every layer ('A' and 'C' positions).
+    """
+    att = dict(att)
+    eff_student = merge_student(cfg, teacher, student)
+    xt = constrain(_embed_inputs(teacher, batch, cfg), CARRY_PATTERN)
+    xs = constrain(_embed_inputs(eff_student, batch, cfg), CARRY_PATTERN)
+    img_t = _image_context(teacher, batch, cfg)
+    img_s = _image_context(eff_student, batch, cfg)
+
+    def one_layer_pair(pt_i, ps_i, xt, xs, ch, i):
+        kl = jnp.zeros((), jnp.float32)
+        rows = jnp.zeros((), jnp.float32)
+        moe_aux = jnp.zeros((), jnp.float32)
+        if True:
+            if ch == "M":
+                ht = common.rmsnorm(pt_i["norm1"], xt, eps=cfg.norm_eps)
+                hs = common.rmsnorm(ps_i["norm1"], xs, eps=cfg.norm_eps)
+                mt, _ = ssm.ssm_forward(pt_i["mixer"], ht, cfg=cfg)
+                ms, _ = ssm.ssm_forward(ps_i["mixer"], hs, cfg=cfg)
+                xt, xs = xt + mt, xs + ms
+            else:
+                ht = common.rmsnorm(pt_i["norm1"], xt, eps=cfg.norm_eps)
+                hs = common.rmsnorm(ps_i["norm1"], xs, eps=cfg.norm_eps)
+                cross = ch == "C"
+                yt, ys, aux = AB.attn_forward_distill(
+                    pt_i["mixer"], ps_i["mixer"], ht, hs, cfg=cfg, att=att,
+                    xt_kv=img_t if cross else None,
+                    xs_kv=img_s if cross else None, cross=cross)
+                xt, xs = xt + yt, xs + ys
+                kl, rows = kl + aux.kl_sum, rows + aux.row_count
+            if cfg.d_ff > 0:
+                h2t = common.rmsnorm(pt_i["norm2"], xt, eps=cfg.norm_eps)
+                h2s = common.rmsnorm(ps_i["norm2"], xs, eps=cfg.norm_eps)
+                ft, _ = _apply_ffn(pt_i["ffn"], h2t, cfg, i)
+                fs, m = _apply_ffn(ps_i["ffn"], h2s, cfg, i)
+                xt, xs = xt + ft, xs + fs
+                moe_aux = moe_aux + m
+        return xt, xs, kl, rows, moe_aux
+
+    if cfg.remat and cfg.group_size > 1:
+        one_layer_pair = jax.checkpoint(
+            one_layer_pair, policy=jax.checkpoint_policies.nothing_saveable,
+            static_argnums=(4, 5))
+
+    def group_fwd(carry, gps):
+        xt, xs, kl, rows, moe_acc = carry
+        gp_t, gp_s = gps
+        for i, ch in enumerate(cfg.layer_pattern):
+            pt_i, ps_i = gp_t[f"pos{i}"], gp_s[f"pos{i}"]
+            xt, xs, kl_i, rows_i, m_i = one_layer_pair(pt_i, ps_i, xt, xs,
+                                                       ch, i)
+            kl, rows, moe_acc = kl + kl_i, rows + rows_i, moe_acc + m_i
+            xt = constrain(xt, CARRY_PATTERN)
+            xs = constrain(xs, CARRY_PATTERN)
+        return (xt, xs, kl, rows, moe_acc), None
+
+    if cfg.remat:
+        group_fwd = jax.checkpoint(
+            group_fwd, policy=jax.checkpoint_policies.nothing_saveable)
+    zero = jnp.zeros((), jnp.float32)
+    eff_blocks = merge_student(cfg, teacher, student)["blocks"]
+    (xt, xs, kl, rows, moe_acc), _ = jax.lax.scan(
+        group_fwd, (xt, xs, zero, zero, zero),
+        (teacher["blocks"], eff_blocks))
+
+    xt = common.rmsnorm(teacher["final_norm"], xt, eps=cfg.norm_eps)
+    xs = common.rmsnorm(eff_student["final_norm"], xs, eps=cfg.norm_eps)
+    head_t = teacher["embed"].T if cfg.tie_embeddings else teacher["lm_head"]
+    head_s = (eff_student["embed"].T if cfg.tie_embeddings
+              else eff_student["lm_head"])
+    lt = constrain(common.unembed(xt, head_t), "b.m")
+    ls = constrain(common.unembed(xs, head_s), "b.m")
+    kl_mean = kl / jnp.maximum(rows, 1.0)
+    return DistillOut(lt, ls, kl_mean, moe_acc / max(cfg.n_layers, 1))
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, *,
+                binary: bool) -> dict:
+    """Stacked per-position caches matching the blocks pytree structure."""
+    caches: dict[str, Any] = {}
+    for i, ch in enumerate(cfg.layer_pattern):
+        if ch == "A":
+            one = AB.init_cache(cfg, batch, max_len, binary=binary)
+        elif ch == "C":
+            # filled by prefill from image embeds; sized at n_image_tokens
+            one = AB.init_cache(cfg, batch, max(cfg.n_image_tokens, 1),
+                                binary=binary)
+        else:
+            one = ssm.ssm_init_state(cfg, batch)
+        caches[f"pos{i}"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.n_groups,) + x.shape),
+            one)
+    return caches
+
+
+def serve_step(params: dict, batch: dict, caches: dict, *, cfg: ModelConfig,
+               pos: Array, n: int, binary: bool,
+               logits_mode: str = "all") -> tuple[Array, dict]:
+    """Prefill (tokens [B, S>1]) or decode (tokens [B, 1]) against caches.
+
+    Returns (logits [B, S, V], updated caches). `pos` is the index of the
+    first token of this chunk in the global sequence. logits_mode="last"
+    computes the head for the final position only — a 32k-token prefill
+    otherwise outputs B*S*V f32 logits (537 GB for the llama-vision cell);
+    serving only needs the last position.
+    """
+    x = constrain(_embed_inputs(params, batch, cfg), "b..")
+    img = _image_context(params, batch, cfg)
+    s = x.shape[1]
+    decode = s == 1
+
+    def group_fwd(x, gp_cache):
+        gp, cache = gp_cache
+        new_cache = {}
+        for i, ch in enumerate(cfg.layer_pattern):
+            p_i, c_i = gp[f"pos{i}"], cache[f"pos{i}"]
+            h = common.rmsnorm(p_i["norm1"], x, eps=cfg.norm_eps)
+            if ch == "M":
+                if decode:
+                    mix, nc = ssm.ssm_decode(p_i["mixer"], h, cfg=cfg, state=c_i)
+                else:
+                    mix, nc = ssm.ssm_forward(p_i["mixer"], h, cfg=cfg,
+                                              state=c_i)
+            elif ch == "C":
+                c_i = c_i if img is None else AB.fill_cross_cache(
+                    p_i["mixer"], img, cfg=cfg, binary=binary)
+                mix, nc = AB.attn_serve(p_i["mixer"], h, cfg=cfg, cache=c_i,
+                                        pos=pos, n=n, binary=binary,
+                                        cross=True)
+                nc = c_i
+            else:
+                mix, nc = AB.attn_serve(p_i["mixer"], h, cfg=cfg, cache=c_i,
+                                        pos=pos, n=n, binary=binary)
+            x = x + mix
+            if cfg.d_ff > 0:
+                h2 = common.rmsnorm(p_i["norm2"], x, eps=cfg.norm_eps)
+                y, _ = _apply_ffn(p_i["ffn"], h2, cfg, i, no_drop=True)
+                x = x + y
+            x = constrain(x, "b..")
+            new_cache[f"pos{i}"] = nc
+        return x, new_cache
+
+    x, new_caches = jax.lax.scan(group_fwd, x, (params["blocks"], caches))
+    if logits_mode == "last":
+        x = x[:, -1:]
+    x = common.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = constrain(common.unembed(x, head), "b.m")
+    return logits, new_caches

@@ -1,0 +1,4 @@
+"""Optimizers & schedules (built in-repo; the container has no optax)."""
+from repro.optim.adam import (AdamWConfig, clip_by_global_norm, default_mask,
+                              global_norm, init, update)
+from repro.optim import schedules

@@ -1,0 +1,23 @@
+"""Learning-rate schedules (traced-step functions)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(lr: float, *, warmup: int, total: int, floor: float = 0.1):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor * lr + (1 - floor) * lr * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return fn
+
+
+def distill_stage_lr(cfg) -> "callable":
+    """Paper §3.9: 1e-5 stages 1-3, 1e-6 stage 4 (cfg: DistillConfig)."""
+    return cfg.lr_at

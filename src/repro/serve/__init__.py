@@ -1,0 +1,2 @@
+"""Serving: slot-batched engine over the HAD binary-cache inference path."""
+from repro.serve.engine import Engine, ServeConfig

@@ -1,0 +1,6 @@
+"""Training: step builders (pretrain / 4-stage distill) + fault-tolerant loop."""
+from repro.train import loop, steps
+from repro.train.loop import LoopConfig, LoopResult, run
+from repro.train.steps import (StepConfig, build_distill_step,
+                               build_pretrain_step, estimate_and_set_sigmas,
+                               init_distill_state, init_pretrain_state)

@@ -1,0 +1,259 @@
+"""jit-able train-step builders: pretrain (CE) and HAD distillation.
+
+Both builders return a pure `step(state, batch) -> (state, metrics)` that is
+jit/pjit'd by the caller (launcher passes in/out shardings; tests call it
+directly). A single compiled distill step covers all four paper stages:
+stage id, c, lr and the attention-loss switch are traced functions of
+state["step"] (repro.core.distill).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import losses
+from repro.core.distill import DistillConfig
+from repro.distributed import compression as C
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optim import adam
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class StepConfig:
+    moe_aux_weight: float = 0.01
+    compression: C.CompressionConfig = C.CompressionConfig()
+    output_positions: str = "all"      # "all" | "last" (classification)
+    grad_accum: int = 1                # microbatches per step
+
+
+def _accumulate_grads(loss_fn, params, batch, step, accum: int, *loss_args):
+    """Scan over `accum` microbatches accumulating f32 grads + metrics.
+
+    Bounds activation transients to one microbatch (the per-step activation
+    memory knob for the big-arch train cells); grads accumulate in f32,
+    sharded like the params by propagation from the optimizer update.
+    """
+    if accum == 1:
+        (loss, extras), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, *loss_args, batch, step)
+        return loss, extras, grads
+
+    micro = jax.tree.map(
+        lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]), batch)
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def mb(carry, mbatch):
+        gacc, lacc, eacc = carry
+        (loss, extras), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, *loss_args, mbatch, step)
+        gacc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                            gacc, grads)
+        eacc = {k: eacc[k] + v for k, v in extras.items()} if eacc else extras
+        return (gacc, lacc + loss, eacc), None
+
+    e0 = None
+    # first microbatch outside the scan to seed the metrics structure
+    (l0, e0), grads0 = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, *loss_args, jax.tree.map(lambda x: x[0], micro), step)
+    g0 = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), g0, grads0)
+    rest = jax.tree.map(lambda x: x[1:], micro)
+    (gsum, lsum, esum), _ = jax.lax.scan(mb, (g0, l0, e0), rest)
+    inv = 1.0 / accum
+    grads = jax.tree.map(lambda g: (g * inv).astype(jnp.float32), gsum)
+    extras = {k: v * inv for k, v in esum.items()}
+    return lsum * inv, extras, grads
+
+
+# ---------------------------------------------------------------------------
+# pretrain (CE) — the path for HAD-inapplicable archs (mamba2) and baselines
+# ---------------------------------------------------------------------------
+
+def init_pretrain_state(key, cfg: ModelConfig, opt_cfg: adam.AdamWConfig,
+                        step_cfg: StepConfig = StepConfig()) -> dict:
+    params = M.init_params(key, cfg)
+    state = {"params": params, "opt": adam.init(params, opt_cfg),
+             "step": jnp.zeros((), jnp.int32)}
+    if step_cfg.compression.method != "none":
+        state["error"] = C.init_error(params)
+    return state
+
+
+def build_pretrain_step(cfg: ModelConfig, opt_cfg: adam.AdamWConfig,
+                        lr_fn: Callable, step_cfg: StepConfig = StepConfig(),
+                        *, had_train: bool = False,
+                        dcfg: DistillConfig | None = None) -> Callable:
+    """Next-token CE training step. had_train=True trains *with* the HAD
+    attention in the loop (binarization-aware pretraining — paper §5
+    'train-time optimizations' future-work direction)."""
+
+    def loss_fn(params, batch, step):
+        if had_train and cfg.has_attention:
+            att = {"n": cfg.had.topn(batch["labels"].shape[1]),
+                   "sched": dcfg.schedule, "step": step}
+            out = M.forward(params, batch, cfg=cfg, mode="had_train", att=att)
+        else:
+            out = M.forward(params, batch, cfg=cfg, mode="std")
+        ce = losses.softmax_cross_entropy(out.logits, batch["labels"],
+                                          valid_size=cfg.vocab_size)
+        loss = ce + step_cfg.moe_aux_weight * out.moe_aux
+        return loss, {"ce": ce, "moe_aux": out.moe_aux}
+
+    def step_fn(state, batch):
+        step = state["step"]
+        loss, extras, grads = _accumulate_grads(
+            loss_fn, state["params"], batch, step, step_cfg.grad_accum)
+        if step_cfg.compression.method != "none":
+            grads, new_err = C.compress_grads(grads, state["error"],
+                                              step_cfg.compression)
+        params, opt, om = adam.update(grads, state["opt"], state["params"],
+                                      lr=lr_fn(step), cfg=opt_cfg)
+        new_state = dict(state, params=params, opt=opt, step=step + 1)
+        if step_cfg.compression.method != "none":
+            new_state["error"] = new_err
+        metrics = {"loss": loss, **extras, **om, "lr": lr_fn(step)}
+        return new_state, metrics
+
+    return step_fn
+
+
+# ---------------------------------------------------------------------------
+# HAD distillation (paper Alg. 1)
+# ---------------------------------------------------------------------------
+
+def init_distill_state(key, cfg: ModelConfig, opt_cfg: adam.AdamWConfig,
+                       step_cfg: StepConfig = StepConfig(),
+                       teacher: dict | None = None) -> dict:
+    """Student <- copy of teacher (Alg. 1 line 1)."""
+    teacher = M.init_params(key, cfg) if teacher is None else teacher
+    student = M.student_subset(cfg, teacher)
+    state = {"teacher": teacher, "student": student,
+             "opt": adam.init(student, opt_cfg),
+             "step": jnp.zeros((), jnp.int32)}
+    if step_cfg.compression.method != "none":
+        state["error"] = C.init_error(student)
+    return state
+
+
+def build_distill_step(cfg: ModelConfig, dcfg: DistillConfig,
+                       opt_cfg: adam.AdamWConfig,
+                       step_cfg: StepConfig = StepConfig(),
+                       *, topn: int | None = None) -> Callable:
+    """The paper's training step: teacher+student fused forward, Eq. 11
+    combined loss (Eq. 19 in stage 4), Adam on the student subset."""
+
+    def loss_fn(student, teacher, batch, step):
+        seq = next(iter(batch.values())).shape[1]
+        n = topn if topn is not None else cfg.had.topn(seq)
+        att = {"n": n, "sched": dcfg.schedule, "step": step}
+        out = M.forward_distill(teacher, student, batch, cfg=cfg, att=att)
+        if step_cfg.output_positions == "last":
+            lt, ls = out.teacher_logits[:, -1], out.student_logits[:, -1]
+        else:
+            lt, ls = out.teacher_logits, out.student_logits
+        out_kl = losses.output_kl(lt, ls, valid_size=cfg.vocab_size)
+        use_att = dcfg.use_attention_loss_at(step)
+        loss = losses.combined_distill_loss(out.attention_kl, out_kl,
+                                            use_attention_loss=use_att)
+        loss = loss + step_cfg.moe_aux_weight * out.moe_aux
+        return loss, {"att_kl": out.attention_kl, "out_kl": out_kl,
+                      "moe_aux": out.moe_aux}
+
+    def step_fn(state, batch):
+        step = state["step"]
+        loss, extras, grads = _accumulate_grads(
+            loss_fn, state["student"], batch, step, step_cfg.grad_accum,
+            state["teacher"])
+        if step_cfg.compression.method != "none":
+            grads, new_err = C.compress_grads(grads, state["error"],
+                                              step_cfg.compression)
+        lr = dcfg.lr_at(step)
+        student, opt, om = adam.update(grads, state["opt"], state["student"],
+                                       lr=lr, cfg=opt_cfg)
+        new_state = dict(state, student=student, opt=opt, step=step + 1)
+        if step_cfg.compression.method != "none":
+            new_state["error"] = new_err
+        metrics = {"loss": loss, **extras, **om, "lr": lr,
+                   "stage": dcfg.schedule.stage_at_traced(step),
+                   "c": dcfg.schedule.c_at(step)}
+        return new_state, metrics
+
+    return step_fn
+
+
+# ---------------------------------------------------------------------------
+# sigma estimation driver (paper Eq. 12 / Alg. 1 line 2)
+# ---------------------------------------------------------------------------
+
+def estimate_and_set_sigmas(params: dict, cfg: ModelConfig, batches,
+                            *, n_batches: int = 100) -> dict:
+    """Run inference on `n_batches` minibatches, estimate per-layer sigma_Q
+    and sigma_K (std over all elements, averaged over minibatches), and
+    write them into the params' sigma buffers.
+
+    Implementation detail: rather than hooks, the Q_c/K_c std is computed
+    directly from the attention inputs (norm1 output) and the wq/wk weights
+    per layer, via one captured forward that returns per-layer stats.
+    """
+    import jax.numpy as jnp
+    from repro.models import common
+    from repro.models import transformer as T
+
+    stats_acc: dict[str, list] = {}
+
+    def capture_forward(params, batch):
+        x = T._embed_inputs(params, batch, cfg)
+        img = T._image_context(params, batch, cfg)
+        stats = {}
+
+        def group_fwd(carry, gp):
+            x, gi = carry
+            for i, ch in enumerate(cfg.layer_pattern):
+                p_i = gp[f"pos{i}"]
+                if ch in ("A", "C"):
+                    h = common.rmsnorm(p_i["norm1"], x, eps=cfg.norm_eps)
+                    src = h if ch == "A" else (h, img)
+                    hq = h
+                    hkv = h if ch == "A" else img
+                    q = hq @ p_i["mixer"]["wq"]
+                    k = hkv @ p_i["mixer"]["wk"]
+                    stats[f"pos{i}/q"] = jnp.std(q.astype(jnp.float32))
+                    stats[f"pos{i}/k"] = jnp.std(k.astype(jnp.float32))
+                x, _aux, _m = T._layer_fwd(p_i, x, ch, i, cfg=cfg, mode="std",
+                                           att={}, img=img)
+            return (x, gi + 1), stats
+
+        (_, _), per_group_stats = jax.lax.scan(
+            group_fwd, (x, 0), params["blocks"])
+        return per_group_stats  # each leaf [n_groups]
+
+    cap = jax.jit(capture_forward)
+    count = 0
+    for batch in batches:
+        if count >= n_batches:
+            break
+        st = cap(params, batch)
+        for k, v in st.items():
+            stats_acc.setdefault(k, []).append(v)
+        count += 1
+
+    new_params = jax.tree.map(lambda x: x, params)  # shallow-ish copy
+    blocks = dict(new_params["blocks"])
+    for i, ch in enumerate(cfg.layer_pattern):
+        if ch not in ("A", "C"):
+            continue
+        sq = jnp.mean(jnp.stack(stats_acc[f"pos{i}/q"]), axis=0)  # [n_groups]
+        sk = jnp.mean(jnp.stack(stats_acc[f"pos{i}/k"]), axis=0)
+        pos = dict(blocks[f"pos{i}"])
+        mixer = dict(pos["mixer"])
+        mixer["sigma_q"] = sq.astype(jnp.float32)
+        mixer["sigma_k"] = sk.astype(jnp.float32)
+        pos["mixer"] = mixer
+        blocks[f"pos{i}"] = pos
+    new_params["blocks"] = blocks
+    return new_params

@@ -1,0 +1,182 @@
+"""Tests for attention variants and distillation losses."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.attention as A
+import repro.core.hamming as H
+import repro.core.losses as L
+
+
+def _rand(shape, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, scale, shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def test_kl_zero_when_identical():
+    t = _rand((4, 7), 1)
+    kl = L.kl_divergence(t, t)
+    np.testing.assert_allclose(np.asarray(kl), 0.0, atol=1e-6)
+
+
+def test_kl_positive_and_matches_manual():
+    t = _rand((1, 5), 2)
+    s = _rand((1, 5), 3)
+    got = float(L.kl_divergence(t, s)[0])
+    pt = np.exp(np.asarray(t[0])) / np.exp(np.asarray(t[0])).sum()
+    ps = np.exp(np.asarray(s[0])) / np.exp(np.asarray(s[0])).sum()
+    want = np.sum(pt * (np.log(pt) - np.log(ps)))
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+    assert got > 0
+
+
+def test_kl_with_mask_ignores_masked_entries():
+    t = jnp.asarray([[1.0, 2.0, 99.0]])
+    s = jnp.asarray([[1.0, 2.0, -99.0]])
+    mask = jnp.asarray([[True, True, False]])
+    kl = float(L.kl_divergence(t, s, mask=mask)[0])
+    np.testing.assert_allclose(kl, 0.0, atol=1e-6)
+
+
+def test_attention_kl_row_mean():
+    t = _rand((2, 3, 4, 5), 4)  # [B,H,q,k]
+    s = _rand((2, 3, 4, 5), 5)
+    got = float(L.attention_kl(t, s))
+    per = np.asarray(L.kl_divergence(t, s))
+    np.testing.assert_allclose(got, per.mean(), rtol=1e-6)
+
+
+def test_softmax_cross_entropy_valid_mask():
+    logits = _rand((2, 3, 11), 6)
+    labels = jnp.asarray([[1, 2, 3], [4, 5, 6]])
+    valid = jnp.asarray([[True, True, False], [True, False, False]])
+    got = float(L.softmax_cross_entropy(logits, labels, valid=valid))
+    lp = np.asarray(jax.nn.log_softmax(logits, -1))
+    want = -(lp[0, 0, 1] + lp[0, 1, 2] + lp[1, 0, 4]) / 3
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_combined_loss_stage4_drops_attention_term():
+    att, out = jnp.asarray(3.0), jnp.asarray(1.0)
+    assert float(L.combined_distill_loss(att, out, use_attention_loss=True)) == 4.0
+    assert float(L.combined_distill_loss(att, out, use_attention_loss=False)) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def test_standard_attention_matches_naive():
+    b, h, s, d = 2, 4, 16, 8
+    q, k, v = _rand((b, h, s, d), 1), _rand((b, h, s, d), 2), _rand((b, h, s, d), 3)
+    out = A.standard_attention(q, k, v, scale=d ** -0.5, causal=False)
+    logits = np.einsum("bhqd,bhkd->bhqk", np.asarray(q), np.asarray(k)) * d ** -0.5
+    a = np.exp(logits - logits.max(-1, keepdims=True))
+    a /= a.sum(-1, keepdims=True)
+    want = np.einsum("bhqk,bhkd->bhqd", a, np.asarray(v))
+    np.testing.assert_allclose(np.asarray(out), want, rtol=2e-5, atol=1e-5)
+
+
+def test_standard_attention_causal_ignores_future():
+    b, h, s, d = 1, 2, 8, 4
+    q, k, v = _rand((b, h, s, d), 1), _rand((b, h, s, d), 2), _rand((b, h, s, d), 3)
+    out1 = A.standard_attention(q, k, v, scale=1.0, causal=True)
+    # perturb the future keys/values; first row must not change
+    k2 = k.at[:, :, 4:].set(9.9)
+    v2 = v.at[:, :, 4:].set(-9.9)
+    out2 = A.standard_attention(q, k2, v2, scale=1.0, causal=True)
+    np.testing.assert_allclose(np.asarray(out1[:, :, :4]), np.asarray(out2[:, :, :4]),
+                               rtol=1e-5)
+
+
+def test_gqa_grouping_matches_repeated_kv():
+    b, h, hk, s, d = 1, 8, 2, 10, 4
+    q = _rand((b, h, s, d), 1)
+    k, v = _rand((b, hk, s, d), 2), _rand((b, hk, s, d), 3)
+    out = A.standard_attention(q, k, v, scale=1.0, causal=False)
+    k_rep = jnp.repeat(k, h // hk, axis=1)
+    v_rep = jnp.repeat(v, h // hk, axis=1)
+    want = A.standard_attention(q, k_rep, v_rep, scale=1.0, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5)
+
+
+def test_had_topn_attention_large_n_equals_standard():
+    """With N >= Sk and binarized inputs the sparse path reduces to dense."""
+    b, h, s, d = 1, 2, 12, 8
+    q, k, v = _rand((b, h, s, d), 4), _rand((b, h, s, d), 5), _rand((b, h, s, d), 6)
+    qb = jnp.sign(q)
+    kb = jnp.sign(k)
+    out = A.had_topn_attention(qb, kb, v, n=s, scale=d ** -0.5, causal=False)
+    want = A.standard_attention(qb, kb, v, scale=d ** -0.5, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_had_topn_attention_masks_low_scores():
+    """Output must ignore V rows whose scores are below the top-N cut."""
+    b, h, s, d = 1, 1, 6, 4
+    q = jnp.ones((b, h, 1, d))
+    # keys: two perfectly aligned, rest anti-aligned
+    k = -jnp.ones((b, h, s, d))
+    k = k.at[:, :, 0].set(1.0).at[:, :, 3].set(1.0)
+    v = _rand((b, h, s, d), 7)
+    out = A.had_topn_attention(q, k, v, n=2, scale=1.0, causal=False)
+    want = (v[:, :, 0] + v[:, :, 3]) / 2  # equal logits -> 1/2 each
+    np.testing.assert_allclose(np.asarray(out[:, :, 0]), np.asarray(want), rtol=1e-5)
+
+
+def test_had_infer_matches_had_topn_on_signs():
+    """Packed-bit inference path == dense ±1 train path at STE stage."""
+    b, h, hk, s, d = 2, 4, 2, 16, 32
+    qc, kc = _rand((b, h, s, d), 8), _rand((b, hk, s, d), 9)
+    v = _rand((b, hk, s, d), 10)
+    n = 5
+    scale = d ** -0.5
+    q1, k1 = jnp.sign(qc), jnp.sign(kc)
+    want = A.had_topn_attention(q1, k1, v, n=n, scale=scale, causal=True)
+    qb = H.pack_bits(qc.astype(jnp.float32))
+    kb = H.pack_bits(kc.astype(jnp.float32))
+    got = A.had_infer_attention(qb, kb, v, d=d, n=n, scale=scale, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_distill_pair_attention_agrees_with_unfused():
+    b, h, s, d, n = 1, 2, 32, 8, 4
+    qt, kt, vt = _rand((b, h, s, d), 11), _rand((b, h, s, d), 12), _rand((b, h, s, d), 13)
+    qs, ks, vs = qt * 0.9, kt * 1.1, vt
+    res = A.distill_pair_attention(qt, kt, vt, qs, ks, vs, n=n,
+                                   scale=d ** -0.5, causal=True, q_block=8)
+    want_t = A.standard_attention(qt, kt, vt, scale=d ** -0.5, causal=True)
+    want_s = A.had_topn_attention(qs, ks, vs, n=n, scale=d ** -0.5, causal=True)
+    np.testing.assert_allclose(np.asarray(res.teacher_out), np.asarray(want_t),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(res.student_out), np.asarray(want_s),
+                               rtol=1e-4, atol=1e-5)
+    assert float(res.kl_sum) >= 0
+    assert int(res.row_count) == b * h * s
+
+
+def test_distill_pair_attention_kl_zero_for_identical_models():
+    b, h, s, d = 1, 1, 16, 8
+    q, k, v = _rand((b, h, s, d), 14), _rand((b, h, s, d), 15), _rand((b, h, s, d), 16)
+    res = A.distill_pair_attention(q, k, v, q, k, v, n=s, scale=d ** -0.5,
+                                   causal=True, q_block=8)
+    np.testing.assert_allclose(float(res.kl_sum) / float(res.row_count), 0.0, atol=1e-5)
+
+
+def test_distill_pair_attention_grads_flow_to_student_only_inputs():
+    b, h, s, d = 1, 1, 8, 4
+    qt, kt, vt = _rand((b, h, s, d), 17), _rand((b, h, s, d), 18), _rand((b, h, s, d), 19)
+
+    def loss(qs):
+        res = A.distill_pair_attention(qt, kt, vt, qs, kt, vt, n=4,
+                                       scale=0.5, causal=True, q_block=4)
+        return res.kl_sum / res.row_count + jnp.sum(res.student_out ** 2)
+
+    g = jax.grad(loss)(qt * 1.05)
+    assert np.isfinite(np.asarray(g)).all()
+    assert np.abs(np.asarray(g)).max() > 0

@@ -1,0 +1,100 @@
+"""Unit tests for repro.core.binarize (tanh stages, STE, sigma, schedule)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.binarize as B
+
+
+def test_ste_sign_forward_values():
+    x = jnp.array([-2.0, -0.1, 0.0, 0.3, 5.0])
+    out = B.ste_sign(x)
+    np.testing.assert_array_equal(np.asarray(out), [-1, -1, 1, 1, 1])
+
+
+def test_ste_sign_gradient_clipped_identity():
+    x = jnp.array([-2.0, -0.5, 0.0, 0.5, 2.0])
+    g = jax.grad(lambda x: jnp.sum(B.ste_sign(x)))(x)
+    np.testing.assert_array_equal(np.asarray(g), [0.0, 1.0, 1.0, 1.0, 0.0])
+
+
+def test_stage1_high_c_is_nearly_linear():
+    x = jnp.linspace(-0.5, 0.5, 11)
+    out = B.binarize(x, stage=B.Stage.STAGE1_TANH, c=50.0, sigma=1.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x), atol=1e-4)
+
+
+def test_stage2_low_c_approaches_sign_times_sigma():
+    sigma = 0.7
+    x = jnp.array([-1.0, -0.2, 0.2, 1.0])
+    out = B.binarize(x, stage=B.Stage.STAGE2_TIGHT_TANH, c=0.001, sigma=sigma)
+    np.testing.assert_allclose(np.asarray(out), sigma * np.sign(np.asarray(x)),
+                               rtol=1e-5)
+
+
+def test_stage_boundary_continuity():
+    """Stage 1 at c=1 equals stage 2 at c=1 (paper: 'At c=1 this function is
+    equivalent to the end of stage 1')."""
+    x = jnp.linspace(-3, 3, 31)
+    s1 = B.binarize(x, stage=B.Stage.STAGE1_TANH, c=1.0, sigma=1.3)
+    s2 = B.binarize(x, stage=B.Stage.STAGE2_TIGHT_TANH, c=1.0, sigma=1.3)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+
+
+def test_stage3_is_sigma_times_sign():
+    sigma = 2.0
+    x = jnp.array([-0.3, 0.4, -5.0, 9.0])
+    out = B.binarize(x, stage=B.Stage.STAGE3_STE, c=0.05, sigma=sigma)
+    np.testing.assert_allclose(np.asarray(out), sigma * np.sign(np.asarray(x)))
+
+
+def test_schedule_stage_boundaries_paper_defaults():
+    sched = B.CSchedule()
+    # ln(5)/-ln(0.9998) ~ 8047 steps for stage 1
+    assert 8000 < sched.stage1_end < 8100
+    # stage 2 end is cumulative: ln(100)/-ln(0.9998) ~ 23025 (c: 5 -> 0.05)
+    assert 23000 < sched.stage2_end < 23100
+    assert sched.stage3_end == sched.stage2_end + 10_000
+    assert sched.stage4_end == sched.stage3_end + 10_000
+    assert sched.stage_at(0) == B.Stage.STAGE1_TANH
+    assert sched.stage_at(sched.stage1_end) == B.Stage.STAGE2_TIGHT_TANH
+    assert sched.stage_at(sched.stage2_end) == B.Stage.STAGE3_STE
+    assert sched.stage_at(sched.stage3_end) == B.Stage.STAGE4_REFINE
+
+
+def test_scheduled_binarize_matches_stagewise():
+    sched = B.CSchedule()
+    x = jnp.linspace(-2, 2, 17)
+    for step, stage in [(0, B.Stage.STAGE1_TANH),
+                        (sched.stage1_end + 5, B.Stage.STAGE2_TIGHT_TANH),
+                        (sched.stage2_end + 5, B.Stage.STAGE3_STE)]:
+        want = B.binarize(x, stage=stage, c=sched.c_at(step), sigma=0.9)
+        got = B.binarize_scheduled(x, step=jnp.asarray(step), sched=sched, sigma=0.9)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_scheduled_binarize_jittable_across_stages():
+    sched = B.CSchedule()
+    f = jax.jit(lambda x, step: B.binarize_scheduled(x, step=step, sched=sched, sigma=1.0))
+    x = jnp.ones((4,))
+    for step in [0, sched.stage1_end + 1, sched.stage2_end + 1, sched.stage3_end + 1]:
+        out = f(x, jnp.asarray(step))
+        assert out.shape == x.shape
+        assert not np.any(np.isnan(np.asarray(out)))
+
+
+def test_estimate_sigma_matches_paper_eq12():
+    rng = np.random.default_rng(0)
+    samples = [jnp.asarray(rng.normal(0, 2.0, (16, 8, 4)).astype(np.float32))
+               for _ in range(10)]
+    sig = B.estimate_sigma(samples)
+    want = np.mean([np.std(np.asarray(s)) for s in samples])
+    np.testing.assert_allclose(float(sig), want, rtol=1e-5)
+
+
+def test_tanh_stage_gradients_flow():
+    x = jnp.array([0.1, -0.2, 0.3])
+    for stage, c in [(B.Stage.STAGE1_TANH, 3.0), (B.Stage.STAGE2_TIGHT_TANH, 0.5)]:
+        g = jax.grad(lambda x: jnp.sum(B.binarize(x, stage=stage, c=c, sigma=1.0)))(x)
+        assert np.all(np.asarray(g) > 0)  # tanh' > 0 everywhere

@@ -1,0 +1,157 @@
+"""Tests for bit packing / Hamming scores / top-N (incl. hypothesis sweeps)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core.hamming as H
+import repro.core.topn as T
+
+
+# ---------------------------------------------------------------------------
+# hamming
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("d", [32, 64, 128, 96, 80, 112, 57])
+def test_pack_unpack_roundtrip(d):
+    rng = np.random.default_rng(d)
+    x = jnp.asarray(rng.normal(size=(5, d)).astype(np.float32))
+    pm1 = jnp.where(x >= 0, 1.0, -1.0)
+    bits = H.pack_bits(x)
+    assert bits.dtype == jnp.uint32
+    assert bits.shape == (5, H.packed_words(d))
+    back = H.unpack_bits(bits, d)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(pm1))
+
+
+@pytest.mark.parametrize("d", [32, 64, 128, 112, 57])
+def test_binary_scores_match_dense_dot(d):
+    rng = np.random.default_rng(d + 1)
+    q = jnp.asarray(rng.normal(size=(3, 7, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(3, 9, d)).astype(np.float32))
+    qb, kb = H.pack_bits(q), H.pack_bits(k)
+    got = H.binary_scores(qb, kb, d)
+    q1 = jnp.where(q >= 0, 1.0, -1.0)
+    k1 = jnp.where(k >= 0, 1.0, -1.0)
+    want = H.binary_scores_dense(q1, k1)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(st.integers(1, 200), st.integers(0, 2**32 - 1), st.integers(0, 2**32 - 1))
+@settings(max_examples=30, deadline=None)
+def test_hamming_distance_property(d_seed, a_word, b_word):
+    a = jnp.asarray([a_word], dtype=jnp.uint32)
+    b = jnp.asarray([b_word], dtype=jnp.uint32)
+    got = int(H.hamming_distance(a, b))
+    want = bin(a_word ^ b_word).count("1")
+    assert got == want
+
+
+def test_score_levels_lattice():
+    lv = np.asarray(H.score_levels(6))
+    np.testing.assert_array_equal(lv, [-6, -4, -2, 0, 2, 4, 6])
+
+
+@given(st.integers(2, 6), st.integers(2, 12), st.data())
+@settings(max_examples=25, deadline=None)
+def test_scores_on_lattice(dw, n, data):
+    d = dw * 8
+    rng = np.random.default_rng(data.draw(st.integers(0, 10_000)))
+    q = jnp.asarray(rng.normal(size=(1, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    s = np.asarray(H.binary_scores(H.pack_bits(q), H.pack_bits(k), d))
+    assert np.all(np.abs(s) <= d)
+    assert np.all((s + d) % 2 == 0)  # parity of the lattice
+
+
+# ---------------------------------------------------------------------------
+# topn
+# ---------------------------------------------------------------------------
+
+def _kept_scores(scores, mask):
+    return sorted(np.asarray(scores)[np.asarray(mask)], reverse=True)
+
+
+def test_topn_mask_exact_keeps_top_values():
+    s = jnp.asarray([[5.0, 1.0, 3.0, 2.0, 4.0]])
+    m = T.topn_mask(s, 2)
+    np.testing.assert_array_equal(np.asarray(m), [[True, False, False, False, True]])
+
+
+def test_topn_mask_with_ties_keeps_all_ties():
+    s = jnp.asarray([[3.0, 3.0, 3.0, 1.0]])
+    m = T.topn_mask(s, 2)
+    assert np.asarray(m).sum() == 3  # all three ties kept
+
+
+def test_topn_mask_respects_valid():
+    s = jnp.asarray([[5.0, 9.0, 3.0, 2.0]])
+    valid = jnp.asarray([[True, False, True, True]])
+    m = T.topn_mask(s, 2, valid=valid)
+    np.testing.assert_array_equal(np.asarray(m), [[True, False, True, False]])
+
+
+@pytest.mark.parametrize("d,n,k", [(32, 4, 20), (64, 8, 64), (16, 3, 7), (128, 30, 256)])
+def test_histogram_threshold_matches_exact(d, n, k):
+    rng = np.random.default_rng(n * k)
+    # random lattice scores
+    s = jnp.asarray(rng.integers(0, d + 1, size=(6, k)) * 2 - d, dtype=jnp.int32)
+    m_hist = T.topn_mask_binary(s, n, d)
+    m_exact = T.topn_mask(s.astype(jnp.float32), n)
+    # Both keep-all-ties semantics => identical masks
+    np.testing.assert_array_equal(np.asarray(m_hist), np.asarray(m_exact))
+    # and keep at least min(n, k) elements per row
+    assert np.all(np.asarray(m_hist).sum(-1) >= min(n, k))
+
+
+def test_histogram_threshold_with_valid_mask():
+    d = 8
+    s = jnp.asarray([[8, 6, 6, 4, -8, 2]], dtype=jnp.int32)
+    valid = jnp.asarray([[False, True, True, True, True, True]])
+    m = T.topn_mask_binary(s, 2, d, valid=valid)
+    want = [[False, True, True, False, False, False]]
+    np.testing.assert_array_equal(np.asarray(m), want)
+
+
+def test_threshold_from_histogram_n_larger_than_total():
+    d = 4
+    s = jnp.asarray([[4, -4, 0]], dtype=jnp.int32)
+    m = T.topn_mask_binary(s, 100, d)
+    assert np.asarray(m).all()  # keep everything
+
+
+@given(st.integers(1, 16), st.integers(1, 64), st.integers(0, 5000))
+@settings(max_examples=40, deadline=None)
+def test_histogram_equals_exact_property(n, k, seed):
+    d = 32
+    rng = np.random.default_rng(seed)
+    s = jnp.asarray(rng.integers(0, d + 1, size=(2, k)) * 2 - d, dtype=jnp.int32)
+    m_hist = np.asarray(T.topn_mask_binary(s, n, d))
+    m_exact = np.asarray(T.topn_mask(s.astype(jnp.float32), n))
+    np.testing.assert_array_equal(m_hist, m_exact)
+
+
+def test_sparse_softmax_normalizes_within_mask():
+    logits = jnp.asarray([[1.0, 2.0, 3.0, 4.0]])
+    mask = jnp.asarray([[True, False, True, False]])
+    a = np.asarray(T.sparse_softmax(logits, mask, scale=0.5))
+    assert a[0, 1] == 0 and a[0, 3] == 0
+    np.testing.assert_allclose(a.sum(), 1.0, rtol=1e-6)
+    # values proportional to exp(0.5*logit)
+    np.testing.assert_allclose(a[0, 2] / a[0, 0], np.exp(0.5 * 2.0), rtol=1e-5)
+
+
+def test_sparse_softmax_empty_row_is_zero():
+    logits = jnp.asarray([[1.0, 2.0]])
+    mask = jnp.asarray([[False, False]])
+    a = np.asarray(T.sparse_softmax(logits, mask))
+    np.testing.assert_array_equal(a, [[0.0, 0.0]])
+
+
+def test_scale_n_with_context_paper_points():
+    # paper: N=15 @ 128 ... N=120 @ 1024, N=30 @ 256
+    assert T.scale_n_with_context(128) == 16  # clamped n_min (paper: 15)
+    assert T.scale_n_with_context(256) == 30
+    assert T.scale_n_with_context(1024) == 120
+    assert T.scale_n_with_context(524_288) == 4096  # clamped n_max

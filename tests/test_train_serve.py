@@ -1,0 +1,206 @@
+"""Integration tests: distillation pipeline, training loop fault tolerance,
+serving engine."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.distill import DistillConfig, tiny_schedule
+from repro.data import lm_stream, shard_batches
+from repro.models import ModelConfig
+from repro.models import model as M
+from repro.optim import adam
+from repro.serve import Engine, ServeConfig
+from repro.train import (LoopConfig, StepConfig, build_distill_step,
+                         build_pretrain_step, estimate_and_set_sigmas,
+                         init_distill_state, init_pretrain_state, run)
+
+CFG = ModelConfig(name="it", family="dense", n_layers=2, d_model=32,
+                  n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64,
+                  head_dim=16, param_dtype="float32", q_block=16, remat=False)
+
+
+def _data(batch=4, seq=16, vocab=64):
+    return iter(lm_stream(vocab=vocab, batch=batch, seq=seq, seed=0))
+
+
+def test_pretrain_step_reduces_loss():
+    opt = adam.AdamWConfig(grad_clip=1.0)
+    state = init_pretrain_state(jax.random.PRNGKey(0), CFG, opt)
+    step = jax.jit(build_pretrain_step(CFG, opt, lambda s: 3e-3))
+    data = _data()
+    first = last = None
+    for i in range(30):
+        state, m = step(state, next(data))
+        first = float(m["loss"]) if first is None else first
+        last = float(m["loss"])
+    assert last < first
+
+
+def test_distill_step_runs_all_stages_one_compile():
+    dcfg = DistillConfig(schedule=tiny_schedule(3))
+    opt = adam.AdamWConfig()
+    state = init_distill_state(jax.random.PRNGKey(0), CFG, opt)
+    step = jax.jit(build_distill_step(CFG, dcfg, opt, topn=8))
+    data = _data()
+    seen_stages = set()
+    for i in range(dcfg.total_steps):
+        state, m = step(state, next(data))
+        seen_stages.add(int(m["stage"]))
+        assert np.isfinite(float(m["loss"]))
+    assert seen_stages == {1, 2, 3, 4}
+    # stage 4 must use the low lr
+    assert abs(float(m["lr"]) - dcfg.lr_stage_4) < 1e-12
+
+
+def test_distill_reduces_attention_kl():
+    """Distilling the student against a *perturbed* teacher must reduce the
+    attention KL over stage-1 steps (the Eq. 9 objective is trainable)."""
+    dcfg = DistillConfig(schedule=tiny_schedule(40))
+    opt = adam.AdamWConfig(grad_clip=0.5)
+    state = init_distill_state(jax.random.PRNGKey(1), CFG, opt)
+    # perturb the student so KL starts high
+    state["student"] = jax.tree.map(
+        lambda x: x + 0.3 * jax.random.normal(jax.random.PRNGKey(2), x.shape,
+                                              x.dtype)
+        if x.ndim >= 2 else x, state["student"])
+    step = jax.jit(build_distill_step(CFG, dcfg, opt, topn=8))
+    data = _data()
+    kls = []
+    for i in range(30):
+        state, m = step(state, next(data))
+        kls.append(float(m["att_kl"]))
+    assert np.mean(kls[-5:]) < np.mean(kls[:5]) * 0.9
+
+
+def test_sigma_estimation_updates_buffers():
+    params = M.init_params(jax.random.PRNGKey(3), CFG)
+    # scale wq so sigma_q clearly deviates from 1
+    def scale_wq(path, x):
+        names = [str(getattr(p, "key", p)) for p in path]
+        return x * 5.0 if "wq" in names else x
+    params = jax.tree_util.tree_map_with_path(scale_wq, params)
+    data = _data()
+    new = estimate_and_set_sigmas(params, CFG, data, n_batches=5)
+    sq = np.asarray(new["blocks"]["pos0"]["mixer"]["sigma_q"])
+    sk = np.asarray(new["blocks"]["pos0"]["mixer"]["sigma_k"])
+    assert sq.shape == (CFG.n_groups,)
+    assert np.all(sq > 2 * sk)  # wq scaled 5x => sigma_q >> sigma_k
+
+
+def test_loop_checkpoint_crash_resume_bitexact(tmp_path):
+    """Kill the loop mid-run; a fresh run must resume from the checkpoint
+    and reach the same final state as an uninterrupted run."""
+    opt = adam.AdamWConfig()
+    step = jax.jit(build_pretrain_step(CFG, opt, lambda s: 1e-3))
+
+    def fresh_state():
+        return init_pretrain_state(jax.random.PRNGKey(5), CFG, opt)
+
+    def data():
+        return iter(lm_stream(vocab=64, batch=4, seq=16, seed=7))
+
+    # uninterrupted reference
+    ref = run(step, fresh_state(), data(),
+              LoopConfig(max_steps=8, ckpt_every=100, ckpt_dir=None))
+
+    # crash at step 5
+    ckpt_dir = str(tmp_path / "ck")
+
+    class Boom(Exception):
+        pass
+
+    def bomb(step_i):
+        if step_i == 5:
+            raise Boom()
+
+    with pytest.raises(Boom):
+        run(step, fresh_state(), data(),
+            LoopConfig(max_steps=8, ckpt_every=5, ckpt_dir=ckpt_dir),
+            failure_hook=bomb)
+
+    # restart: resumes from step 5; data iterator replays from the same seed
+    # (deterministic data => skip the consumed batches)
+    d2 = data()
+    for _ in range(5):
+        next(d2)
+    res = run(step, fresh_state(), d2,
+              LoopConfig(max_steps=8, ckpt_every=5, ckpt_dir=ckpt_dir))
+    assert res.resumed_from == 5
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                                rtol=1e-6, atol=1e-7),
+        ref.state["params"], res.state["params"])
+
+
+def test_loop_straggler_detection():
+    import time
+    opt = adam.AdamWConfig()
+    state = init_pretrain_state(jax.random.PRNGKey(6), CFG, opt)
+    step_inner = jax.jit(build_pretrain_step(CFG, opt, lambda s: 1e-3))
+    calls = {"n": 0}
+
+    def slow_step(state, batch):
+        calls["n"] += 1
+        if calls["n"] == 6:
+            time.sleep(1.0)  # inject a straggler step
+        return step_inner(state, batch)
+
+    res = run(slow_step, state, _data(),
+              LoopConfig(max_steps=8, ckpt_every=100, ewma_alpha=0.3))
+    assert res.straggler_events >= 1
+
+
+def test_compression_in_distill_step_still_learns():
+    from repro.distributed.compression import CompressionConfig
+    dcfg = DistillConfig(schedule=tiny_schedule(40))
+    opt = adam.AdamWConfig()
+    scfg = StepConfig(compression=CompressionConfig(method="onebit"))
+    state = init_distill_state(jax.random.PRNGKey(8), CFG, opt, scfg)
+    state["student"] = jax.tree.map(
+        lambda x: x + 0.3 * jax.random.normal(jax.random.PRNGKey(9), x.shape,
+                                              x.dtype)
+        if x.ndim >= 2 else x, state["student"])
+    step = jax.jit(build_distill_step(CFG, dcfg, opt, scfg, topn=8))
+    data = _data()
+    kls = []
+    for i in range(30):
+        state, m = step(state, next(data))
+        kls.append(float(m["att_kl"]))
+    assert np.mean(kls[-5:]) < np.mean(kls[:5])
+
+
+# ---------------------------------------------------------------------------
+# serving engine
+# ---------------------------------------------------------------------------
+
+def test_engine_generate_matches_forward_argmax():
+    params = M.init_params(jax.random.PRNGKey(10), CFG)
+    eng = Engine(CFG, params, ServeConfig(max_len=32, batch_slots=2,
+                                          binary=True, topn=6,
+                                          prefill_chunk=8))
+    prompts = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(11), (2, 12), 0, 64))
+    toks = eng.generate(prompts, steps=3)
+    assert toks.shape == (2, 3)
+    # cross-check first generated token against the full forward
+    full = M.forward(params, {"tokens": jnp.asarray(prompts)}, cfg=CFG,
+                     mode="had_eval", att={"n": 6})
+    want0 = np.asarray(jnp.argmax(full.logits[:, -1], -1))
+    np.testing.assert_array_equal(toks[:, 0], want0)
+
+
+def test_engine_baseline_vs_binary_paths_differ_but_finite():
+    params = M.init_params(jax.random.PRNGKey(12), CFG)
+    prompts = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(13), (2, 8), 0, 64))
+    outs = {}
+    for binary in (False, True):
+        eng = Engine(CFG, params, ServeConfig(max_len=16, batch_slots=2,
+                                              binary=binary, topn=4))
+        logits = eng.prefill(prompts)
+        outs[binary] = np.asarray(logits)
+        assert np.isfinite(outs[binary]).all()
+    assert not np.allclose(outs[False], outs[True])
