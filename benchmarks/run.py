@@ -21,7 +21,8 @@ def main() -> None:
 
     from benchmarks import (fig1_runtime, fig3_topn, fig4_softmax,
                             fig5_quality, kernels_bench, roofline,
-                            table1_glue, table2_imagenet, table3_hardware)
+                            serve_bench, table1_glue, table2_imagenet,
+                            table3_hardware)
 
     fast_kw = dict(steps_teacher=120, steps_per_stage=10, eval_batches=8)
     suites = [
@@ -29,6 +30,8 @@ def main() -> None:
         ("table3_hardware", table3_hardware.run, {}),
         ("fig1_runtime", fig1_runtime.run, {}),
         ("kernels_bench", kernels_bench.run, {}),
+        ("serve_bench", serve_bench.run,
+         dict(slot_counts=(1, 2), n_req=2) if args.fast else {}),
         ("table1_glue", table1_glue.run, fast_kw if args.fast else {}),
         ("table2_imagenet", table2_imagenet.run, fast_kw if args.fast else {}),
         ("fig3_topn", fig3_topn.run,

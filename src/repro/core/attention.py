@@ -59,13 +59,21 @@ def _ungroup(x: Array) -> Array:
 
 def _key_mask(sq: int, sk: int, *, causal: bool, q_offset: Array | int,
               kv_valid: Array | None, batch: int) -> Array | None:
-    """Validity mask [B?, 1, 1, sq, sk] (True = key usable)."""
+    """Validity mask [B?, 1, 1, sq, sk] (True = key usable).
+
+    q_offset may be a scalar (all rows share an offset) or a [B] vector of
+    per-slot offsets (ragged serving batches).
+    """
     mask = None
     if causal:
-        qi = jnp.arange(sq)[:, None] + q_offset
+        q_off = jnp.asarray(q_offset)
         kj = jnp.arange(sk)[None, :]
-        mask = kj <= qi  # [sq, sk]
-        mask = mask[None, None, None]
+        if q_off.ndim == 0:
+            qi = jnp.arange(sq)[:, None] + q_off
+            mask = (kj <= qi)[None, None, None]          # [1,1,1,sq,sk]
+        else:
+            qi = q_off[:, None, None] + jnp.arange(sq)[None, :, None]
+            mask = (kj[None] <= qi)[:, None, None]       # [B,1,1,sq,sk]
     if kv_valid is not None:
         kvm = kv_valid[:, None, None, None, :]  # [B,1,1,1,sk]
         mask = kvm if mask is None else jnp.logical_and(mask, kvm)
@@ -198,7 +206,8 @@ def had_infer_attention(q_bits: Array, k_bits: Array, v: Array, *, d: int,
     """Inference-path HAD attention from packed bits (pure-jnp reference).
 
     q_bits: [B, H, Sq, W] uint32; k_bits: [B, Hk, Sk, W]; v: [B, Hk, Sk, Dv].
-    scale folds sigma_q * sigma_k / sqrt(d_k).
+    scale folds sigma_q * sigma_k / sqrt(d_k). q_offset is a scalar or a
+    [B] vector of per-slot offsets (ragged serving batches).
 
     Mirrors the Pallas kernels' structure 1:1 (tests cross-check): a scan
     over query blocks, each doing two passes over key chunks —
@@ -221,6 +230,8 @@ def had_infer_attention(q_bits: Array, k_bits: Array, v: Array, *, d: int,
     nq, nk = sq // bq, sk // bk
     levels = hamming.score_levels(d)                       # [d+1] ints
     n_arr = jnp.asarray(n, jnp.int32)
+    # per-slot query offsets: scalar broadcasts to every row
+    q_base = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (b,))
 
     k_chunks = k_bits.reshape(b, hk, nk, bk, w)
     v_chunks = v.reshape(b, hk, nk, bk, dv)
@@ -228,16 +239,16 @@ def had_infer_attention(q_bits: Array, k_bits: Array, v: Array, *, d: int,
                        else kv_valid.reshape(b, nk, bk))
 
     def q_blk(args):
-        qb, offset = args                                  # [B,H,bq,W], scalar
+        qb, offset = args                # [B,H,bq,W], block offset (scalar)
         qg = _group(qb, hk)                                # [B,Hk,G,bq,W]
-        qpos = offset + jnp.arange(bq)
+        qpos = q_base[:, None] + offset + jnp.arange(bq)[None]  # [B,bq]
 
         def chunk_valid(ki):
             kpos = ki * bk + jnp.arange(bk)
             val = jnp.ones((b, 1, 1, bq, bk), bool)
             if causal:
-                cm = kpos[None, :] <= qpos[:, None]
-                val = jnp.logical_and(val, cm[None, None, None])
+                cm = kpos[None, None, :] <= qpos[:, :, None]    # [B,bq,bk]
+                val = jnp.logical_and(val, cm[:, None, None])
             if kv_valid_chunks is not None:
                 kvm = kv_valid_chunks[:, ki][:, None, None, None, :]
                 val = jnp.logical_and(val, kvm)
@@ -281,7 +292,7 @@ def had_infer_attention(q_bits: Array, k_bits: Array, v: Array, *, d: int,
         return _ungroup(out)                               # [B,H,bq,Dv]
 
     q_blocks = q_bits.reshape(b, h, nq, bq, w).transpose(2, 0, 1, 3, 4)
-    offsets = q_offset + jnp.arange(nq, dtype=jnp.int32) * bq
+    offsets = jnp.arange(nq, dtype=jnp.int32) * bq         # q_base added in-block
     outs = jax.lax.map(q_blk, (q_blocks, offsets))         # [nq,B,H,bq,Dv]
     out = outs.transpose(1, 2, 0, 3, 4).reshape(b, h, sq, dv)
     return out.astype(v.dtype)

@@ -43,12 +43,13 @@ def _prefill_kernel(len_ref, nsel_ref, scale_ref, qoff_ref,
                     q_ref, k_ref, v_ref, o_ref,
                     hist_ref, thr_ref, num_ref, den_ref, *, d: int,
                     block_q: int, block_t: int, causal: bool):
+    bh = pl.program_id(0)
     qi = pl.program_id(1)
     ph = pl.program_id(2)
     ki = pl.program_id(3)
     nk = pl.num_programs(3)
 
-    q_start = qoff_ref[0] + qi * block_q
+    q_start = qoff_ref[bh] + qi * block_q
     # Skip key blocks strictly in the future of the whole query block.
     if causal:
         block_live = ki * block_t <= q_start + block_q - 1
@@ -66,7 +67,7 @@ def _prefill_kernel(len_ref, nsel_ref, scale_ref, qoff_ref,
         s = _scores_qk(q, k, d)          # [bq, bt]
         qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
         kpos = ki * block_t + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        valid = kpos < len_ref[0]
+        valid = kpos < len_ref[bh]
         if causal:
             valid = jnp.logical_and(valid, kpos <= qpos)
 
@@ -113,7 +114,9 @@ def prefill_attention(q_bits: Array, k_bits_planes: Array, v: Array, *,
         order (query head row b*Hk*G + hk*G + g reads KV row b*Hk + hk).
       k_bits_planes: [BHk, W, T] uint32 K bit-planes.
       v: [BHk, T, Dv] V cache/projections.
-      nsel, scale, kv_length, q_offset: [1]-shaped runtime scalars.
+      nsel, scale: [1]-shaped runtime scalars.
+      kv_length, q_offset: [BH] int32 per-query-row valid cache length and
+        position offset — ragged batches get different values per slot.
       group_size: query heads per KV head (GQA G).
       n_kv_heads: KV heads per batch element (for the GQA index map).
 
@@ -123,6 +126,7 @@ def prefill_attention(q_bits: Array, k_bits_planes: Array, v: Array, *,
     bhk, w2, t = k_bits_planes.shape
     _, t2, dv = v.shape
     assert w == w2 and t == t2 and bh == bhk * group_size
+    assert kv_length.shape == (bh,) and q_offset.shape == (bh,)
     bq, bt = min(block_q, s), min(block_t, t)
     assert s % bq == 0 and t % bt == 0
     kernel = functools.partial(_prefill_kernel, d=d, block_q=bq, block_t=bt,
@@ -137,10 +141,10 @@ def prefill_attention(q_bits: Array, k_bits_planes: Array, v: Array, *,
         kernel,
         grid=(bh, s // bq, 2, t // bt),
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),  # kv_length [1]
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # kv_length [BH]
             pl.BlockSpec(memory_space=pltpu.SMEM),  # nsel [1]
             pl.BlockSpec(memory_space=pltpu.SMEM),  # scale [1]
-            pl.BlockSpec(memory_space=pltpu.SMEM),  # q_offset [1]
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # q_offset [BH]
             pl.BlockSpec((1, bq, w), lambda b, qi, ph, ki: (b, qi, 0)),
             pl.BlockSpec((1, w, bt), lambda b, qi, ph, ki: (kv_row(b), 0, ki)),
             pl.BlockSpec((1, bt, dv), lambda b, qi, ph, ki: (kv_row(b), ki, 0)),

@@ -118,6 +118,8 @@ def prefill_attention(q_bits: Array, k_bits: Array, v: Array, *, d: int,
     """HAD prefill attention over a query chunk.
 
     q_bits: [B, H, S, W]; k_bits: [B, Hk, T, W] row-major; v: [B, Hk, T, Dv].
+    kv_length / q_offset are scalars (uniform batch) or [B] int32 vectors
+    with per-slot cache lengths / position offsets (ragged batch).
     Returns [B, H, S, Dv] float32.
     """
     interpret = default_interpret() if interpret is None else interpret
@@ -132,12 +134,15 @@ def prefill_attention(q_bits: Array, k_bits: Array, v: Array, *, d: int,
     qf = _pad_to(qf, 1, bq)
     kf = _pad_to(to_bitplanes(k_bits).reshape(b * hk, w, t), 2, bt)
     vf = _pad_to(v.reshape(b * hk, t, dv), 1, bt)
+    # flat query row = bi*H + head -> repeat each per-batch scalar H times
+    kv_len = jnp.broadcast_to(jnp.asarray(kv_length, jnp.int32), (b,))
+    q_off = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (b,))
     out = _pre.prefill_attention(
         qf, kf, vf, d=d,
         nsel=jnp.asarray([nsel], dtype=jnp.int32).reshape(1),
         scale=jnp.asarray([scale], dtype=jnp.float32).reshape(1),
-        kv_length=jnp.asarray([kv_length], dtype=jnp.int32).reshape(1),
-        q_offset=jnp.asarray([q_offset], dtype=jnp.int32).reshape(1),
+        kv_length=jnp.repeat(kv_len, h),
+        q_offset=jnp.repeat(q_off, h),
         group_size=g, n_kv_heads=hk, causal=causal, block_q=bq, block_t=bt,
         interpret=interpret)
     return out[:, :s].reshape(b, h, s, dv)

@@ -53,17 +53,18 @@ def prefill_attention_ref(q_bits: Array, k_bits: Array, v: Array, *, d: int,
     """Oracle for binary_prefill_attention.
 
     q_bits: [BH, S, W]; k_bits: [BHk, T, W] row-major; v: [BHk, T, Dv].
+    kv_length / q_offset: scalars or [BH] per-query-row vectors (ragged).
     Returns [BH, S, Dv] float32.
     """
     bh, s, w = q_bits.shape
     t = k_bits.shape[1]
     g = group_size
 
-    def one(qb, kb, vv, qoff):
+    def one(qb, kb, vv, qoff, kvl):
         scores = hamming.binary_scores(qb, kb, d)          # [S, T]
         qpos = qoff + jnp.arange(s)[:, None]
         kpos = jnp.arange(t)[None, :]
-        valid = kpos < kv_length
+        valid = kpos < kvl
         if causal:
             valid = jnp.logical_and(valid, kpos <= qpos)
         valid = jnp.broadcast_to(valid, scores.shape)
@@ -72,5 +73,6 @@ def prefill_attention_ref(q_bits: Array, k_bits: Array, v: Array, *, d: int,
 
     kb_g = jnp.repeat(k_bits, g, axis=0)                   # [BH, T, W]
     v_g = jnp.repeat(v, g, axis=0)
-    qoffs = jnp.full((bh,), q_offset, dtype=jnp.int32)
-    return jax.vmap(one)(q_bits, kb_g, v_g, qoffs)
+    qoffs = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (bh,))
+    kvls = jnp.broadcast_to(jnp.asarray(kv_length, jnp.int32), (bh,))
+    return jax.vmap(one)(q_bits, kb_g, v_g, qoffs, kvls)

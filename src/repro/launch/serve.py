@@ -1,7 +1,9 @@
-"""Serving launcher: batched HAD inference with the packed-bit K cache.
+"""Serving launcher: continuous-batching HAD inference with the packed-bit
+K cache. Drives the scheduler with staggered, mixed-length requests.
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced \
-      --prompt-len 64 --gen 16 --slots 4
+      --prompt-len 64 --gen 16 --slots 4 --requests 8 --len-spread 0.5 \
+      --stagger 2
 """
 from __future__ import annotations
 
@@ -13,16 +15,26 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import model as M
-from repro.serve import Engine, ServeConfig
+from repro.serve import Engine, SamplingParams, ServeConfig
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--prompt-len", type=int, default=64,
+                    help="mean prompt length")
+    ap.add_argument("--len-spread", type=float, default=0.5,
+                    help="prompt lengths drawn from mean*(1±spread)")
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=0,
+                    help="total requests (default: 2x slots)")
+    ap.add_argument("--stagger", type=int, default=2,
+                    help="submit a new request every K decode steps "
+                         "(0: all up front)")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--baseline", action="store_true",
                     help="full-precision attention instead of HAD")
     ap.add_argument("--seed", type=int, default=0)
@@ -32,22 +44,50 @@ def main():
     if cfg.is_encoder:
         raise SystemExit(f"{cfg.name} is encoder-only — no decode loop")
     params = M.init_params(jax.random.PRNGKey(args.seed), cfg)
-    max_len = args.prompt_len + args.gen
+    n_req = args.requests or 2 * args.slots
+    rng = np.random.default_rng(args.seed)
+    lo = max(1, int(args.prompt_len * (1 - args.len_spread)))
+    hi = max(lo + 1, int(args.prompt_len * (1 + args.len_spread)) + 1)
+    lens = rng.integers(lo, hi, size=n_req)
+    prompts = [rng.integers(0, cfg.vocab_size, size=int(s)) for s in lens]
+    max_len = int(max(lens)) + args.gen
     binary = not args.baseline and cfg.had.enabled and cfg.has_attention
     eng = Engine(cfg, params, ServeConfig(max_len=max_len,
                                           batch_slots=args.slots,
                                           binary=binary))
-    rng = np.random.default_rng(args.seed)
-    prompts = rng.integers(0, cfg.vocab_size,
-                           size=(args.slots, args.prompt_len))
+    sampling = SamplingParams(temperature=args.temperature,
+                              top_k=args.top_k, seed=args.seed)
+
     t0 = time.perf_counter()
-    toks = eng.generate(prompts, steps=args.gen)
+    pending = list(range(n_req))
+    results: dict[int, np.ndarray] = {}
+    ids: list[int] = []
+    # staggered arrivals: trickle requests in while resident slots decode
+    warm = args.slots if args.stagger else n_req
+    for i in pending[:warm]:
+        ids.append(eng.submit(prompts[i], max_new_tokens=args.gen,
+                              sampling=sampling))
+    next_req = warm
+    steps = 0
+    while eng.queue or any(s.request is not None for s in eng.slots) \
+            or next_req < n_req:
+        for fr in eng.step():
+            results[fr.request_id] = fr.tokens
+        steps += 1
+        if args.stagger and next_req < n_req and steps % args.stagger == 0:
+            ids.append(eng.submit(prompts[next_req], max_new_tokens=args.gen,
+                                  sampling=sampling))
+            next_req += 1
     dt = time.perf_counter() - t0
-    per_tok = dt / (args.gen * args.slots) * 1e3
-    print(f"arch={cfg.name} binary={binary} N={eng.n} "
-          f"prompt={args.prompt_len} gen={args.gen}x{args.slots}")
-    print(f"tokens:\n{toks}")
-    print(f"wall {dt:.2f}s  ({per_tok:.1f} ms/token/slot on CPU)")
+
+    gen_tok = eng.stats["tokens_generated"]
+    print(f"arch={cfg.name} binary={binary} N={eng.n} slots={args.slots} "
+          f"requests={n_req} prompt_lens={lens.tolist()} gen={args.gen}")
+    for rid in ids:
+        print(f"  req {rid}: {results[rid].tolist()}")
+    print(f"wall {dt:.2f}s  decode_steps={eng.stats['decode_steps']} "
+          f"prefill_chunks={eng.stats['prefill_chunks']} "
+          f"({gen_tok / dt:.1f} generated tok/s)")
 
 
 if __name__ == "__main__":

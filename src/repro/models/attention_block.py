@@ -15,6 +15,7 @@ non-trainable buffers ("sigma_q"/"sigma_k"), excluded by the optimizer mask.
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, NamedTuple
 
 import jax
@@ -202,24 +203,38 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
     }
 
 
+def _cache_write(buf: Array, new: Array, pos: Array, axis: int) -> Array:
+    """Write `new` into `buf` at sequence index `pos` along `axis`.
+
+    pos: scalar (uniform batch) or [B] per-slot start indices — the latter
+    vmaps the dynamic_update_slice over the leading batch axis so every
+    slot writes at its own ragged position.
+    """
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        return jax.lax.dynamic_update_slice_in_dim(buf, new, pos, axis)
+    per_slot = functools.partial(jax.lax.dynamic_update_slice_in_dim,
+                                 axis=axis - 1)
+    return jax.vmap(per_slot)(buf, new, pos)
+
+
 def _update_binary_cache(cache: dict, k: Array, v: Array, pos: Array) -> dict:
-    """k,v: [B, Hk, S_new, Dh]; pos: scalar start index."""
+    """k,v: [B, Hk, S_new, Dh]; pos: scalar or [B] start index."""
     kb = hamming.pack_bits(k.astype(jnp.float32))          # [B,Hk,S,W]
     kb = jnp.swapaxes(kb, -1, -2)                          # bit-planes [B,Hk,W,S]
     cache = dict(cache)
-    cache["k_bits"] = jax.lax.dynamic_update_slice_in_dim(
-        cache["k_bits"], kb, pos, axis=3)
-    cache["v"] = jax.lax.dynamic_update_slice_in_dim(
-        cache["v"], v.astype(cache["v"].dtype), pos, axis=2)
+    cache["k_bits"] = _cache_write(cache["k_bits"], kb, pos, axis=3)
+    cache["v"] = _cache_write(cache["v"], v.astype(cache["v"].dtype), pos,
+                              axis=2)
     return cache
 
 
 def _update_std_cache(cache: dict, k: Array, v: Array, pos: Array) -> dict:
     cache = dict(cache)
-    cache["k"] = jax.lax.dynamic_update_slice_in_dim(
-        cache["k"], k.astype(cache["k"].dtype), pos, axis=2)
-    cache["v"] = jax.lax.dynamic_update_slice_in_dim(
-        cache["v"], v.astype(cache["v"].dtype), pos, axis=2)
+    cache["k"] = _cache_write(cache["k"], k.astype(cache["k"].dtype), pos,
+                              axis=2)
+    cache["v"] = _cache_write(cache["v"], v.astype(cache["v"].dtype), pos,
+                              axis=2)
     return cache
 
 
@@ -228,16 +243,20 @@ def attn_serve(p: dict, x: Array, *, cfg: ModelConfig, cache: dict,
                cross: bool = False) -> tuple[Array, dict]:
     """Prefill (S>1) or decode (S=1) step against a KV cache.
 
-    x: [B, S, D]; pos: scalar int32 — index of x[:, 0] in the sequence.
-    Returns (y [B, S, D], updated cache). Cross-attention layers read a
-    static cache (filled by `fill_cross_cache`) and do not update it.
+    x: [B, S, D]; pos: scalar int32 (uniform batch) or [B] int32 vector of
+    per-slot positions (ragged continuous-batching decode) — the index of
+    x[:, 0] in each slot's sequence. Returns (y [B, S, D], updated cache).
+    Cross-attention layers read a static cache (filled by
+    `fill_cross_cache`) and do not update it.
     """
     b, s, _ = x.shape
     dh = cfg.dh
     h = cfg.n_heads
     q = (x @ p["wq"]).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
     t_max = (cache["v"].shape[2])
-    q_pos = pos + jnp.arange(s)
+    pos = jnp.asarray(pos, jnp.int32)
+    ragged = pos.ndim == 1
+    q_pos = (pos[:, None] if ragged else pos) + jnp.arange(s)
     if not cross:
         hk = cfg.n_kv_heads
         k = (x @ p["wk"]).reshape(b, s, hk, dh).transpose(0, 2, 1, 3)
@@ -256,7 +275,8 @@ def attn_serve(p: dict, x: Array, *, cfg: ModelConfig, cache: dict,
                 y = kops.decode_attention(
                     qb[:, :, 0], cache["k_bits"], cache["v"], d=dh,
                     nsel=n, scale=scale,
-                    lengths=jnp.full((b,), kv_len, jnp.int32),
+                    lengths=jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32),
+                                             (b,)),
                     block_t=cfg.had.kernel_block_t, bitplanes=True)
                 y = y[:, :, None]                          # [B,H,1,Dh]
             else:
@@ -268,8 +288,9 @@ def attn_serve(p: dict, x: Array, *, cfg: ModelConfig, cache: dict,
                     block_t=cfg.had.kernel_block_t)
         else:
             kb_rows = jnp.swapaxes(cache["k_bits"], -1, -2)  # [B,Hk,T,W]
-            kv_valid = (jnp.arange(t_max) < kv_len)[None, :]
-            kv_valid = jnp.broadcast_to(kv_valid, (b, t_max))
+            kv_valid = jnp.broadcast_to(
+                jnp.arange(t_max)[None, :] < jnp.reshape(kv_len, (-1, 1)),
+                (b, t_max))
             y = A.had_infer_attention(qb, kb_rows, cache["v"], d=dh, n=n,
                                       scale=scale,
                                       causal=cfg.causal and not cross,
@@ -279,8 +300,9 @@ def attn_serve(p: dict, x: Array, *, cfg: ModelConfig, cache: dict,
         if not cross:
             cache = _update_std_cache(cache, k, v, pos)
         kv_len = pos + s if not cross else cache.get("len", t_max)
-        kv_valid = (jnp.arange(t_max) < kv_len)[None, :]
-        kv_valid = jnp.broadcast_to(kv_valid, (b, t_max))
+        kv_valid = jnp.broadcast_to(
+            jnp.arange(t_max)[None, :] < jnp.reshape(kv_len, (-1, 1)),
+            (b, t_max))
         y = A.standard_attention(q, cache["k"], cache["v"], scale=scale_t,
                                  causal=cfg.causal and not cross,
                                  q_offset=pos, kv_valid=kv_valid)

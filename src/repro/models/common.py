@@ -47,13 +47,15 @@ def rope_freqs(dh: int, theta: float) -> Array:
 
 
 def apply_rope(x: Array, positions: Array, *, theta: float = 10_000.0) -> Array:
-    """x: [B, H, S, Dh]; positions: [S] or [B, S] int."""
+    """x: [B, H, S, Dh]; positions: [S] or [B, S] int (per-slot offsets)."""
     dh = x.shape[-1]
     freqs = rope_freqs(dh, theta)                       # [Dh/2]
     ang = positions[..., :, None].astype(jnp.float32) * freqs  # [(B,)S,Dh/2]
     cos, sin = jnp.cos(ang), jnp.sin(ang)
-    while cos.ndim < x.ndim:  # broadcast to [B?, 1(H), S, Dh/2]
-        cos, sin = cos[None], sin[None]
+    if cos.ndim == 3:  # per-batch positions: insert the head axis
+        cos, sin = cos[:, None], sin[:, None]           # [B,1,S,Dh/2]
+    while cos.ndim < x.ndim:
+        cos, sin = cos[None], sin[None]                 # [1,1,S,Dh/2]
     x1, x2 = x[..., 0::2].astype(jnp.float32), x[..., 1::2].astype(jnp.float32)
     y1 = x1 * cos - x2 * sin
     y2 = x2 * cos + x1 * sin

@@ -334,14 +334,23 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int, *,
 
 def serve_step(params: dict, batch: dict, caches: dict, *, cfg: ModelConfig,
                pos: Array, n: int, binary: bool,
-               logits_mode: str = "all") -> tuple[Array, dict]:
+               logits_mode: str = "all",
+               active: Array | None = None) -> tuple[Array, dict]:
     """Prefill (tokens [B, S>1]) or decode (tokens [B, 1]) against caches.
 
     Returns (logits [B, S, V], updated caches). `pos` is the index of the
-    first token of this chunk in the global sequence. logits_mode="last"
+    first token of this chunk in the global sequence — a scalar when every
+    slot is at the same position, or a [B] int32 vector of per-slot
+    positions (ragged continuous-batching decode). logits_mode="last"
     computes the head for the final position only — a 32k-token prefill
     otherwise outputs B*S*V f32 logits (537 GB for the llama-vision cell);
     serving only needs the last position.
+
+    `active` ([B] bool, optional) masks cache/state updates per slot: rows
+    where active is False keep their previous KV cache and SSM state, so
+    freed or mid-admission slots can ride along in a batched step without
+    corrupting resident state. Their logits are still computed (garbage —
+    callers must mask them).
     """
     x = constrain(_embed_inputs(params, batch, cfg), "b..")
     img = _image_context(params, batch, cfg)
@@ -380,6 +389,13 @@ def serve_step(params: dict, batch: dict, caches: dict, *, cfg: ModelConfig,
         return x, new_cache
 
     x, new_caches = jax.lax.scan(group_fwd, x, (params["blocks"], caches))
+    if active is not None:
+        # per-slot select: inactive slots keep their old cache/state
+        # (cache leaves are [n_groups, B, ...] -> batch axis 1)
+        def _sel(new, old):
+            m = active.reshape((1, active.shape[0]) + (1,) * (new.ndim - 2))
+            return jnp.where(m, new, old)
+        new_caches = jax.tree.map(_sel, new_caches, caches)
     if logits_mode == "last":
         x = x[:, -1:]
     x = common.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)

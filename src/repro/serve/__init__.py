@@ -1,2 +1,3 @@
-"""Serving: slot-batched engine over the HAD binary-cache inference path."""
-from repro.serve.engine import Engine, ServeConfig
+"""Serving: continuous-batching engine over the HAD binary-cache path."""
+from repro.serve.engine import (Engine, FinishedRequest, Request,
+                                SamplingParams, ServeConfig)

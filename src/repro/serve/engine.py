@@ -1,17 +1,36 @@
-"""Batched serving engine over the HAD inference path.
+"""Continuous-batching serving engine over the HAD inference path.
 
-Slot-based continuous batching (vLLM-lite): `batch_slots` fixed sequence
-slots share one jitted decode step; finished/empty slots keep decoding
-padding tokens (masked out of results) and are re-filled by new requests
-between steps. Prefill runs chunked so arbitrarily long prompts stream
-through the fused prefill kernel with bounded live memory.
+The engine is a slot scheduler (vLLM-lite) around one jitted serve step:
+
+  * `submit()` enqueues a `Request` (prompt of any length, per-request
+    sampling params / stop conditions). Requests arrive at any time —
+    including between decode steps of resident slots.
+  * `step()` first ADMITS queued requests into free slots: each admission
+    runs a chunked prefill of that slot alone (batch-1 step against a fresh
+    per-slot cache, then written into the slot's rows of the shared cache),
+    so resident slots are never restarted or recomputed. It then runs ONE
+    batched decode step for every active slot with a per-slot position
+    vector `pos: [B]` — slots sit at different sequence positions (ragged
+    batch); freed/empty slots ride along with their cache updates masked
+    out (`active: [B]`).
+  * Per-slot stop conditions (max_new_tokens / eos) free a slot the moment
+    its request finishes; the next `step()` re-fills it from the queue.
+  * `run()` loops until the queue and all slots are drained.
+
+Sampling is pluggable per request: greedy (temperature=0) or
+temperature softmax with optional top-k, seeded per request.
 
 The binary path stores the K cache bit-packed (16x smaller than bf16) and
 top-N-sparsifies the V accumulation — the paper's long-context serving
-story end-to-end.
+story end-to-end. All positions/lengths are int32 (the kernels' dtype).
+
+The low-level `prefill()` / `decode()` methods remain for lockstep use
+(uniform-length batches driven by hand) and for tests; `generate()` is a
+convenience that routes through the scheduler.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 from typing import Any
@@ -35,6 +54,71 @@ class ServeConfig:
     prefill_chunk: int = 512
 
 
+@dataclasses.dataclass
+class SamplingParams:
+    temperature: float = 0.0       # 0 -> greedy argmax
+    top_k: int = 0                 # 0 -> full vocab
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. `tokens` is the [S] int prompt."""
+    tokens: np.ndarray
+    max_new_tokens: int = 16
+    eos_token: int | None = None
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    extra: dict | None = None      # per-request model inputs, batch dim 1
+    request_id: int = -1           # assigned by Engine.submit
+
+
+@dataclasses.dataclass
+class FinishedRequest:
+    request_id: int
+    prompt_len: int
+    tokens: np.ndarray             # generated tokens (includes eos if hit)
+
+
+@dataclasses.dataclass
+class _Slot:
+    request: Request | None = None
+    length: int = 0                # valid cache length (tokens written)
+    next_token: int = 0            # pending token to feed next decode
+    generated: list[int] = dataclasses.field(default_factory=list)
+    rng: Any = None
+
+
+def _sample_token(logits: np.ndarray, sp: SamplingParams, rng) -> int:
+    if sp.temperature <= 0.0:
+        return int(np.argmax(logits))
+    l = logits.astype(np.float64) / sp.temperature
+    if 0 < sp.top_k < l.size:
+        kth = np.partition(l, -sp.top_k)[-sp.top_k]
+        l = np.where(l >= kth, l, -np.inf)
+    l -= l.max()
+    p = np.exp(l)
+    p /= p.sum()
+    return int(rng.choice(l.size, p=p))
+
+
+def _chunk_extra(extra: dict | None, s: int, lo: int, hi: int) -> dict:
+    """Route extra model inputs into the [lo, hi) prefill chunk.
+
+    `image_embeds` fills the (static, persisted) cross cache — first chunk
+    only. Sequence-aligned arrays (axis 1 == prompt length, e.g. `frames`)
+    are sliced to the chunk so no chunk silently drops them. Anything else
+    rides with the first chunk.
+    """
+    out: dict[str, Any] = {}
+    for key, val in (extra or {}).items():
+        arr = jnp.asarray(val)
+        if key != "image_embeds" and arr.ndim >= 2 and arr.shape[1] == s:
+            out[key] = arr[:, lo:hi]
+        elif lo == 0:
+            out[key] = arr
+    return out
+
+
 class Engine:
     def __init__(self, cfg: ModelConfig, params: dict, scfg: ServeConfig):
         self.cfg = cfg
@@ -43,51 +127,214 @@ class Engine:
         self.n = scfg.topn if scfg.topn is not None else cfg.had.topn(scfg.max_len)
         self.caches = M.init_caches(cfg, scfg.batch_slots, scfg.max_len,
                                     binary=scfg.binary)
-        self.lengths = np.zeros(scfg.batch_slots, dtype=np.int64)
+        self.slots = [_Slot() for _ in range(scfg.batch_slots)]
+        self.queue: collections.deque[Request] = collections.deque()
+        self._finished: list[FinishedRequest] = []
+        self._next_id = 0
+        self.stats = {"decode_steps": 0, "prefill_chunks": 0,
+                      "prefill_tokens": 0, "tokens_generated": 0}
 
         @functools.partial(jax.jit, static_argnames=("n", "binary"))
-        def _step(params, batch, caches, pos, *, n, binary):
+        def _step(params, batch, caches, pos, active, *, n, binary):
             return M.serve_step(params, batch, caches, cfg=cfg, pos=pos,
-                                n=n, binary=binary, logits_mode="last")
+                                n=n, binary=binary, logits_mode="last",
+                                active=active)
         self._step = _step
 
     # ------------------------------------------------------------------
-    def prefill(self, tokens: np.ndarray, extra: dict | None = None) -> Array:
-        """tokens: [batch_slots, S] prompt batch. Returns last logits."""
-        s = tokens.shape[1]
-        chunk = min(self.scfg.prefill_chunk, s)
+    # scheduler API
+    # ------------------------------------------------------------------
+    def submit(self, tokens: np.ndarray | Request, max_new_tokens: int = 16,
+               *, eos_token: int | None = None,
+               sampling: SamplingParams | None = None,
+               extra: dict | None = None) -> int:
+        """Enqueue a request; returns its request_id. May be called at any
+        time — admission happens at the next `step()` if a slot is free."""
+        if isinstance(tokens, Request):
+            req = dataclasses.replace(tokens)  # own copy: never alias caller
+        else:
+            req = Request(tokens=np.asarray(tokens, np.int32),
+                          max_new_tokens=max_new_tokens, eos_token=eos_token,
+                          sampling=sampling or SamplingParams(), extra=extra)
+        # copy (np.array, not asarray): the queued prompt must not alias a
+        # caller buffer that may be reused before admission
+        req.tokens = np.array(req.tokens, np.int32).reshape(-1)
+        if req.tokens.size < 1:
+            raise ValueError("empty prompt")
+        if req.tokens.size + req.max_new_tokens > self.scfg.max_len:
+            raise ValueError(
+                f"prompt ({req.tokens.size}) + max_new_tokens "
+                f"({req.max_new_tokens}) exceeds max_len {self.scfg.max_len}")
+        req.request_id = self._next_id
+        self._next_id += 1
+        self.queue.append(req)
+        return req.request_id
+
+    def step(self) -> list[FinishedRequest]:
+        """Admit queued requests into free slots, then run one batched
+        ragged decode step for all active slots. Returns newly finished
+        requests."""
+        for i, slot in enumerate(self.slots):
+            if slot.request is None and self.queue:
+                self._admit(i, self.queue.popleft())
+        active = np.array([s.request is not None for s in self.slots])
+        if active.any():
+            tokens = np.array([s.next_token if s.request else 0
+                               for s in self.slots], np.int32)
+            pos = np.array([s.length for s in self.slots], np.int32)
+            logits, self.caches = self._step(
+                self.params, {"tokens": jnp.asarray(tokens)[:, None]},
+                self.caches, jnp.asarray(pos), jnp.asarray(active),
+                n=self.n, binary=self.scfg.binary)
+            logits = np.asarray(logits[:, 0, :self.cfg.vocab_size])
+            self.stats["decode_steps"] += 1
+            for i, slot in enumerate(self.slots):
+                if slot.request is None:
+                    continue
+                slot.length += 1
+                tok = _sample_token(logits[i], slot.request.sampling, slot.rng)
+                self._push_token(i, slot, tok)
+        return self._drain_finished()
+
+    def run(self) -> dict[int, np.ndarray]:
+        """Step until queue and slots drain; returns request_id -> tokens."""
+        out: dict[int, np.ndarray] = {}
+        while self.queue or any(s.request is not None for s in self.slots):
+            for fr in self.step():
+                out[fr.request_id] = fr.tokens
+        for fr in self._drain_finished():
+            out[fr.request_id] = fr.tokens
+        return out
+
+    # ------------------------------------------------------------------
+    # internals
+    # ------------------------------------------------------------------
+    def _chunked_prefill(self, tokens2d: np.ndarray, extra: dict | None,
+                         caches: dict, active) -> tuple[Array, dict]:
+        """Chunked prefill of tokens2d [B, S] against `caches`; returns
+        (last-position logits, updated caches). Shared by slot admission
+        (B=1) and the lockstep `prefill()` (B=batch_slots)."""
+        b, s = tokens2d.shape
+        chunk = max(1, min(self.scfg.prefill_chunk, s))
         logits = None
         pos = 0
         while pos < s:
             end = min(pos + chunk, s)
-            batch = {"tokens": jnp.asarray(tokens[:, pos:end])}
-            if extra and pos == 0:
-                batch.update(extra)
-            logits, self.caches = self._step(
-                self.params, batch, self.caches, jnp.asarray(pos, jnp.int32),
-                n=self.n, binary=self.scfg.binary)
+            batch = {"tokens": jnp.asarray(tokens2d[:, pos:end])}
+            batch.update(_chunk_extra(extra, s, pos, end))
+            logits, caches = self._step(
+                self.params, batch, caches, jnp.asarray(pos, jnp.int32),
+                active, n=self.n, binary=self.scfg.binary)
+            self.stats["prefill_chunks"] += 1
+            self.stats["prefill_tokens"] += (end - pos) * b
             pos = end
-        self.lengths[:] = s
+        return logits, caches
+
+    def _admit(self, i: int, req: Request) -> None:
+        """Chunk-prefill `req` into slot i without touching other slots.
+
+        Runs batch-1 steps against a fresh single-slot cache, then writes
+        the result into the slot's rows of the shared cache (cache leaves
+        are [n_groups, B, ...] -> batch axis 1). Resident slots keep
+        decoding state untouched; they simply wait out the admission.
+        """
+        s = int(req.tokens.size)
+        cache1 = M.init_caches(self.cfg, 1, self.scfg.max_len,
+                               binary=self.scfg.binary)
+        logits, cache1 = self._chunked_prefill(
+            req.tokens[None], req.extra, cache1, jnp.ones((1,), bool))
+        self.caches = jax.tree.map(
+            lambda full, one: full.at[:, i:i + 1].set(one),
+            self.caches, cache1)
+        slot = self.slots[i]
+        slot.request = req
+        slot.length = s
+        slot.generated = []
+        slot.rng = np.random.default_rng(req.sampling.seed)
+        if req.max_new_tokens == 0:
+            self._finish(i)
+            return
+        tok = _sample_token(np.asarray(logits[0, -1, :self.cfg.vocab_size]),
+                            req.sampling, slot.rng)
+        self._push_token(i, slot, tok)
+
+    def _push_token(self, i: int, slot: _Slot, tok: int) -> None:
+        slot.generated.append(tok)
+        slot.next_token = tok
+        self.stats["tokens_generated"] += 1
+        req = slot.request
+        if (len(slot.generated) >= req.max_new_tokens
+                or (req.eos_token is not None and tok == req.eos_token)):
+            self._finish(i)
+
+    def _finish(self, i: int) -> None:
+        slot = self.slots[i]
+        self._finished.append(FinishedRequest(
+            request_id=slot.request.request_id,
+            prompt_len=int(slot.request.tokens.size),
+            tokens=np.asarray(slot.generated, np.int32)))
+        slot.request = None          # slot freed; cache masked via `active`
+
+    def _drain_finished(self) -> list[FinishedRequest]:
+        out, self._finished = self._finished, []
+        return out
+
+    # ------------------------------------------------------------------
+    # low-level lockstep API (uniform batches, hand-driven)
+    # ------------------------------------------------------------------
+    def prefill(self, tokens: np.ndarray, extra: dict | None = None) -> Array:
+        """Uniform-length batched prefill of ALL slots at once.
+
+        tokens: [batch_slots, S]. Resets every slot (any resident requests
+        are dropped). Returns last-position logits [batch_slots, V]."""
+        tokens = np.asarray(tokens, np.int32)
+        b, s = tokens.shape
+        assert b == self.scfg.batch_slots, (b, self.scfg.batch_slots)
+        self.caches = M.init_caches(self.cfg, b, self.scfg.max_len,
+                                    binary=self.scfg.binary)
+        logits, self.caches = self._chunked_prefill(
+            tokens, extra, self.caches, jnp.ones((b,), bool))
+        for slot in self.slots:
+            slot.request = None
+            slot.length = s
         return logits[:, -1, :self.cfg.vocab_size]  # logits_mode="last": S==1
 
     def decode(self, tokens: np.ndarray) -> Array:
-        """One decode step for every slot. tokens: [batch_slots] int."""
-        pos = int(self.lengths[0])
-        batch = {"tokens": jnp.asarray(tokens)[:, None]}
+        """One ragged decode step for every slot. tokens: [batch_slots] int.
+        Slots may sit at different positions (per-slot `pos` vector)."""
+        pos = np.array([s.length for s in self.slots], np.int32)
+        if (pos >= self.scfg.max_len).any():
+            raise ValueError(f"slot cache full (max_len={self.scfg.max_len})")
+        b = self.scfg.batch_slots
+        batch = {"tokens": jnp.asarray(np.asarray(tokens, np.int32))[:, None]}
         logits, self.caches = self._step(
-            self.params, batch, self.caches, jnp.asarray(pos, jnp.int32),
-            n=self.n, binary=self.scfg.binary)
-        self.lengths += 1
+            self.params, batch, self.caches, jnp.asarray(pos),
+            jnp.ones((b,), bool), n=self.n, binary=self.scfg.binary)
+        for slot in self.slots:
+            slot.length += 1
         return logits[:, 0, :self.cfg.vocab_size]
 
-    def generate(self, prompts: np.ndarray, steps: int,
+    @property
+    def lengths(self) -> np.ndarray:
+        """Per-slot valid cache lengths, int32 (kernel dtype)."""
+        return np.array([s.length for s in self.slots], np.int32)
+
+    # ------------------------------------------------------------------
+    def generate(self, prompts, steps: int,
                  extra: dict | None = None) -> np.ndarray:
-        """Greedy generation: [slots, S] prompts -> [slots, steps] tokens."""
-        logits = self.prefill(prompts, extra=extra)
-        out = []
-        tok = np.asarray(jnp.argmax(logits, -1))
-        for _ in range(steps):
-            out.append(tok)
-            logits = self.decode(tok)
-            tok = np.asarray(jnp.argmax(logits, -1))
-        return np.stack(out, axis=1)
+        """Greedy generation through the scheduler.
+
+        prompts: [R, S] array or a list of R 1-D prompts of any lengths
+        (R may exceed batch_slots — overflow requests queue and re-fill
+        slots as earlier ones finish). Returns [R, steps] tokens in
+        submission order."""
+        rows = [np.asarray(p, np.int32) for p in prompts]
+        ids = []
+        for i, row in enumerate(rows):
+            req_extra = None
+            if extra is not None:
+                req_extra = {k: np.asarray(v)[i:i + 1] for k, v in extra.items()}
+            ids.append(self.submit(row, max_new_tokens=steps,
+                                   extra=req_extra))
+        results = self.run()
+        return np.stack([results[rid] for rid in ids], axis=0)

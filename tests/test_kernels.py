@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import hamming
 from repro.kernels import ops, ref
@@ -204,6 +204,28 @@ def test_prefill_padded_s_and_t():
 def test_prefill_kv_length_masks_tail():
     _prefill_case(b=1, h=2, hk=1, s=16, t=64, d=32, dv=8, nsel=4,
                   kv_length=20, causal=False, seed=33)
+
+
+def test_prefill_ragged_per_batch_lengths_and_offsets():
+    """Per-batch kv_length/q_offset vectors == per-slot scalar calls."""
+    b, h, hk, s, t, d, dv, nsel = 3, 2, 1, 16, 64, 32, 8, 6
+    qb = _bits((b, h, s, d), 41)
+    kb = _bits((b, hk, t, d), 42)
+    rng = np.random.default_rng(43)
+    v = jnp.asarray(rng.normal(size=(b, hk, t, dv)).astype(np.float32))
+    scale = 1.0 / np.sqrt(d)
+    kv_len = jnp.asarray([20, 48, 33], jnp.int32)
+    q_off = jnp.asarray([4, 32, 17], jnp.int32)
+    got = ops.prefill_attention(qb, kb, v, d=d, nsel=nsel, scale=scale,
+                                kv_length=kv_len, q_offset=q_off,
+                                block_q=16, block_t=16, interpret=True)
+    for i in range(b):
+        one = ops.prefill_attention(
+            qb[i:i + 1], kb[i:i + 1], v[i:i + 1], d=d, nsel=nsel,
+            scale=scale, kv_length=int(kv_len[i]), q_offset=int(q_off[i]),
+            block_q=16, block_t=16, interpret=True)
+        np.testing.assert_allclose(np.asarray(got[i]), np.asarray(one[0]),
+                                   rtol=2e-5, atol=2e-5)
 
 
 def test_prefill_bf16_values():

@@ -1,0 +1,251 @@
+"""Ragged continuous-batching serving tests.
+
+The load-bearing property: a slot's outputs depend only on its own request
+— never on batch composition, other slots' positions, admissions, or
+re-fills. Every test cross-checks the ragged scheduler against sequential
+one-request-at-a-time serving (binary and full-precision paths).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig
+from repro.models import common
+from repro.models import model as M
+from repro.models.config import HADConfig
+from repro.serve import Engine, Request, SamplingParams, ServeConfig
+
+CFG = ModelConfig(name="rag", family="dense", n_layers=2, d_model=32,
+                  n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64,
+                  head_dim=16, param_dtype="float32", q_block=16, remat=False)
+KCFG = dataclasses.replace(
+    CFG, had=HADConfig(use_kernels=True, kernel_block_q=8, kernel_block_t=16))
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(jax.random.PRNGKey(10), CFG)
+
+
+def _scfg(slots, binary, max_len=48, chunk=8):
+    return ServeConfig(max_len=max_len, batch_slots=slots, binary=binary,
+                       topn=6, prefill_chunk=chunk)
+
+
+def _sequential(cfg, params, prompts, steps, binary):
+    outs = []
+    for p in prompts:
+        eng = Engine(cfg, params, _scfg(1, binary))
+        rid = eng.submit(p, max_new_tokens=steps)
+        outs.append(eng.run()[rid])
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# ragged batches == sequential reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("binary", [True, False])
+def test_mixed_lengths_match_sequential(params, binary):
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 64, n) for n in (13, 5, 9)]
+    eng = Engine(CFG, params, _scfg(3, binary))
+    ids = [eng.submit(p, max_new_tokens=5) for p in prompts]
+    got = eng.run()
+    want = _sequential(CFG, params, prompts, 5, binary)
+    for rid, w in zip(ids, want):
+        np.testing.assert_array_equal(got[rid], w)
+
+
+def test_mixed_lengths_match_sequential_kernel_path():
+    params = M.init_params(jax.random.PRNGKey(10), KCFG)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, 64, n) for n in (12, 7)]
+    eng = Engine(KCFG, params, _scfg(2, True))
+    ids = [eng.submit(p, max_new_tokens=4) for p in prompts]
+    got = eng.run()
+    want = _sequential(KCFG, params, prompts, 4, True)
+    for rid, w in zip(ids, want):
+        np.testing.assert_array_equal(got[rid], w)
+
+
+def test_hybrid_ssm_ragged_matches_sequential():
+    """Per-slot SSM decode state (h + conv) survives ragged batching,
+    masked steps, and slot re-fill in a hybrid attention+Mamba stack."""
+    hcfg = dataclasses.replace(CFG, name="hyb", family="hybrid",
+                               layer_pattern="AM", ssm_state=16,
+                               ssm_head_dim=16, ssm_chunk=8)
+    params = M.init_params(jax.random.PRNGKey(13), hcfg)
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(0, 64, n) for n in (10, 6, 8)]
+    eng = Engine(hcfg, params, _scfg(2, True))
+    ids = [eng.submit(p, max_new_tokens=4) for p in prompts]
+    got = eng.run()
+    want = _sequential(hcfg, params, prompts, 4, True)
+    for rid, w in zip(ids, want):
+        np.testing.assert_array_equal(got[rid], w)
+
+
+@pytest.mark.parametrize("binary", [True, False])
+def test_slot_refill_and_late_arrivals(params, binary):
+    """More requests than slots + a mid-stream arrival: freed slots re-fill
+    without restarting residents, and every request still matches its
+    sequential reference."""
+    rng = np.random.default_rng(2)
+    lens = (11, 4, 7, 9, 6)
+    steps = (3, 7, 4, 5, 4)   # different lifetimes -> staggered frees
+    prompts = [rng.integers(0, 64, n) for n in lens]
+    eng = Engine(CFG, params, _scfg(2, binary))
+    ids = [eng.submit(p, max_new_tokens=s)
+           for p, s in zip(prompts[:4], steps[:4])]
+    got = {}
+    for _ in range(2):        # residents decode a bit...
+        for fr in eng.step():
+            got[fr.request_id] = fr.tokens
+    ids.append(eng.submit(prompts[4], max_new_tokens=steps[4]))  # ...late
+    got.update(eng.run())
+    for p, s, rid in zip(prompts, steps, ids):
+        e1 = Engine(CFG, params, _scfg(1, binary))
+        sid = e1.submit(p, max_new_tokens=s)
+        want = e1.run()[sid]
+        np.testing.assert_array_equal(got[rid], want)
+
+
+def test_refill_does_not_disturb_resident_tokens(params):
+    """A resident slot's token trajectory is identical whether or not a new
+    request was admitted into the other slot mid-stream."""
+    rng = np.random.default_rng(3)
+    pa, pb = rng.integers(0, 64, 10), rng.integers(0, 64, 6)
+
+    def tokens_a(with_b):
+        eng = Engine(CFG, params, _scfg(2, True))
+        rid = eng.submit(pa, max_new_tokens=8)
+        out = {}
+        steps = 0
+        while rid not in out:
+            if with_b and steps == 2:
+                eng.submit(pb, max_new_tokens=2)
+            for fr in eng.step():
+                out[fr.request_id] = fr.tokens
+            steps += 1
+        return out[rid]
+
+    np.testing.assert_array_equal(tokens_a(False), tokens_a(True))
+
+
+# ---------------------------------------------------------------------------
+# scheduler mechanics
+# ---------------------------------------------------------------------------
+
+def test_queue_overflow_and_order(params):
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, 64, 5 + i) for i in range(5)]
+    eng = Engine(CFG, params, _scfg(2, True))
+    ids = [eng.submit(p, max_new_tokens=3) for p in prompts]
+    got = eng.run()
+    assert sorted(got) == sorted(ids)
+    assert all(got[i].shape == (3,) for i in ids)
+
+
+def test_eos_stops_early(params):
+    rng = np.random.default_rng(5)
+    p = rng.integers(0, 64, 8)
+    eng = Engine(CFG, params, _scfg(1, True))
+    rid = eng.submit(p, max_new_tokens=10)
+    first = eng.run()[rid]
+    eos = int(first[2])
+    eng2 = Engine(CFG, params, _scfg(1, True))
+    rid2 = eng2.submit(p, max_new_tokens=10, eos_token=eos)
+    out = eng2.run()[rid2]
+    stop = int(np.argmax(first == eos))      # first occurrence of eos
+    np.testing.assert_array_equal(out, first[:stop + 1])
+    assert out[-1] == eos
+
+
+def test_submit_rejects_oversized(params):
+    eng = Engine(CFG, params, _scfg(1, True, max_len=16))
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros(10, np.int32), max_new_tokens=7)
+
+
+def test_temperature_topk_sampling_seeded(params):
+    rng = np.random.default_rng(6)
+    p = rng.integers(0, 64, 6)
+    sp = SamplingParams(temperature=0.8, top_k=8, seed=123)
+    outs = []
+    for _ in range(2):
+        eng = Engine(CFG, params, _scfg(1, True))
+        rid = eng.submit(Request(tokens=p, max_new_tokens=6, sampling=sp))
+        outs.append(eng.run()[rid])
+    np.testing.assert_array_equal(outs[0], outs[1])  # same seed -> same draw
+    eng = Engine(CFG, params, _scfg(1, True))
+    rid = eng.submit(p, max_new_tokens=6,
+                     sampling=SamplingParams(temperature=0.8, top_k=8,
+                                             seed=7))
+    other = eng.run()[rid]
+    assert not np.array_equal(outs[0], other)  # different seed -> different
+
+
+def test_lengths_dtype_int32(params):
+    eng = Engine(CFG, params, _scfg(2, True))
+    assert eng.lengths.dtype == np.int32
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill extra routing (the dropped-`extra` bug)
+# ---------------------------------------------------------------------------
+
+def test_prefill_chunks_keep_image_embeds():
+    """Prompt longer than prefill_chunk with cross-attention image context:
+    chunked prefill must equal single-chunk prefill (the old engine dropped
+    `extra` after chunk 0 — here the cross cache must survive chunking)."""
+    cfg = dataclasses.replace(
+        CFG, name="vlm", n_layers=2, layer_pattern="AC",
+        n_image_tokens=4, frontend_dim=8)
+    params = M.init_params(jax.random.PRNGKey(11), cfg)
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, 64, 12)
+    img = rng.normal(size=(1, 4, 8)).astype(np.float32)
+    outs = {}
+    for chunk in (4, 16):  # 3 chunks vs single chunk
+        eng = Engine(cfg, params, ServeConfig(max_len=24, batch_slots=1,
+                                              binary=True, topn=6,
+                                              prefill_chunk=chunk))
+        rid = eng.submit(prompt, max_new_tokens=4,
+                         extra={"image_embeds": img})
+        outs[chunk] = eng.run()[rid]
+    np.testing.assert_array_equal(outs[4], outs[16])
+
+
+# ---------------------------------------------------------------------------
+# per-slot RoPE offsets
+# ---------------------------------------------------------------------------
+
+def test_apply_rope_per_batch_positions_match_loop():
+    x = jnp.asarray(np.random.default_rng(8).normal(size=(3, 2, 4, 8))
+                    .astype(np.float32))
+    pos = jnp.asarray([[0, 1, 2, 3], [5, 6, 7, 8], [2, 3, 4, 5]])
+    batched = common.apply_rope(x, pos)
+    for b in range(3):
+        one = common.apply_rope(x[b:b + 1], pos[b])
+        np.testing.assert_allclose(np.asarray(batched[b]),
+                                   np.asarray(one[0]), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# legacy lockstep API still works (and is now ragged-safe)
+# ---------------------------------------------------------------------------
+
+def test_lockstep_prefill_decode(params):
+    prompts = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(12), (2, 8), 0, 64))
+    eng = Engine(CFG, params, _scfg(2, True, max_len=16))
+    logits = eng.prefill(prompts)
+    assert logits.shape == (2, CFG.vocab_size)
+    tok = np.asarray(jnp.argmax(logits, -1))
+    logits2 = eng.decode(tok)
+    assert np.isfinite(np.asarray(logits2)).all()
+    np.testing.assert_array_equal(eng.lengths, [9, 9])
