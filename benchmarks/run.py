@@ -31,7 +31,7 @@ def main() -> None:
         ("fig1_runtime", fig1_runtime.run, {}),
         ("kernels_bench", kernels_bench.run, {}),
         ("serve_bench", serve_bench.run,
-         dict(slot_counts=(1, 2), n_req=2) if args.fast else {}),
+         dict(slot_counts=(1, 2), n_req=2, stagger=2) if args.fast else {}),
         ("table1_glue", table1_glue.run, fast_kw if args.fast else {}),
         ("table2_imagenet", table2_imagenet.run, fast_kw if args.fast else {}),
         ("fig3_topn", fig3_topn.run,

@@ -1,12 +1,21 @@
-"""Serving throughput benchmark: continuous batching across the engine.
+"""Serving benchmark: throughput AND tail latency of the scheduler.
 
-Measures generated tokens/s of the scheduler under (a) slot-count sweep and
-(b) prompt-length skew (uniform vs mixed ragged batch), binary vs baseline
-attention. CPU numbers are correctness-grade (interpret-mode kernel /
-jnp reference path), but the relative trends — slot scaling and the cost
-of ragged admission — are real on any backend.
+Interleaved chunked prefill is a *tail-latency* feature — tokens/s cannot
+see it. So besides the tokens/s slot sweep this harness drives staggered
+mixed-length arrivals and reports per-request TTFT (submit -> first token)
+and inter-token latency (ITL) percentiles p50/p95/p99. A resident slot's
+ITL during a concurrent admission is bounded by one prefill chunk instead
+of a whole prompt.
 
-CSV contract: ``serve_<case>,us_per_token,tok_per_s``.
+CPU numbers are correctness-grade (interpret-mode kernel / jnp reference
+path), but the relative trends — slot scaling, ragged admission cost, and
+the chunk-budget/ITL trade — are real on any backend.
+
+CSV contract: throughput rows keep ``serve_<case>,us_per_token,tok_per_s``;
+latency rows are ``serve_<case>_{ttft|itl}_p{50|95|99},<ms>,ms`` and one
+``serve_<case>_stats,<prefill_chunks>,<decode_steps>`` row per timed case
+(the engine's counters are reset after warm-up, so a jump in chunk or
+step counts flags a scheduling/trace regression).
 """
 from __future__ import annotations
 
@@ -22,6 +31,7 @@ from repro.serve import Engine, ServeConfig
 PROMPT_MEAN = 96
 GEN = 16
 MAX_LEN = 256
+CHUNK = 64       # step() prefill token budget
 
 
 def _prompts(n_req: int, skew: str, rng) -> list[np.ndarray]:
@@ -33,47 +43,145 @@ def _prompts(n_req: int, skew: str, rng) -> list[np.ndarray]:
     return [rng.integers(0, 512, size=int(s)) for s in lens]
 
 
-def _serve_case(params, cfg, *, slots: int, skew: str, binary: bool,
-                n_req: int, seed: int = 0) -> tuple[float, float]:
-    rng = np.random.default_rng(seed)
-    eng = Engine(cfg, params, ServeConfig(max_len=MAX_LEN, batch_slots=slots,
-                                          binary=binary, prefill_chunk=64))
-    prompts = _prompts(n_req, skew, rng)
-    # warm-up: run the identical workload once so every prefill-chunk and
-    # decode trace (incl. each distinct ragged tail-chunk length) is
-    # compiled outside the timed region (jit caches are per-Engine)
-    for p in prompts:
-        eng.submit(p, max_new_tokens=GEN)
-    eng.run()
+def _drive(eng: Engine, prompts: list[np.ndarray], *, stagger: int = 0
+           ) -> dict:
+    """Run the workload, recording per-request token arrival times.
+
+    stagger > 0 trickles one request in every `stagger` scheduler steps
+    after the first slot-filling wave (staggered arrivals — the TTFT/ITL
+    measurement regime); 0 submits everything up front (throughput).
+    Returns {"wall": s, "ttft": [s], "itl": [s], "gen": n_tokens}.
+    """
+    submit_t: dict[int, float] = {}
+    first_t: dict[int, float] = {}
+    last_t: dict[int, float] = {}
+    counts: dict[int, int] = {}
+    itl: list[float] = []
+
+    def _submit(p) -> None:
+        rid = eng.submit(p, max_new_tokens=GEN)
+        submit_t[rid] = time.perf_counter()
+        counts[rid] = 0
+
+    def _record(rid: int, n_tokens: int, now: float) -> None:
+        for k in range(counts[rid], n_tokens):
+            if k == 0:
+                first_t[rid] = now
+            else:
+                itl.append(now - last_t[rid])
+            last_t[rid] = now
+        counts[rid] = n_tokens
+
     t0 = time.perf_counter()
-    for p in prompts:
-        eng.submit(p, max_new_tokens=GEN)
-    eng.run()
-    dt = time.perf_counter() - t0
-    gen = n_req * GEN
-    return dt / gen * 1e6, gen / dt
+    n_first = len(prompts) if not stagger else min(eng.scfg.batch_slots,
+                                                   len(prompts))
+    for p in prompts[:n_first]:
+        _submit(p)
+    nxt, steps = n_first, 0
+    while (eng.queue or any(s.request is not None for s in eng.slots)
+           or nxt < len(prompts)):
+        finished = eng.step()
+        now = time.perf_counter()
+        steps += 1
+        for slot in eng.slots:
+            if slot.request is not None:
+                _record(slot.request.request_id, len(slot.generated), now)
+        for fr in finished:
+            _record(fr.request_id, len(fr.tokens), now)
+        if stagger and nxt < len(prompts) and steps % stagger == 0:
+            _submit(prompts[nxt])
+            nxt += 1
+    wall = time.perf_counter() - t0
+    ttft = [first_t[rid] - submit_t[rid] for rid in sorted(first_t)]
+    if stagger:
+        # the latency regime exists to measure admissions into a BUSY
+        # batch; if nothing trickled in mid-flight the numbers are lies
+        assert nxt > n_first, "staggered regime never fired: need " \
+                              "more requests than slots"
+    return {"wall": wall, "ttft": ttft, "itl": itl,
+            "gen": sum(counts.values())}
 
 
-def run(print_fn=print, slot_counts=(1, 2, 4), n_req: int = 4) -> list[str]:
+def _engine(params, cfg, *, slots: int, binary: bool) -> Engine:
+    return Engine(cfg, params, ServeConfig(max_len=MAX_LEN, batch_slots=slots,
+                                           binary=binary,
+                                           prefill_chunk=CHUNK))
+
+
+def _pcts(xs: list[float]) -> tuple[float, float, float]:
+    ms = np.asarray(xs, np.float64) * 1e3
+    return tuple(float(np.percentile(ms, p)) for p in (50, 95, 99))
+
+
+def _serve_case(params, cfg, *, slots: int, skew: str, binary: bool,
+                n_req: int, stagger: int = 0, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    eng = _engine(params, cfg, slots=slots, binary=binary)
+    prompts = _prompts(n_req, skew, rng)
+    # warm-up: run the identical workload once so the (chunk-length-
+    # agnostic) prefill trace and the decode trace compile outside the
+    # timed region — then RESET the counters so eng.stats reflects only
+    # the timed pass (the old harness double-counted the warm-up)
+    _drive(eng, prompts, stagger=stagger)
+    eng.reset_stats()
+    out = _drive(eng, prompts, stagger=stagger)
+    out["stats"] = dict(eng.stats)
+    return out
+
+
+def run(print_fn=print, slot_counts=(1, 2, 4), n_req: int = 4,
+        stagger: int = 2) -> list[str]:
     csv = []
     cfg = causal_cfg(d=64, layers=2, heads=4)
     params = M.init_params(jax.random.PRNGKey(0), cfg)
-    print_fn(f"serving: prompts~{PROMPT_MEAN}, gen {GEN}, {n_req} requests")
+    print_fn(f"serving: prompts~{PROMPT_MEAN}, gen {GEN}, {n_req} requests, "
+             f"prefill budget {CHUNK} tok/step")
     for binary in (True, False):
         tag = "binary" if binary else "baseline"
         for slots in slot_counts:
-            us, tps = _serve_case(params, cfg, slots=slots, skew="uniform",
-                                  binary=binary, n_req=n_req)
+            r = _serve_case(params, cfg, slots=slots, skew="uniform",
+                            binary=binary, n_req=n_req)
+            us, tps = r["wall"] / r["gen"] * 1e6, r["gen"] / r["wall"]
             print_fn(f"  {tag:8s} slots={slots} uniform: "
                      f"{tps:7.1f} tok/s ({us:.0f} us/tok)")
             csv.append(f"serve_{tag}_s{slots}_uniform,{us:.1f},{tps:.2f}")
-        us, tps = _serve_case(params, cfg, slots=slot_counts[-1],
-                              skew="mixed", binary=binary, n_req=n_req)
-        print_fn(f"  {tag:8s} slots={slot_counts[-1]} mixed:   "
-                 f"{tps:7.1f} tok/s ({us:.0f} us/tok)")
-        csv.append(f"serve_{tag}_s{slot_counts[-1]}_mixed,{us:.1f},{tps:.2f}")
+        # staggered mixed-length arrivals: the latency-percentile case.
+        # More requests than slots, so later arrivals are admitted while
+        # residents decode — the regime interleaved prefill exists for.
+        slots = slot_counts[-1]
+        n_lat = max(n_req, slots + 2)
+        r = _serve_case(params, cfg, slots=slots, skew="mixed",
+                        binary=binary, n_req=n_lat, stagger=stagger)
+        us, tps = r["wall"] / r["gen"] * 1e6, r["gen"] / r["wall"]
+        name = f"serve_{tag}_s{slots}_mixed"
+        csv.append(f"{name},{us:.1f},{tps:.2f}")
+        t50, t95, t99 = _pcts(r["ttft"])
+        i50, i95, i99 = _pcts(r["itl"]) if r["itl"] else (0.0, 0.0, 0.0)
+        print_fn(f"  {tag:8s} slots={slots} mixed+staggered: "
+                 f"{tps:7.1f} tok/s | TTFT p50/p95/p99 "
+                 f"{t50:.1f}/{t95:.1f}/{t99:.1f} ms | ITL "
+                 f"{i50:.1f}/{i95:.1f}/{i99:.1f} ms")
+        for metric, (p50, p95, p99) in (("ttft", (t50, t95, t99)),
+                                        ("itl", (i50, i95, i99))):
+            csv.append(f"{name}_{metric}_p50,{p50:.2f},ms")
+            csv.append(f"{name}_{metric}_p95,{p95:.2f},ms")
+            csv.append(f"{name}_{metric}_p99,{p99:.2f},ms")
+        st = r["stats"]
+        print_fn(f"  {tag:8s} stats (timed pass only): {st}")
+        csv.append(f"{name}_stats,{st['prefill_chunks']},{st['decode_steps']}")
     return csv
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload (CI): 1 slot count, 2 requests")
+    args = ap.parse_args()
+    if args.smoke:
+        lines = run(slot_counts=(2,), n_req=2)
+        assert any("_ttft_p99," in l for l in lines), lines
+        assert any("_stats," in l for l in lines), lines
+        print("smoke ok")
+    else:
+        run()

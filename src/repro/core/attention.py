@@ -202,12 +202,16 @@ def had_infer_attention(q_bits: Array, k_bits: Array, v: Array, *, d: int,
                         n: int, scale: float, causal: bool = True,
                         q_offset: Array | int = 0,
                         kv_valid: Array | None = None,
+                        q_length: Array | None = None,
                         q_block: int = 128, k_chunk: int = 1024) -> Array:
     """Inference-path HAD attention from packed bits (pure-jnp reference).
 
     q_bits: [B, H, Sq, W] uint32; k_bits: [B, Hk, Sk, W]; v: [B, Hk, Sk, Dv].
     scale folds sigma_q * sigma_k / sqrt(d_k). q_offset is a scalar or a
-    [B] vector of per-slot offsets (ragged serving batches).
+    [B] vector of per-slot offsets (ragged serving batches). q_length is
+    an optional [B] vector of valid query counts: rows at or beyond their
+    slot's count are chunk padding and their outputs are zeroed (the
+    Pallas kernel skips those blocks outright).
 
     Mirrors the Pallas kernels' structure 1:1 (tests cross-check): a scan
     over query blocks, each doing two passes over key chunks —
@@ -295,4 +299,7 @@ def had_infer_attention(q_bits: Array, k_bits: Array, v: Array, *, d: int,
     offsets = jnp.arange(nq, dtype=jnp.int32) * bq         # q_base added in-block
     outs = jax.lax.map(q_blk, (q_blocks, offsets))         # [nq,B,H,bq,Dv]
     out = outs.transpose(1, 2, 0, 3, 4).reshape(b, h, sq, dv)
+    if q_length is not None:
+        q_live = jnp.arange(sq)[None, :] < q_length[:, None]       # [B, Sq]
+        out = jnp.where(q_live[:, None, :, None], out, 0.0)
     return out.astype(v.dtype)

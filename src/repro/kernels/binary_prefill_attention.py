@@ -39,7 +39,7 @@ def _scores_qk(q: Array, k: Array, d: int) -> Array:
     return d - 2 * ham
 
 
-def _prefill_kernel(len_ref, nsel_ref, scale_ref, qoff_ref,
+def _prefill_kernel(len_ref, nsel_ref, scale_ref, qoff_ref, qlen_ref,
                     q_ref, k_ref, v_ref, o_ref,
                     hist_ref, thr_ref, num_ref, den_ref, *, d: int,
                     block_q: int, block_t: int, causal: bool):
@@ -50,11 +50,13 @@ def _prefill_kernel(len_ref, nsel_ref, scale_ref, qoff_ref,
     nk = pl.num_programs(3)
 
     q_start = qoff_ref[bh] + qi * block_q
-    # Skip key blocks strictly in the future of the whole query block.
+    # Skip query blocks made entirely of chunk padding (ragged serving:
+    # only qlen_ref[bh] of this row's queries are real) and key blocks
+    # strictly in the future of the whole query block.
+    block_live = qi * block_q < qlen_ref[bh]
     if causal:
-        block_live = ki * block_t <= q_start + block_q - 1
-    else:
-        block_live = jnp.asarray(True)
+        block_live = jnp.logical_and(block_live,
+                                     ki * block_t <= q_start + block_q - 1)
 
     @pl.when((ph == 0) & (ki == 0))
     def _init_hist():
@@ -104,6 +106,7 @@ def _prefill_kernel(len_ref, nsel_ref, scale_ref, qoff_ref,
 def prefill_attention(q_bits: Array, k_bits_planes: Array, v: Array, *,
                       d: int, nsel: Array, scale: Array, kv_length: Array,
                       q_offset: Array, group_size: int, n_kv_heads: int,
+                      q_length: Array | None = None,
                       causal: bool = True,
                       block_q: int = 256, block_t: int = 512,
                       interpret: bool = True) -> Array:
@@ -117,16 +120,23 @@ def prefill_attention(q_bits: Array, k_bits_planes: Array, v: Array, *,
       nsel, scale: [1]-shaped runtime scalars.
       kv_length, q_offset: [BH] int32 per-query-row valid cache length and
         position offset — ragged batches get different values per slot.
+      q_length: optional [BH] int32 per-row count of valid (non-padding)
+        queries; query blocks entirely past a row's count are skipped
+        (their outputs are zeros). None means all S queries are real.
       group_size: query heads per KV head (GQA G).
       n_kv_heads: KV heads per batch element (for the GQA index map).
 
-    Returns: [BH, S, Dv] float32.
+    Returns: [BH, S, Dv] float32. Rows of a partially-valid query block
+    beyond q_length are computed but garbage — callers discard them.
     """
     bh, s, w = q_bits.shape
     bhk, w2, t = k_bits_planes.shape
     _, t2, dv = v.shape
     assert w == w2 and t == t2 and bh == bhk * group_size
     assert kv_length.shape == (bh,) and q_offset.shape == (bh,)
+    if q_length is None:
+        q_length = jnp.full((bh,), s, jnp.int32)
+    assert q_length.shape == (bh,)
     bq, bt = min(block_q, s), min(block_t, t)
     assert s % bq == 0 and t % bt == 0
     kernel = functools.partial(_prefill_kernel, d=d, block_q=bq, block_t=bt,
@@ -145,6 +155,7 @@ def prefill_attention(q_bits: Array, k_bits_planes: Array, v: Array, *,
             pl.BlockSpec(memory_space=pltpu.SMEM),  # nsel [1]
             pl.BlockSpec(memory_space=pltpu.SMEM),  # scale [1]
             pl.BlockSpec(memory_space=pltpu.SMEM),  # q_offset [BH]
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # q_length [BH]
             pl.BlockSpec((1, bq, w), lambda b, qi, ph, ki: (b, qi, 0)),
             pl.BlockSpec((1, w, bt), lambda b, qi, ph, ki: (kv_row(b), 0, ki)),
             pl.BlockSpec((1, bt, dv), lambda b, qi, ph, ki: (kv_row(b), ki, 0)),
@@ -158,4 +169,5 @@ def prefill_attention(q_bits: Array, k_bits_planes: Array, v: Array, *,
             pltpu.VMEM((bq, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(kv_length, nsel, scale, q_offset, q_bits, k_bits_planes, v)
+    )(kv_length, nsel, scale, q_offset, q_length.astype(jnp.int32),
+      q_bits, k_bits_planes, v)

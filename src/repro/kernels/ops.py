@@ -112,6 +112,7 @@ def decode_attention(q_bits: Array, k_bits: Array, v: Array, *, d: int,
 def prefill_attention(q_bits: Array, k_bits: Array, v: Array, *, d: int,
                       nsel: Array | int, scale: Array | float,
                       kv_length: Array | int, q_offset: Array | int = 0,
+                      q_length: Array | int | None = None,
                       causal: bool = True, block_q: int = 256,
                       block_t: int = 512,
                       interpret: bool | None = None) -> Array:
@@ -120,6 +121,9 @@ def prefill_attention(q_bits: Array, k_bits: Array, v: Array, *, d: int,
     q_bits: [B, H, S, W]; k_bits: [B, Hk, T, W] row-major; v: [B, Hk, T, Dv].
     kv_length / q_offset are scalars (uniform batch) or [B] int32 vectors
     with per-slot cache lengths / position offsets (ragged batch).
+    q_length (optional, same scalar/vector convention) is the per-slot
+    count of valid queries in a padded chunk: fully-padded query blocks
+    are skipped in the kernel (zero output rows).
     Returns [B, H, S, Dv] float32.
     """
     interpret = default_interpret() if interpret is None else interpret
@@ -137,12 +141,15 @@ def prefill_attention(q_bits: Array, k_bits: Array, v: Array, *, d: int,
     # flat query row = bi*H + head -> repeat each per-batch scalar H times
     kv_len = jnp.broadcast_to(jnp.asarray(kv_length, jnp.int32), (b,))
     q_off = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (b,))
+    q_len = jnp.broadcast_to(jnp.asarray(s if q_length is None else q_length,
+                                         jnp.int32), (b,))
     out = _pre.prefill_attention(
         qf, kf, vf, d=d,
         nsel=jnp.asarray([nsel], dtype=jnp.int32).reshape(1),
         scale=jnp.asarray([scale], dtype=jnp.float32).reshape(1),
         kv_length=jnp.repeat(kv_len, h),
         q_offset=jnp.repeat(q_off, h),
+        q_length=jnp.repeat(q_len, h),
         group_size=g, n_kv_heads=hk, causal=causal, block_q=bq, block_t=bt,
         interpret=interpret)
     return out[:, :s].reshape(b, h, s, dv)

@@ -49,18 +49,23 @@ def decode_attention_ref(q_bits: Array, k_bits: Array, v: Array, *, d: int,
 def prefill_attention_ref(q_bits: Array, k_bits: Array, v: Array, *, d: int,
                           nsel: int, scale: float, kv_length: int,
                           q_offset: int, group_size: int,
+                          q_length: Array | int | None = None,
                           causal: bool = True) -> Array:
     """Oracle for binary_prefill_attention.
 
     q_bits: [BH, S, W]; k_bits: [BHk, T, W] row-major; v: [BHk, T, Dv].
     kv_length / q_offset: scalars or [BH] per-query-row vectors (ragged).
+    q_length (same convention, optional): valid query count per row —
+    padded query rows at or beyond it are zeroed. The kernel only pins the
+    valid region plus fully-skipped blocks; rows of a partially-valid
+    kernel block are unspecified there, so tests compare the valid prefix.
     Returns [BH, S, Dv] float32.
     """
     bh, s, w = q_bits.shape
     t = k_bits.shape[1]
     g = group_size
 
-    def one(qb, kb, vv, qoff, kvl):
+    def one(qb, kb, vv, qoff, kvl, qlen):
         scores = hamming.binary_scores(qb, kb, d)          # [S, T]
         qpos = qoff + jnp.arange(s)[:, None]
         kpos = jnp.arange(t)[None, :]
@@ -68,11 +73,15 @@ def prefill_attention_ref(q_bits: Array, k_bits: Array, v: Array, *, d: int,
         if causal:
             valid = jnp.logical_and(valid, kpos <= qpos)
         valid = jnp.broadcast_to(valid, scores.shape)
-        return _masked_topn_softmax_av(scores, vv, d=d, nsel=nsel,
-                                       scale=scale, valid=valid)
+        out = _masked_topn_softmax_av(scores, vv, d=d, nsel=nsel,
+                                      scale=scale, valid=valid)
+        q_live = jnp.arange(s)[:, None] < qlen
+        return jnp.where(q_live, out, 0.0)
 
     kb_g = jnp.repeat(k_bits, g, axis=0)                   # [BH, T, W]
     v_g = jnp.repeat(v, g, axis=0)
     qoffs = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (bh,))
     kvls = jnp.broadcast_to(jnp.asarray(kv_length, jnp.int32), (bh,))
-    return jax.vmap(one)(q_bits, kb_g, v_g, qoffs, kvls)
+    qlens = jnp.broadcast_to(jnp.asarray(s if q_length is None else q_length,
+                                         jnp.int32), (bh,))
+    return jax.vmap(one)(q_bits, kb_g, v_g, qoffs, kvls, qlens)

@@ -203,44 +203,74 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
     }
 
 
-def _cache_write(buf: Array, new: Array, pos: Array, axis: int) -> Array:
+def _cache_write(buf: Array, new: Array, pos: Array, axis: int,
+                 n_valid: Array | None = None) -> Array:
     """Write `new` into `buf` at sequence index `pos` along `axis`.
 
     pos: scalar (uniform batch) or [B] per-slot start indices — the latter
     vmaps the dynamic_update_slice over the leading batch axis so every
     slot writes at its own ragged position.
+
+    n_valid ([B] int32, requires vector pos): only the first n_valid tokens
+    of each row's chunk are real — exactly buf[pos : pos+n_valid] is
+    updated and every other cache entry (including past the chunk, when a
+    padded tail chunk would spill beyond the buffer) is preserved
+    bit-for-bit. This is the in-slot admission write: one jitted masked
+    update per chunk, no host-side cache copies.
     """
     pos = jnp.asarray(pos)
     if pos.ndim == 0:
         return jax.lax.dynamic_update_slice_in_dim(buf, new, pos, axis)
-    per_slot = functools.partial(jax.lax.dynamic_update_slice_in_dim,
-                                 axis=axis - 1)
-    return jax.vmap(per_slot)(buf, new, pos)
+    if n_valid is None:
+        per_slot = functools.partial(jax.lax.dynamic_update_slice_in_dim,
+                                     axis=axis - 1)
+        return jax.vmap(per_slot)(buf, new, pos)
+
+    def one(b_row: Array, n_row: Array, p: Array, nv: Array) -> Array:
+        ax = axis - 1
+        t, chunk = b_row.shape[ax], n_row.shape[ax]
+        # clamp like dynamic_update_slice, but roll the chunk so valid
+        # tokens still land at [p, p+nv); wrapped rows are padding and are
+        # masked out below (nv <= t - p always: the engine bounds kv_len)
+        start = jnp.minimum(p, t - chunk)
+        rolled = jnp.roll(n_row, p - start, ax)
+        tmp = jax.lax.dynamic_update_slice_in_dim(b_row, rolled, start, ax)
+        idx = jnp.arange(t)
+        keep = jnp.logical_and(idx >= p, idx < p + nv)
+        shape = [1] * b_row.ndim
+        shape[ax] = t
+        return jnp.where(keep.reshape(shape), tmp, b_row)
+
+    return jax.vmap(one)(buf, new, pos, n_valid.astype(jnp.int32))
 
 
-def _update_binary_cache(cache: dict, k: Array, v: Array, pos: Array) -> dict:
+def _update_binary_cache(cache: dict, k: Array, v: Array, pos: Array,
+                         n_valid: Array | None = None) -> dict:
     """k,v: [B, Hk, S_new, Dh]; pos: scalar or [B] start index."""
     kb = hamming.pack_bits(k.astype(jnp.float32))          # [B,Hk,S,W]
     kb = jnp.swapaxes(kb, -1, -2)                          # bit-planes [B,Hk,W,S]
     cache = dict(cache)
-    cache["k_bits"] = _cache_write(cache["k_bits"], kb, pos, axis=3)
+    cache["k_bits"] = _cache_write(cache["k_bits"], kb, pos, axis=3,
+                                   n_valid=n_valid)
     cache["v"] = _cache_write(cache["v"], v.astype(cache["v"].dtype), pos,
-                              axis=2)
+                              axis=2, n_valid=n_valid)
     return cache
 
 
-def _update_std_cache(cache: dict, k: Array, v: Array, pos: Array) -> dict:
+def _update_std_cache(cache: dict, k: Array, v: Array, pos: Array,
+                      n_valid: Array | None = None) -> dict:
     cache = dict(cache)
     cache["k"] = _cache_write(cache["k"], k.astype(cache["k"].dtype), pos,
-                              axis=2)
+                              axis=2, n_valid=n_valid)
     cache["v"] = _cache_write(cache["v"], v.astype(cache["v"].dtype), pos,
-                              axis=2)
+                              axis=2, n_valid=n_valid)
     return cache
 
 
 def attn_serve(p: dict, x: Array, *, cfg: ModelConfig, cache: dict,
                pos: Array, n: int, binary: bool,
-               cross: bool = False) -> tuple[Array, dict]:
+               cross: bool = False,
+               n_valid: Array | None = None) -> tuple[Array, dict]:
     """Prefill (S>1) or decode (S=1) step against a KV cache.
 
     x: [B, S, D]; pos: scalar int32 (uniform batch) or [B] int32 vector of
@@ -248,6 +278,12 @@ def attn_serve(p: dict, x: Array, *, cfg: ModelConfig, cache: dict,
     x[:, 0] in each slot's sequence. Returns (y [B, S, D], updated cache).
     Cross-attention layers read a static cache (filled by
     `fill_cross_cache`) and do not update it.
+
+    n_valid ([B] int32, optional, vector pos only): per-row count of real
+    tokens in this chunk — the rest is padding so every chunk shape shares
+    one jit trace. Only the valid prefix is written to the cache, the
+    valid cache length becomes pos + n_valid (not pos + S), and padded
+    query rows yield garbage outputs the caller must discard.
     """
     b, s, _ = x.shape
     dh = cfg.dh
@@ -264,11 +300,12 @@ def attn_serve(p: dict, x: Array, *, cfg: ModelConfig, cache: dict,
         q, k = _rope(q, k, q_pos, q_pos, cfg)
 
     scale_t = dh ** -0.5
+    s_new = s if n_valid is None else n_valid                # scalar or [B]
     if binary:
         scale = (p["sigma_q"] * p["sigma_k"]).astype(jnp.float32) * scale_t
         if not cross:
-            cache = _update_binary_cache(cache, k, v, pos)
-        kv_len = pos + s if not cross else cache.get("len", t_max)
+            cache = _update_binary_cache(cache, k, v, pos, n_valid=n_valid)
+        kv_len = pos + s_new if not cross else cache.get("len", t_max)
         qb = hamming.pack_bits(q.astype(jnp.float32))      # [B,H,S,W]
         if cfg.had.use_kernels:
             if s == 1:
@@ -283,7 +320,8 @@ def attn_serve(p: dict, x: Array, *, cfg: ModelConfig, cache: dict,
                 y = kops.prefill_attention(
                     qb, jnp.swapaxes(cache["k_bits"], -1, -2), cache["v"],
                     d=dh, nsel=n, scale=scale, kv_length=kv_len,
-                    q_offset=pos, causal=cfg.causal and not cross,
+                    q_offset=pos, q_length=n_valid,
+                    causal=cfg.causal and not cross,
                     block_q=cfg.had.kernel_block_q,
                     block_t=cfg.had.kernel_block_t)
         else:
@@ -294,12 +332,13 @@ def attn_serve(p: dict, x: Array, *, cfg: ModelConfig, cache: dict,
             y = A.had_infer_attention(qb, kb_rows, cache["v"], d=dh, n=n,
                                       scale=scale,
                                       causal=cfg.causal and not cross,
-                                      q_offset=pos, kv_valid=kv_valid)
+                                      q_offset=pos, kv_valid=kv_valid,
+                                      q_length=n_valid)
         y = y.astype(x.dtype)
     else:
         if not cross:
-            cache = _update_std_cache(cache, k, v, pos)
-        kv_len = pos + s if not cross else cache.get("len", t_max)
+            cache = _update_std_cache(cache, k, v, pos, n_valid=n_valid)
+        kv_len = pos + s_new if not cross else cache.get("len", t_max)
         kv_valid = jnp.broadcast_to(
             jnp.arange(t_max)[None, :] < jnp.reshape(kv_len, (-1, 1)),
             (b, t_max))

@@ -50,10 +50,15 @@ def _split_in(p, x, cfg: ModelConfig):
     return xs, z, bmat, cmat, dt
 
 
-def _conv_causal(xs: Array, w: Array, state: Array | None = None):
+def _conv_causal(xs: Array, w: Array, state: Array | None = None,
+                 n_valid: Array | None = None):
     """Depthwise causal conv, kernel size K. xs: [B, S, Di]; w: [K, Di].
 
     Returns (y, new_state[K-1 last inputs]) so decode can continue.
+    `n_valid` ([B] int32, optional) marks rows whose last S - n_valid inputs
+    are chunk padding: the carried state is then the K-1 inputs ending at
+    each row's last *valid* token, so a padded serving chunk leaves the
+    recurrence exactly where an unpadded one would.
     """
     k = w.shape[0]
     if state is None:
@@ -62,7 +67,14 @@ def _conv_causal(xs: Array, w: Array, state: Array | None = None):
         pad = state.astype(xs.dtype)
     xp = jnp.concatenate([pad, xs], axis=1)              # [B, S+K-1, Di]
     y = sum(xp[:, i:i + xs.shape[1]] * w[i] for i in range(k))
-    new_state = xp[:, -(k - 1):] if k > 1 else pad
+    if k <= 1:
+        new_state = pad
+    elif n_valid is None:
+        new_state = xp[:, -(k - 1):]
+    else:
+        new_state = jax.vmap(
+            lambda row, nv: jax.lax.dynamic_slice_in_dim(row, nv, k - 1, 0)
+        )(xp, n_valid.astype(jnp.int32))
     return jax.nn.silu(y), new_state
 
 
@@ -142,15 +154,27 @@ def ssd_step(xh: Array, dt: Array, bvec: Array, cvec: Array, a: Array,
 
 
 def ssm_forward(p: dict, x: Array, *, cfg: ModelConfig,
-                state: dict | None = None) -> tuple[Array, dict]:
+                state: dict | None = None,
+                n_valid: Array | None = None) -> tuple[Array, dict]:
     """Full-sequence forward. x: [B, S, D]. state carries (h, conv) for
-    serving; pass None for training (zero init, state returned anyway)."""
+    serving; pass None for training (zero init, state returned anyway).
+
+    `n_valid` ([B] int32, optional): rows' trailing S - n_valid tokens are
+    serving-chunk padding. Their dt is zeroed (decay exp(0)=1, update 0 —
+    the recurrence identity) and the conv state ends at the last valid
+    token, so the carried (h, conv) match an unpadded chunk exactly.
+    Outputs at padded positions are garbage; callers discard them.
+    """
     b, s, d = x.shape
     nh, hd = cfg.ssm_heads, cfg.ssm_head_dim
     xs, z, bmat, cmat, dt = _split_in(p, x, cfg)
     conv_state = None if state is None else state["conv"]
-    xs, conv_state = _conv_causal(xs, p["conv_w"], conv_state)
+    xs, conv_state = _conv_causal(xs, p["conv_w"], conv_state,
+                                  n_valid=n_valid)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    if n_valid is not None:
+        token_valid = jnp.arange(s)[None, :] < n_valid[:, None]   # [B, S]
+        dt = jnp.where(token_valid[:, :, None], dt, 0.0)
     a = -jnp.exp(p["A_log"])
     xh = xs.reshape(b, s, nh, hd)
     h0 = None if state is None else state["h"]

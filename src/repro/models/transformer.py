@@ -335,7 +335,8 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int, *,
 def serve_step(params: dict, batch: dict, caches: dict, *, cfg: ModelConfig,
                pos: Array, n: int, binary: bool,
                logits_mode: str = "all",
-               active: Array | None = None) -> tuple[Array, dict]:
+               active: Array | None = None,
+               n_valid: Array | None = None) -> tuple[Array, dict]:
     """Prefill (tokens [B, S>1]) or decode (tokens [B, 1]) against caches.
 
     Returns (logits [B, S, V], updated caches). `pos` is the index of the
@@ -351,24 +352,48 @@ def serve_step(params: dict, batch: dict, caches: dict, *, cfg: ModelConfig,
     freed or mid-admission slots can ride along in a batched step without
     corrupting resident state. Their logits are still computed (garbage —
     callers must mask them).
+
+    `n_valid` ([B] int32, optional, requires vector `pos`): per-row count
+    of real tokens in this chunk — the trailing S - n_valid tokens are
+    padding so every chunk length shares one compiled trace. Only the
+    valid prefix reaches the KV caches / SSM state, attention treats the
+    row's valid cache length as pos + n_valid, and logits_mode="last"
+    returns each row's logits at its *last valid* position.
     """
     x = constrain(_embed_inputs(params, batch, cfg), "b..")
     img = _image_context(params, batch, cfg)
     s = x.shape[1]
     decode = s == 1
 
+    # Rows whose chunk starts a NEW request (in-place slot admission at
+    # position 0) must not see the previous occupant's state: KV caches
+    # are masked by kv_len, but SSM h/conv state and the cross cache have
+    # no length concept — zero those rows before use.
+    fresh = None
+    pos_vec = jnp.asarray(pos)
+    if n_valid is not None and active is not None and pos_vec.ndim == 1:
+        fresh = jnp.logical_and(active, pos_vec == 0)      # [B]
+
+    def _zero_fresh(tree):
+        def one(leaf):
+            m = fresh.reshape((-1,) + (1,) * (leaf.ndim - 1))
+            return jnp.where(m, jnp.zeros_like(leaf), leaf)
+        return jax.tree.map(one, tree)
+
     def group_fwd(x, gp_cache):
         gp, cache = gp_cache
         new_cache = {}
         for i, ch in enumerate(cfg.layer_pattern):
             p_i, c_i = gp[f"pos{i}"], cache[f"pos{i}"]
+            if fresh is not None and ch in ("M", "C"):
+                c_i = _zero_fresh(c_i)
             h = common.rmsnorm(p_i["norm1"], x, eps=cfg.norm_eps)
             if ch == "M":
                 if decode:
                     mix, nc = ssm.ssm_decode(p_i["mixer"], h, cfg=cfg, state=c_i)
                 else:
                     mix, nc = ssm.ssm_forward(p_i["mixer"], h, cfg=cfg,
-                                              state=c_i)
+                                              state=c_i, n_valid=n_valid)
             elif ch == "C":
                 c_i = c_i if img is None else AB.fill_cross_cache(
                     p_i["mixer"], img, cfg=cfg, binary=binary)
@@ -378,7 +403,8 @@ def serve_step(params: dict, batch: dict, caches: dict, *, cfg: ModelConfig,
                 nc = c_i
             else:
                 mix, nc = AB.attn_serve(p_i["mixer"], h, cfg=cfg, cache=c_i,
-                                        pos=pos, n=n, binary=binary)
+                                        pos=pos, n=n, binary=binary,
+                                        n_valid=n_valid)
             x = x + mix
             if cfg.d_ff > 0:
                 h2 = common.rmsnorm(p_i["norm2"], x, eps=cfg.norm_eps)
@@ -397,7 +423,11 @@ def serve_step(params: dict, batch: dict, caches: dict, *, cfg: ModelConfig,
             return jnp.where(m, new, old)
         new_caches = jax.tree.map(_sel, new_caches, caches)
     if logits_mode == "last":
-        x = x[:, -1:]
+        if n_valid is None:
+            x = x[:, -1:]
+        else:
+            idx = jnp.clip(n_valid.astype(jnp.int32) - 1, 0, s - 1)
+            x = x[jnp.arange(x.shape[0]), idx][:, None]    # [B, 1, D]
     x = common.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = constrain(common.unembed(x, head), "b.m")

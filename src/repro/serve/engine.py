@@ -1,18 +1,25 @@
 """Continuous-batching serving engine over the HAD inference path.
 
-The engine is a slot scheduler (vLLM-lite) around one jitted serve step:
+The engine is a slot scheduler (vLLM-lite) around one jitted serve step,
+with *interleaved chunked prefill* (Sarathi/vLLM-style):
 
   * `submit()` enqueues a `Request` (prompt of any length, per-request
     sampling params / stop conditions). Requests arrive at any time —
     including between decode steps of resident slots.
-  * `step()` first ADMITS queued requests into free slots: each admission
-    runs a chunked prefill of that slot alone (batch-1 step against a fresh
-    per-slot cache, then written into the slot's rows of the shared cache),
-    so resident slots are never restarted or recomputed. It then runs ONE
-    batched decode step for every active slot with a per-slot position
-    vector `pos: [B]` — slots sit at different sequence positions (ragged
-    batch); freed/empty slots ride along with their cache updates masked
-    out (`active: [B]`).
+  * `step()` ADMITS queued requests into free slots (metadata only — no
+    compute), then spends its prefill token budget (`prefill_chunk`) on at
+    most ONE chunk of the earliest-admitted prefilling slot, written
+    directly into that slot's rows of the shared cache (per-slot
+    `pos`/`active`/`n_valid` masking inside the jitted `_step` — no
+    per-admission batch-1 cache and no host-side cache copy-back), and
+    finally runs ONE batched decode step for every decoding slot with a
+    per-slot position vector `pos: [B]` (ragged batch). A long admission
+    therefore costs residents one chunk of latency per step instead of a
+    whole prompt: resident slots emit decode tokens *between* the prefill
+    chunks of a concurrently admitted request.
+  * Tail prefill chunks are padded to `prefill_chunk` and masked by a
+    per-slot valid-token count (`n_valid`), so every chunk of every prompt
+    length shares one compiled trace (plus one decode trace).
   * Per-slot stop conditions (max_new_tokens / eos) free a slot the moment
     its request finishes; the next `step()` re-fills it from the queue.
   * `run()` loops until the queue and all slots are drained.
@@ -51,6 +58,11 @@ class ServeConfig:
     batch_slots: int
     binary: bool = True            # HAD path vs full-precision baseline
     topn: int | None = None        # None -> cfg.had.topn(max_len)
+    # `step()` prefill token budget: each scheduler step spends at most one
+    # prefill chunk of this many tokens on the slot being admitted before
+    # running the batched decode. Smaller -> lower decode tail latency
+    # (ITL) during admissions; larger -> faster TTFT for the admitted
+    # request. Tail chunks are padded to this size (one jit trace).
     prefill_chunk: int = 512
 
 
@@ -83,9 +95,19 @@ class FinishedRequest:
 class _Slot:
     request: Request | None = None
     length: int = 0                # valid cache length (tokens written)
+    prefill_pos: int = 0           # prompt tokens prefilled so far
     next_token: int = 0            # pending token to feed next decode
     generated: list[int] = dataclasses.field(default_factory=list)
     rng: Any = None
+
+    @property
+    def prefilling(self) -> bool:
+        return (self.request is not None
+                and self.prefill_pos < self.request.tokens.size)
+
+    @property
+    def decoding(self) -> bool:
+        return self.request is not None and not self.prefilling
 
 
 def _sample_token(logits: np.ndarray, sp: SamplingParams, rng) -> int:
@@ -93,29 +115,50 @@ def _sample_token(logits: np.ndarray, sp: SamplingParams, rng) -> int:
         return int(np.argmax(logits))
     l = logits.astype(np.float64) / sp.temperature
     if 0 < sp.top_k < l.size:
+        # exactly top_k survive; ties at the k-th value break by lowest
+        # index (a plain `l >= kth` keeps every tied logit, sampling from
+        # outside the requested top-k). O(V) partition — no full-vocab
+        # sort on the per-token host path.
         kth = np.partition(l, -sp.top_k)[-sp.top_k]
-        l = np.where(l >= kth, l, -np.inf)
+        above = l > kth
+        ties = np.flatnonzero(l == kth)[:sp.top_k - int(above.sum())]
+        masked = np.full_like(l, -np.inf)
+        masked[above] = l[above]
+        masked[ties] = kth
+        l = masked
     l -= l.max()
     p = np.exp(l)
     p /= p.sum()
     return int(rng.choice(l.size, p=p))
 
 
-def _chunk_extra(extra: dict | None, s: int, lo: int, hi: int) -> dict:
-    """Route extra model inputs into the [lo, hi) prefill chunk.
+def _chunk_extra(extra: dict | None, s: int, lo: int, hi: int, chunk: int,
+                 *, batch: int | None = None, row: int | None = None) -> dict:
+    """Route extra model inputs into the padded [lo, hi) prefill chunk.
 
     `image_embeds` fills the (static, persisted) cross cache — first chunk
     only. Sequence-aligned arrays (axis 1 == prompt length, e.g. `frames`)
-    are sliced to the chunk so no chunk silently drops them. Anything else
-    rides with the first chunk.
+    are sliced to the chunk and zero-padded to `chunk` so every chunk
+    shape shares one trace. Anything else rides with the first chunk.
+    With `row`/`batch` set (in-slot admission), batch-1 request arrays are
+    scattered into row `row` of a zeros [batch, ...] array — rows of other
+    slots are masked out of cache updates anyway.
     """
     out: dict[str, Any] = {}
     for key, val in (extra or {}).items():
         arr = jnp.asarray(val)
         if key != "image_embeds" and arr.ndim >= 2 and arr.shape[1] == s:
-            out[key] = arr[:, lo:hi]
-        elif lo == 0:
-            out[key] = arr
+            arr = arr[:, lo:hi]
+            if hi - lo < chunk:
+                widths = [(0, 0)] * arr.ndim
+                widths[1] = (0, chunk - (hi - lo))
+                arr = jnp.pad(arr, widths)
+        elif lo != 0:
+            continue
+        if row is not None:
+            full = jnp.zeros((batch,) + arr.shape[1:], arr.dtype)
+            arr = full.at[row].set(arr[0])
+        out[key] = arr
     return out
 
 
@@ -125,6 +168,7 @@ class Engine:
         self.params = params
         self.scfg = scfg
         self.n = scfg.topn if scfg.topn is not None else cfg.had.topn(scfg.max_len)
+        self.chunk = max(1, min(scfg.prefill_chunk, scfg.max_len))
         self.caches = M.init_caches(cfg, scfg.batch_slots, scfg.max_len,
                                     binary=scfg.binary)
         self.slots = [_Slot() for _ in range(scfg.batch_slots)]
@@ -135,10 +179,10 @@ class Engine:
                       "prefill_tokens": 0, "tokens_generated": 0}
 
         @functools.partial(jax.jit, static_argnames=("n", "binary"))
-        def _step(params, batch, caches, pos, active, *, n, binary):
+        def _step(params, batch, caches, pos, active, n_valid, *, n, binary):
             return M.serve_step(params, batch, caches, cfg=cfg, pos=pos,
                                 n=n, binary=binary, logits_mode="last",
-                                active=active)
+                                active=active, n_valid=n_valid)
         self._step = _step
 
     # ------------------------------------------------------------------
@@ -171,29 +215,21 @@ class Engine:
         return req.request_id
 
     def step(self) -> list[FinishedRequest]:
-        """Admit queued requests into free slots, then run one batched
-        ragged decode step for all active slots. Returns newly finished
-        requests."""
+        """One scheduler step: admit queued requests into free slots, spend
+        the prefill budget on at most one chunk of the earliest admission,
+        then run one batched ragged decode step for all decoding slots.
+        Returns newly finished requests."""
         for i, slot in enumerate(self.slots):
             if slot.request is None and self.queue:
                 self._admit(i, self.queue.popleft())
-        active = np.array([s.request is not None for s in self.slots])
-        if active.any():
-            tokens = np.array([s.next_token if s.request else 0
-                               for s in self.slots], np.int32)
-            pos = np.array([s.length for s in self.slots], np.int32)
-            logits, self.caches = self._step(
-                self.params, {"tokens": jnp.asarray(tokens)[:, None]},
-                self.caches, jnp.asarray(pos), jnp.asarray(active),
-                n=self.n, binary=self.scfg.binary)
-            logits = np.asarray(logits[:, 0, :self.cfg.vocab_size])
-            self.stats["decode_steps"] += 1
-            for i, slot in enumerate(self.slots):
-                if slot.request is None:
-                    continue
-                slot.length += 1
-                tok = _sample_token(logits[i], slot.request.sampling, slot.rng)
-                self._push_token(i, slot, tok)
+        prefilling = [i for i, s in enumerate(self.slots) if s.prefilling]
+        if prefilling:
+            i = min(prefilling,
+                    key=lambda j: self.slots[j].request.request_id)
+            self._prefill_chunk(i)
+        decoding = [i for i, s in enumerate(self.slots) if s.decoding]
+        if decoding:
+            self._decode_once(decoding)
         return self._drain_finished()
 
     def run(self) -> dict[int, np.ndarray]:
@@ -206,57 +242,94 @@ class Engine:
             out[fr.request_id] = fr.tokens
         return out
 
+    def reset_stats(self) -> None:
+        """Zero the counters (e.g. after a warm-up pass, so benchmark stats
+        don't double-count)."""
+        self.stats = {k: 0 for k in self.stats}
+
     # ------------------------------------------------------------------
     # internals
     # ------------------------------------------------------------------
-    def _chunked_prefill(self, tokens2d: np.ndarray, extra: dict | None,
-                         caches: dict, active) -> tuple[Array, dict]:
-        """Chunked prefill of tokens2d [B, S] against `caches`; returns
-        (last-position logits, updated caches). Shared by slot admission
-        (B=1) and the lockstep `prefill()` (B=batch_slots)."""
-        b, s = tokens2d.shape
-        chunk = max(1, min(self.scfg.prefill_chunk, s))
-        logits = None
-        pos = 0
-        while pos < s:
-            end = min(pos + chunk, s)
-            batch = {"tokens": jnp.asarray(tokens2d[:, pos:end])}
-            batch.update(_chunk_extra(extra, s, pos, end))
-            logits, caches = self._step(
-                self.params, batch, caches, jnp.asarray(pos, jnp.int32),
-                active, n=self.n, binary=self.scfg.binary)
-            self.stats["prefill_chunks"] += 1
-            self.stats["prefill_tokens"] += (end - pos) * b
-            pos = end
-        return logits, caches
-
     def _admit(self, i: int, req: Request) -> None:
-        """Chunk-prefill `req` into slot i without touching other slots.
-
-        Runs batch-1 steps against a fresh single-slot cache, then writes
-        the result into the slot's rows of the shared cache (cache leaves
-        are [n_groups, B, ...] -> batch axis 1). Resident slots keep
-        decoding state untouched; they simply wait out the admission.
-        """
-        s = int(req.tokens.size)
-        cache1 = M.init_caches(self.cfg, 1, self.scfg.max_len,
-                               binary=self.scfg.binary)
-        logits, cache1 = self._chunked_prefill(
-            req.tokens[None], req.extra, cache1, jnp.ones((1,), bool))
-        self.caches = jax.tree.map(
-            lambda full, one: full.at[:, i:i + 1].set(one),
-            self.caches, cache1)
+        """Bind `req` to slot i. Metadata only — prefill happens one chunk
+        per `step()`, written in place into the slot's rows of the shared
+        cache (no per-admission cache allocation or copy-back)."""
         slot = self.slots[i]
         slot.request = req
-        slot.length = s
+        slot.length = 0
+        slot.prefill_pos = 0
         slot.generated = []
         slot.rng = np.random.default_rng(req.sampling.seed)
+
+    def _prefill_step(self, tokens: np.ndarray, extra: dict,
+                      pos: np.ndarray, active: np.ndarray,
+                      n_valid: np.ndarray) -> Array:
+        """One padded prefill chunk through the jitted step (shared by
+        scheduler admissions and the lockstep prefill()): tokens [B, chunk]
+        zero-padded, per-row pos/active/n_valid masks. Returns last-valid
+        logits [B, 1, V_padded] and bumps the prefill counters."""
+        batch = {"tokens": jnp.asarray(tokens)}
+        batch.update(extra)
+        logits, self.caches = self._step(
+            self.params, batch, self.caches, jnp.asarray(pos),
+            jnp.asarray(active), jnp.asarray(n_valid),
+            n=self.n, binary=self.scfg.binary)
+        self.stats["prefill_chunks"] += 1
+        self.stats["prefill_tokens"] += int(n_valid.sum())
+        return logits
+
+    def _prefill_chunk(self, i: int) -> None:
+        """Run one padded prefill chunk for slot i in place: only slot i is
+        `active`, its `n_valid` marks the real tokens of the chunk, and the
+        masked cache write lands exactly at rows [prefill_pos, prefill_pos
+        + n_valid) of its rows of the shared cache."""
+        slot = self.slots[i]
+        req = slot.request
+        s = int(req.tokens.size)
+        lo = slot.prefill_pos
+        hi = min(lo + self.chunk, s)
+        nv = hi - lo
+        b = self.scfg.batch_slots
+        tokens = np.zeros((b, self.chunk), np.int32)
+        tokens[i, :nv] = req.tokens[lo:hi]
+        pos = np.array([sl.length for sl in self.slots], np.int32)
+        active = np.zeros((b,), bool)
+        active[i] = True
+        n_valid = np.zeros((b,), np.int32)
+        n_valid[i] = nv
+        logits = self._prefill_step(
+            tokens, _chunk_extra(req.extra, s, lo, hi, self.chunk,
+                                 batch=b, row=i),
+            pos, active, n_valid)
+        slot.prefill_pos = hi
+        slot.length = hi
+        if hi < s:
+            return                      # admission continues next step
         if req.max_new_tokens == 0:
             self._finish(i)
             return
-        tok = _sample_token(np.asarray(logits[0, -1, :self.cfg.vocab_size]),
+        tok = _sample_token(np.asarray(logits[i, 0, :self.cfg.vocab_size]),
                             req.sampling, slot.rng)
         self._push_token(i, slot, tok)
+
+    def _decode_once(self, decoding: list[int]) -> None:
+        """One batched ragged decode step for the given slots; prefilling
+        and free slots ride along with cache updates masked out."""
+        tokens = np.array([s.next_token if s.decoding else 0
+                           for s in self.slots], np.int32)
+        pos = np.array([s.length for s in self.slots], np.int32)
+        active = np.array([s.decoding for s in self.slots])
+        logits, self.caches = self._step(
+            self.params, {"tokens": jnp.asarray(tokens)[:, None]},
+            self.caches, jnp.asarray(pos), jnp.asarray(active), None,
+            n=self.n, binary=self.scfg.binary)
+        logits = np.asarray(logits[:, 0, :self.cfg.vocab_size])
+        self.stats["decode_steps"] += 1
+        for i in decoding:
+            slot = self.slots[i]
+            slot.length += 1
+            tok = _sample_token(logits[i], slot.request.sampling, slot.rng)
+            self._push_token(i, slot, tok)
 
     def _push_token(self, i: int, slot: _Slot, tok: int) -> None:
         slot.generated.append(tok)
@@ -273,7 +346,13 @@ class Engine:
             request_id=slot.request.request_id,
             prompt_len=int(slot.request.tokens.size),
             tokens=np.asarray(slot.generated, np.int32)))
-        slot.request = None          # slot freed; cache masked via `active`
+        # free the slot AND reset its serving state: a stale `length` would
+        # false-trip the lockstep decode() guard and feed garbage positions
+        # for the inactive row in step()
+        slot.request = None
+        slot.length = 0
+        slot.prefill_pos = 0
+        slot.next_token = 0
 
     def _drain_finished(self) -> list[FinishedRequest]:
         out, self._finished = self._finished, []
@@ -286,17 +365,29 @@ class Engine:
         """Uniform-length batched prefill of ALL slots at once.
 
         tokens: [batch_slots, S]. Resets every slot (any resident requests
-        are dropped). Returns last-position logits [batch_slots, V]."""
+        are dropped). Returns last-position logits [batch_slots, V].
+        Shares the padded-chunk trace with scheduler admissions."""
         tokens = np.asarray(tokens, np.int32)
         b, s = tokens.shape
         assert b == self.scfg.batch_slots, (b, self.scfg.batch_slots)
         self.caches = M.init_caches(self.cfg, b, self.scfg.max_len,
                                     binary=self.scfg.binary)
-        logits, self.caches = self._chunked_prefill(
-            tokens, extra, self.caches, jnp.ones((b,), bool))
+        logits = None
+        lo = 0
+        while lo < s:
+            hi = min(lo + self.chunk, s)
+            nv = hi - lo
+            padded = np.zeros((b, self.chunk), np.int32)
+            padded[:, :nv] = tokens[:, lo:hi]
+            logits = self._prefill_step(
+                padded, _chunk_extra(extra, s, lo, hi, self.chunk),
+                np.full((b,), lo, np.int32), np.ones((b,), bool),
+                np.full((b,), nv, np.int32))
+            lo = hi
         for slot in self.slots:
             slot.request = None
             slot.length = s
+            slot.prefill_pos = s
         return logits[:, -1, :self.cfg.vocab_size]  # logits_mode="last": S==1
 
     def decode(self, tokens: np.ndarray) -> Array:
@@ -309,7 +400,7 @@ class Engine:
         batch = {"tokens": jnp.asarray(np.asarray(tokens, np.int32))[:, None]}
         logits, self.caches = self._step(
             self.params, batch, self.caches, jnp.asarray(pos),
-            jnp.ones((b,), bool), n=self.n, binary=self.scfg.binary)
+            jnp.ones((b,), bool), None, n=self.n, binary=self.scfg.binary)
         for slot in self.slots:
             slot.length += 1
         return logits[:, 0, :self.cfg.vocab_size]

@@ -144,6 +144,52 @@ def test_had_infer_matches_had_topn_on_signs():
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
 
 
+def test_choose_block_degenerate_prime_lengths():
+    """Prime lengths above the target collapse to block 1 (pathological
+    scan depth: one q-block per query) — pinned so the serving path can be
+    asserted to avoid it."""
+    assert A.choose_block(131, 128) == 1
+    assert A.choose_block(13, 8) == 1
+    assert A.choose_block(13, 128) == 13      # prime below target: one block
+    assert A.choose_block(16, 8) == 8
+
+
+def test_had_infer_prime_length_pinned_vs_composite_padding():
+    """had_infer_attention at a prime Sq (q-block collapses to 1) must
+    equal the same queries padded to a composite length (row-independent
+    outputs) — pins the degenerate-block path's outputs."""
+    b, h, hk, s, d = 1, 2, 1, 13, 32
+    qc, kc = _rand((b, h, s, d), 30), _rand((b, hk, s, d), 31)
+    v = _rand((b, hk, s, d), 32)
+    n, scale = 4, d ** -0.5
+    qb = H.pack_bits(qc.astype(jnp.float32))
+    kb = H.pack_bits(kc.astype(jnp.float32))
+    got = A.had_infer_attention(qb, kb, v, d=d, n=n, scale=scale,
+                                causal=True, q_block=8)   # bq collapses to 1
+    qb16 = jnp.pad(qb, ((0, 0), (0, 0), (0, 3), (0, 0)))  # Sq 13 -> 16
+    padded = A.had_infer_attention(qb16, kb, v, d=d, n=n, scale=scale,
+                                   causal=True, q_block=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(padded[:, :, :s]),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_had_infer_q_length_zeroes_padded_rows():
+    b, h, hk, s, d = 2, 2, 1, 8, 32
+    qc, kc = _rand((b, h, s, d), 33), _rand((b, hk, s, d), 34)
+    v = _rand((b, hk, s, d), 35)
+    qb = H.pack_bits(qc.astype(jnp.float32))
+    kb = H.pack_bits(kc.astype(jnp.float32))
+    qlen = jnp.asarray([5, 0], jnp.int32)
+    out = A.had_infer_attention(qb, kb, v, d=d, n=4, scale=d ** -0.5,
+                                causal=True, q_length=qlen)
+    full = A.had_infer_attention(qb, kb, v, d=d, n=4, scale=d ** -0.5,
+                                 causal=True)
+    np.testing.assert_array_equal(np.asarray(out[0, :, :5]),
+                                  np.asarray(full[0, :, :5]))
+    assert (np.asarray(out[0, :, 5:]) == 0).all()
+    assert (np.asarray(out[1]) == 0).all()
+
+
 def test_distill_pair_attention_agrees_with_unfused():
     b, h, s, d, n = 1, 2, 32, 8, 4
     qt, kt, vt = _rand((b, h, s, d), 11), _rand((b, h, s, d), 12), _rand((b, h, s, d), 13)

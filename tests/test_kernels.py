@@ -196,6 +196,35 @@ def test_prefill_q_offset_chunked_equals_full():
                                rtol=2e-5, atol=2e-5)
 
 
+def test_prefill_q_length_skips_padded_rows():
+    """Ragged q_length (padded serving chunks): valid rows match the
+    oracle, rows of fully-dead query blocks are zero-skipped."""
+    b, h, hk, s, t, d, dv, nsel = 2, 2, 1, 32, 32, 32, 8, 6
+    qb = _bits((b, h, s, d), 41)
+    kb = _bits((b, hk, t, d), 42)
+    rng = np.random.default_rng(43)
+    v = jnp.asarray(rng.normal(size=(b, hk, t, dv)).astype(np.float32))
+    scale = 1.0 / np.sqrt(d)
+    q_len = jnp.asarray([20, 0], jnp.int32)        # row 1: all padding
+    kv_len = jnp.asarray([20, 9], jnp.int32)
+    got = ops.prefill_attention(qb, kb, v, d=d, nsel=nsel, scale=scale,
+                                kv_length=kv_len, q_offset=0,
+                                q_length=q_len, block_q=16, block_t=16,
+                                interpret=True)
+    want = ref.prefill_attention_ref(
+        qb.reshape(b * h, s, -1), kb.reshape(b * hk, t, -1),
+        v.reshape(b * hk, t, dv), d=d, nsel=nsel, scale=scale,
+        kv_length=jnp.repeat(kv_len, h), q_offset=jnp.zeros(b * h, jnp.int32),
+        q_length=jnp.repeat(q_len, h), group_size=h // hk)
+    want = want.reshape(b, h, s, dv)
+    got_np, want_np = np.asarray(got), np.asarray(want, np.float32)
+    # valid region pinned to the oracle
+    np.testing.assert_allclose(got_np[0, :, :20], want_np[0, :, :20],
+                               rtol=2e-5, atol=2e-5)
+    # fully-dead query blocks are skipped outright -> zero outputs
+    assert (got_np[1] == 0).all()                  # q_length 0: all skipped
+
+
 def test_prefill_padded_s_and_t():
     _prefill_case(b=1, h=1, hk=1, s=24, t=40, d=32, dv=8, nsel=6,
                   kv_length=40, causal=False, seed=31, block_q=16, block_t=16)

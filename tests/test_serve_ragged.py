@@ -35,11 +35,12 @@ def _scfg(slots, binary, max_len=48, chunk=8):
                        topn=6, prefill_chunk=chunk)
 
 
-def _sequential(cfg, params, prompts, steps, binary):
+def _sequential(cfg, params, prompts, steps, binary, steps_list=None):
     outs = []
-    for p in prompts:
+    for i, p in enumerate(prompts):
         eng = Engine(cfg, params, _scfg(1, binary))
-        rid = eng.submit(p, max_new_tokens=steps)
+        rid = eng.submit(p, max_new_tokens=steps_list[i]
+                         if steps_list is not None else steps)
         outs.append(eng.run()[rid])
     return outs
 
@@ -72,21 +73,63 @@ def test_mixed_lengths_match_sequential_kernel_path():
         np.testing.assert_array_equal(got[rid], w)
 
 
+HCFG = dataclasses.replace(CFG, name="hyb", family="hybrid",
+                           layer_pattern="AM", ssm_state=16,
+                           ssm_head_dim=16, ssm_chunk=8)
+
+
 def test_hybrid_ssm_ragged_matches_sequential():
     """Per-slot SSM decode state (h + conv) survives ragged batching,
     masked steps, and slot re-fill in a hybrid attention+Mamba stack."""
-    hcfg = dataclasses.replace(CFG, name="hyb", family="hybrid",
-                               layer_pattern="AM", ssm_state=16,
-                               ssm_head_dim=16, ssm_chunk=8)
-    params = M.init_params(jax.random.PRNGKey(13), hcfg)
+    params = M.init_params(jax.random.PRNGKey(13), HCFG)
     rng = np.random.default_rng(9)
     prompts = [rng.integers(0, 64, n) for n in (10, 6, 8)]
-    eng = Engine(hcfg, params, _scfg(2, True))
+    eng = Engine(HCFG, params, _scfg(2, True))
     ids = [eng.submit(p, max_new_tokens=4) for p in prompts]
     got = eng.run()
-    want = _sequential(hcfg, params, prompts, 4, True)
+    want = _sequential(HCFG, params, prompts, 4, True)
     for rid, w in zip(ids, want):
         np.testing.assert_array_equal(got[rid], w)
+
+
+@pytest.mark.parametrize("seed", [1, 2, 3])
+def test_ssm_state_does_not_leak_across_slot_refill(seed):
+    """A re-filled slot must not see the previous occupant's SSM h/conv
+    state (KV caches are length-masked; SSM state is not). Long request
+    then short re-fill maximizes undecayed contamination — these seeds
+    flipped tokens before in-place admission zeroed fresh rows' state."""
+    params = M.init_params(jax.random.PRNGKey(13), HCFG)
+    rng = np.random.default_rng(seed)
+    p_long, p_short = rng.integers(0, 64, 30), rng.integers(0, 64, 4)
+    eng = Engine(HCFG, params, _scfg(1, True))
+    eng.submit(p_long, max_new_tokens=4)
+    eng.run()
+    rid = eng.submit(p_short, max_new_tokens=6)     # re-fill the slot
+    got = eng.run()[rid]
+    want = _sequential(HCFG, params, [p_short], 6, True)[0]
+    np.testing.assert_array_equal(got, want)
+
+
+def test_cross_cache_does_not_leak_across_slot_refill():
+    """A re-filled slot whose new request carries no image must attend a
+    ZERO cross cache, not the previous occupant's image K/V."""
+    cfg = dataclasses.replace(CFG, name="vlm2", n_layers=2,
+                              layer_pattern="AC", n_image_tokens=4,
+                              frontend_dim=8)
+    params = M.init_params(jax.random.PRNGKey(14), cfg)
+    rng = np.random.default_rng(15)
+    p_a, p_b = rng.integers(0, 64, 9), rng.integers(0, 64, 5)
+    img = rng.normal(size=(1, 4, 8)).astype(np.float32)
+    scfg = ServeConfig(max_len=24, batch_slots=1, binary=True, topn=6,
+                       prefill_chunk=8)
+    eng = Engine(cfg, params, scfg)
+    eng.submit(p_a, max_new_tokens=3, extra={"image_embeds": img})
+    eng.run()
+    rid = eng.submit(p_b, max_new_tokens=3)         # no image this time
+    got = eng.run()[rid]
+    fresh = Engine(cfg, params, scfg)
+    sid = fresh.submit(p_b, max_new_tokens=3)
+    np.testing.assert_array_equal(got, fresh.run()[sid])
 
 
 @pytest.mark.parametrize("binary", [True, False])
@@ -134,6 +177,120 @@ def test_refill_does_not_disturb_resident_tokens(params):
         return out[rid]
 
     np.testing.assert_array_equal(tokens_a(False), tokens_a(True))
+
+
+# ---------------------------------------------------------------------------
+# interleaved chunked prefill
+# ---------------------------------------------------------------------------
+
+def _interleave_case(cfg, params, binary):
+    """Resident slot A decodes while long prompt B is chunk-prefilled;
+    A must emit tokens BETWEEN B's prefill chunks, and both must match
+    sequential single-request serving exactly."""
+    rng = np.random.default_rng(20)
+    pa = rng.integers(0, 64, 6)
+    pb = rng.integers(0, 64, 33)                  # 5 chunks at chunk=8
+    eng = Engine(cfg, params, _scfg(2, binary))
+    rid_a = eng.submit(pa, max_new_tokens=12)
+    while not eng.slots[0].decoding:              # finish A's admission
+        eng.step()
+    rid_b = eng.submit(pb, max_new_tokens=4)
+    interleaved = 0
+    got = {}
+    while rid_b not in got or rid_a not in got:
+        a_before = len(eng.slots[0].generated) if eng.slots[0].request else -1
+        for fr in eng.step():
+            got[fr.request_id] = fr.tokens
+        slot_b = eng.slots[1]
+        a_after = len(eng.slots[0].generated) if eng.slots[0].request else -1
+        if slot_b.request is not None and slot_b.prefilling \
+                and a_after == a_before + 1:
+            interleaved += 1                      # A decoded mid-admission
+    assert interleaved >= 2, "no decode tokens between B's prefill chunks"
+    want = _sequential(cfg, params, [pa, pb], None, binary,
+                       steps_list=[12, 4])
+    np.testing.assert_array_equal(got[rid_a], want[0])
+    np.testing.assert_array_equal(got[rid_b], want[1])
+
+
+@pytest.mark.parametrize("binary", [True, False])
+def test_decode_interleaves_with_prefill_chunks(params, binary):
+    _interleave_case(CFG, params, binary)
+
+
+def test_decode_interleaves_with_prefill_chunks_kernel_path():
+    kparams = M.init_params(jax.random.PRNGKey(10), KCFG)
+    _interleave_case(KCFG, kparams, True)
+
+
+def test_admission_is_metadata_only_no_cache_copy(params):
+    """Admission must not touch or rebuild the shared cache (the old
+    engine's per-admission `at[:, i:i+1].set` tree copy is gone): the
+    caches pytree is object-identical until the next step()."""
+    eng = Engine(CFG, params, _scfg(2, True))
+    leaves_before = jax.tree.leaves(eng.caches)
+    eng.submit(np.arange(9, dtype=np.int32), max_new_tokens=2)
+    eng._admit(0, eng.queue.popleft())
+    leaves_after = jax.tree.leaves(eng.caches)
+    assert all(a is b for a, b in zip(leaves_before, leaves_after))
+
+
+def test_prefill_chunk_lengths_share_one_trace(params):
+    """Every prompt length must reuse ONE padded prefill-chunk trace and
+    ONE decode trace — no per-remainder-length recompilation."""
+    eng = Engine(CFG, params, _scfg(1, True, chunk=8))
+    rng = np.random.default_rng(21)
+    for n in (5, 8, 13, 21, 3):                   # tails 5, 0, 5, 5, 3
+        eng.submit(rng.integers(0, 64, n), max_new_tokens=3)
+    eng.run()
+    assert eng._step._cache_size() == 2, eng._step._cache_size()
+
+
+def test_padded_serving_path_never_hits_block_one(params, monkeypatch):
+    """Prime prompt lengths used to reach had_infer_attention raw (q-block
+    collapses to 1 — one scan step per query). With pad-to-chunk serving
+    every traced chunk is the configured chunk size, so choose_block must
+    never degenerate."""
+    from repro.core import attention as A
+    recorded = []
+    real = A.choose_block
+
+    def spy(s, target=512):
+        blk = real(s, target)
+        recorded.append((s, target, blk))
+        return blk
+
+    monkeypatch.setattr(A, "choose_block", spy)
+    eng = Engine(CFG, params, _scfg(1, True, chunk=8))
+    rng = np.random.default_rng(23)
+    for n in (7, 13):                             # prime prompt lengths
+        eng.submit(rng.integers(0, 64, n), max_new_tokens=2)
+    eng.run()
+    assert recorded, "serving no longer exercises choose_block?"
+    # s == 1 is the decode step (one query: block 1 is exact, not
+    # degenerate); every multi-token chunk must keep a real block size
+    multi = [(s, t, blk) for s, t, blk in recorded if s > 1]
+    assert multi and min(blk for _, _, blk in multi) > 1, recorded
+
+
+def test_finish_at_max_len_resets_slot_and_refills(params):
+    """A request that fills its slot exactly to max_len must leave the
+    freed slot with length 0 (stale lengths false-tripped the lockstep
+    decode() guard and fed garbage positions), and the slot must re-fill
+    cleanly."""
+    rng = np.random.default_rng(22)
+    pa = rng.integers(0, 64, 12)                  # 12 + 4 == max_len
+    eng = Engine(CFG, params, _scfg(2, True, max_len=16))
+    rid = eng.submit(pa, max_new_tokens=4)
+    first = eng.run()[rid]
+    assert first.shape == (4,)
+    np.testing.assert_array_equal(eng.lengths, [0, 0])
+    pb = rng.integers(0, 64, 5)                   # re-fill the freed slot
+    rid2 = eng.submit(pb, max_new_tokens=3)
+    got = eng.run()[rid2]
+    e1 = Engine(CFG, params, _scfg(1, True, max_len=16))
+    sid = e1.submit(pb, max_new_tokens=3)
+    np.testing.assert_array_equal(got, e1.run()[sid])
 
 
 # ---------------------------------------------------------------------------
@@ -192,6 +349,23 @@ def test_temperature_topk_sampling_seeded(params):
 def test_lengths_dtype_int32(params):
     eng = Engine(CFG, params, _scfg(2, True))
     assert eng.lengths.dtype == np.int32
+
+
+def test_topk_sampling_keeps_exactly_k_on_ties():
+    """Ties at the k-th logit must not widen the candidate set beyond
+    top_k (`l >= kth` kept every tied logit); ties break by lowest index."""
+    from repro.serve.engine import _sample_token
+    logits = np.array([2.0, 1.0, 1.0, 1.0, 1.0, 0.5], np.float32)
+    sp = SamplingParams(temperature=1.0, top_k=2, seed=0)
+    rng = np.random.default_rng(0)
+    drawn = {_sample_token(logits, sp, rng) for _ in range(200)}
+    assert drawn <= {0, 1}, drawn                 # index 1 wins the tie
+    assert drawn == {0, 1}                        # both survivors reachable
+    # k-th value unique -> unchanged behavior
+    sp3 = SamplingParams(temperature=1.0, top_k=3, seed=0)
+    logits2 = np.array([3.0, 2.0, 1.0, 0.5], np.float32)
+    drawn2 = {_sample_token(logits2, sp3, rng) for _ in range(200)}
+    assert drawn2 == {0, 1, 2}
 
 
 # ---------------------------------------------------------------------------
