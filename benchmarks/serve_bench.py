@@ -15,7 +15,14 @@ CSV contract: throughput rows keep ``serve_<case>,us_per_token,tok_per_s``;
 latency rows are ``serve_<case>_{ttft|itl}_p{50|95|99},<ms>,ms`` and one
 ``serve_<case>_stats,<prefill_chunks>,<decode_steps>`` row per timed case
 (the engine's counters are reset after warm-up, so a jump in chunk or
-step counts flags a scheduling/trace regression).
+step counts flags a scheduling/trace regression). With ``--paged`` every
+case additionally emits a KV-pool row
+``serve_<case>_kvpool,<pages_in_use>,<peak_pages>,<preemptions>,
+<max_residents>`` and the harness runs an *overcommit* case whose page
+pool holds fewer tokens than ``batch_slots x max_len`` — dense layout
+capacity — while still serving the whole workload (preempting on
+exhaustion), i.e. paging admits strictly more concurrent residents than
+the dense cache could hold.
 """
 from __future__ import annotations
 
@@ -102,10 +109,13 @@ def _drive(eng: Engine, prompts: list[np.ndarray], *, stagger: int = 0
             "gen": sum(counts.values())}
 
 
-def _engine(params, cfg, *, slots: int, binary: bool) -> Engine:
+def _engine(params, cfg, *, slots: int, binary: bool, paged: bool = False,
+            page_size: int = 16, n_pages: int | None = None) -> Engine:
     return Engine(cfg, params, ServeConfig(max_len=MAX_LEN, batch_slots=slots,
                                            binary=binary,
-                                           prefill_chunk=CHUNK))
+                                           prefill_chunk=CHUNK, paged=paged,
+                                           page_size=page_size,
+                                           n_pages=n_pages))
 
 
 def _pcts(xs: list[float]) -> tuple[float, float, float]:
@@ -113,10 +123,26 @@ def _pcts(xs: list[float]) -> tuple[float, float, float]:
     return tuple(float(np.percentile(ms, p)) for p in (50, 95, 99))
 
 
+def _kvpool_row(name: str, eng: Engine) -> str:
+    """KV-pool columns: pages in use, peak watermark, preemption count,
+    max concurrent residents. Sampled after the workload drains, so
+    pages-in-use doubles as a leak check — any nonzero value means a
+    finished/preempted request failed to return pages (assert here
+    rather than letting the CSV silently absorb it)."""
+    alloc = eng.allocator
+    assert alloc.in_use == 0, (
+        f"{alloc.in_use} pages leaked after the workload drained")
+    return (f"{name}_kvpool,{alloc.in_use},{alloc.peak_in_use},"
+            f"{eng.stats['preemptions']},{eng.stats['max_residents']}")
+
+
 def _serve_case(params, cfg, *, slots: int, skew: str, binary: bool,
-                n_req: int, stagger: int = 0, seed: int = 0) -> dict:
+                n_req: int, stagger: int = 0, seed: int = 0,
+                paged: bool = False, page_size: int = 16,
+                n_pages: int | None = None) -> dict:
     rng = np.random.default_rng(seed)
-    eng = _engine(params, cfg, slots=slots, binary=binary)
+    eng = _engine(params, cfg, slots=slots, binary=binary, paged=paged,
+                  page_size=page_size, n_pages=n_pages)
     prompts = _prompts(n_req, skew, rng)
     # warm-up: run the identical workload once so the (chunk-length-
     # agnostic) prefill trace and the decode trace compile outside the
@@ -126,34 +152,43 @@ def _serve_case(params, cfg, *, slots: int, skew: str, binary: bool,
     eng.reset_stats()
     out = _drive(eng, prompts, stagger=stagger)
     out["stats"] = dict(eng.stats)
+    out["engine"] = eng
     return out
 
 
 def run(print_fn=print, slot_counts=(1, 2, 4), n_req: int = 4,
-        stagger: int = 2) -> list[str]:
+        stagger: int = 2, paged: bool = False,
+        page_size: int = 16) -> list[str]:
     csv = []
     cfg = causal_cfg(d=64, layers=2, heads=4)
     params = M.init_params(jax.random.PRNGKey(0), cfg)
+    mode = f", paged (page {page_size})" if paged else ""
     print_fn(f"serving: prompts~{PROMPT_MEAN}, gen {GEN}, {n_req} requests, "
-             f"prefill budget {CHUNK} tok/step")
+             f"prefill budget {CHUNK} tok/step{mode}")
+    prefix = "serve_paged" if paged else "serve"
     for binary in (True, False):
         tag = "binary" if binary else "baseline"
         for slots in slot_counts:
             r = _serve_case(params, cfg, slots=slots, skew="uniform",
-                            binary=binary, n_req=n_req)
+                            binary=binary, n_req=n_req, paged=paged,
+                            page_size=page_size)
             us, tps = r["wall"] / r["gen"] * 1e6, r["gen"] / r["wall"]
             print_fn(f"  {tag:8s} slots={slots} uniform: "
                      f"{tps:7.1f} tok/s ({us:.0f} us/tok)")
-            csv.append(f"serve_{tag}_s{slots}_uniform,{us:.1f},{tps:.2f}")
+            csv.append(f"{prefix}_{tag}_s{slots}_uniform,{us:.1f},{tps:.2f}")
+            if paged:
+                csv.append(_kvpool_row(f"{prefix}_{tag}_s{slots}_uniform",
+                                       r["engine"]))
         # staggered mixed-length arrivals: the latency-percentile case.
         # More requests than slots, so later arrivals are admitted while
         # residents decode — the regime interleaved prefill exists for.
         slots = slot_counts[-1]
         n_lat = max(n_req, slots + 2)
         r = _serve_case(params, cfg, slots=slots, skew="mixed",
-                        binary=binary, n_req=n_lat, stagger=stagger)
+                        binary=binary, n_req=n_lat, stagger=stagger,
+                        paged=paged, page_size=page_size)
         us, tps = r["wall"] / r["gen"] * 1e6, r["gen"] / r["wall"]
-        name = f"serve_{tag}_s{slots}_mixed"
+        name = f"{prefix}_{tag}_s{slots}_mixed"
         csv.append(f"{name},{us:.1f},{tps:.2f}")
         t50, t95, t99 = _pcts(r["ttft"])
         i50, i95, i99 = _pcts(r["itl"]) if r["itl"] else (0.0, 0.0, 0.0)
@@ -169,7 +204,46 @@ def run(print_fn=print, slot_counts=(1, 2, 4), n_req: int = 4,
         st = r["stats"]
         print_fn(f"  {tag:8s} stats (timed pass only): {st}")
         csv.append(f"{name}_stats,{st['prefill_chunks']},{st['decode_steps']}")
+        if paged:
+            csv.append(_kvpool_row(name, r["engine"]))
+    if paged:
+        csv += _overcommit_case(print_fn, params, cfg,
+                                slots=slot_counts[-1], n_req=n_req,
+                                page_size=page_size)
     return csv
+
+
+def _overcommit_case(print_fn, params, cfg, *, slots: int, n_req: int,
+                     page_size: int) -> list[str]:
+    """Pool smaller than the dense layout's batch_slots x max_len
+    reservation: the dense cache could hold only pool_tokens // max_len
+    full-length residents, paging holds `slots` actual-length ones (and
+    preempts/re-queues on exhaustion instead of deadlocking)."""
+    from repro.serve import pages_needed
+    dense_pages = slots * pages_needed(MAX_LEN, page_size)
+    # large enough for any single request (submit guard), well below the
+    # dense-equivalent reservation
+    n_pages = max(pages_needed(MAX_LEN, page_size),
+                  int(dense_pages * 0.4))
+    r = _serve_case(params, cfg, slots=slots, skew="mixed", binary=True,
+                    n_req=max(n_req, slots), paged=True,
+                    page_size=page_size, n_pages=n_pages)
+    eng = r["engine"]
+    pool_tokens = n_pages * page_size
+    dense_residents = pool_tokens // MAX_LEN
+    st = r["stats"]
+    tps = r["gen"] / r["wall"]
+    print_fn(f"  overcommit slots={slots}: pool {n_pages} pages "
+             f"({pool_tokens} tok) vs dense reservation "
+             f"{slots * MAX_LEN} tok -> dense layout fits "
+             f"{dense_residents} resident(s), paged served "
+             f"{st['max_residents']} concurrently "
+             f"({st['preemptions']} preemptions, {tps:.1f} tok/s)")
+    assert st["max_residents"] > dense_residents, (
+        "overcommit case failed to exceed dense-layout capacity")
+    name = f"serve_paged_overcommit_s{slots}"
+    return [f"{name},{r['wall'] / r['gen'] * 1e6:.1f},{tps:.2f}",
+            _kvpool_row(name, eng)]
 
 
 if __name__ == "__main__":
@@ -177,11 +251,20 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny workload (CI): 1 slot count, 2 requests")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve from the paged KV cache (block tables; "
+                         "adds KV-pool CSV columns + an overcommit case)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV-cache page (with --paged)")
     args = ap.parse_args()
     if args.smoke:
-        lines = run(slot_counts=(2,), n_req=2)
+        lines = run(slot_counts=(2,), n_req=2, paged=args.paged,
+                    page_size=args.page_size)
         assert any("_ttft_p99," in l for l in lines), lines
         assert any("_stats," in l for l in lines), lines
+        if args.paged:
+            assert any("_kvpool," in l for l in lines), lines
+            assert any("overcommit" in l for l in lines), lines
         print("smoke ok")
     else:
-        run()
+        run(paged=args.paged, page_size=args.page_size)

@@ -7,8 +7,14 @@ smaller than bf16), and attention reading only ~N of the context's V rows.
 Verifies the binarized scheduler reproduces (a) the dense ±1 evaluation
 path and (b) one-request-at-a-time sequential serving.
 
-Run:  PYTHONPATH=src python examples/long_context_serve.py
+Run:  PYTHONPATH=src python examples/long_context_serve.py [--paged]
+
+--paged serves from the paged KV cache (serve/paged.py): attention caches
+become one shared pool of fixed-size pages addressed per slot through a
+block table, so HBM holds the tokens actually resident instead of
+batch_slots x max_len reserved — same tokens, verified below.
 """
+import argparse
 import sys
 
 sys.path.insert(0, ".")
@@ -22,6 +28,12 @@ from repro.models import ModelConfig
 from repro.models import model as M
 from repro.models.config import HADConfig
 from repro.serve import Engine, ServeConfig
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--paged", action="store_true",
+                help="paged KV cache (block tables) instead of dense")
+ap.add_argument("--page-size", type=int, default=64)
+args = ap.parse_args()
 
 CTX, GEN = 512, 12
 
@@ -49,7 +61,13 @@ lens = [CTX, CTX // 2, CTX // 4]
 prompts = [rng.integers(0, cfg.vocab_size, size=s) for s in lens]
 
 eng = Engine(cfg, params, ServeConfig(max_len=CTX + GEN, batch_slots=2,
-                                      binary=True, prefill_chunk=128))
+                                      binary=True, prefill_chunk=128,
+                                      paged=args.paged,
+                                      page_size=args.page_size))
+if args.paged:
+    a = eng.allocator
+    print(f"paged KV cache: {a.n_pages} pages x {a.page_size} tokens "
+          f"(block table [{eng.scfg.batch_slots}, {eng.max_blocks}])")
 ids = [eng.submit(p, max_new_tokens=GEN) for p in prompts[:2]]
 results = {}
 for _ in range(3):                      # two residents decode a few steps...
@@ -60,6 +78,11 @@ results.update(eng.run())
 print(f"mixed-length generations ({lens=}):")
 for rid, s in zip(ids, lens):
     print(f"  req {rid} (ctx {s}): {results[rid].tolist()}")
+if args.paged:
+    a = eng.allocator
+    print(f"pool watermark: {a.peak_in_use}/{a.n_pages} pages "
+          f"({a.peak_in_use * a.page_size} tokens resident at peak vs "
+          f"{eng.scfg.batch_slots * eng.scfg.max_len} dense-reserved)")
 
 # cross-check 1: dense ±1 evaluation path must agree on the first token
 for rid, p in zip(ids, prompts):

@@ -1,0 +1,158 @@
+"""Pallas TPU kernel: fused HAD decode attention over a PAGED KV cache.
+
+Same two-pass exact-top-N structure as binary_decode_attention (score
+histogram -> threshold -> masked exp accumulation), but K/V live in shared
+page pools with no batch axis:
+
+  k_pool: [n_pages, Hk, W, page]  uint32 bit-planes
+  v_pool: [n_pages, Hk, page, Dv]
+
+and each (batch, kv-head) row walks its slot's row of the block table
+instead of a contiguous cache. The block table is a *scalar-prefetch*
+operand (PrefetchScalarGridSpec): the K/V BlockSpec index maps read
+``block_tables[b, i]`` to pick the physical page DMA'd for sequence block
+i — the "block-table prefetch inner loop". Pages are fetched in logical
+order, so the accumulation order (and thus the floating-point result) is
+bit-identical to the contiguous kernel with block_t == page.
+
+Grid: (B*Hk, 2, max_blocks) — sequential on TPU; VMEM scratch carries the
+histogram/threshold/accumulators across passes within each (batch,
+kv-head), exactly as in the contiguous kernel. Garbage pages past a
+slot's valid length are masked by `lengths` (the wrapper clamps
+unallocated -1 entries to page 0 so the index map stays in range).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.binary_decode_attention import _scores, _threshold
+
+Array = jax.Array
+
+
+def _paged_decode_kernel(bt_ref, len_ref, nsel_ref, scale_ref,
+                         q_ref, k_ref, v_ref, o_ref,
+                         hist_ref, thr_ref, num_ref, den_ref, blkmax_ref, *,
+                         d: int, page: int, block_skip: bool):
+    bh = pl.program_id(0)
+    ph = pl.program_id(1)
+    i = pl.program_id(2)
+    nb = pl.num_programs(2)
+
+    q = q_ref[0]            # [G, W]
+
+    def scores_valid():
+        k = k_ref[0, 0]         # [W, page] — page picked by the index map
+        s = _scores(q, k, d)    # [G, page] int32
+        pos = i * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        return s, pos < len_ref[bh]
+
+    @pl.when((ph == 0) & (i == 0))
+    def _init_hist():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    @pl.when(ph == 0)
+    def _accum_hist():
+        s, valid = scores_valid()
+        levels = (s + d) // 2                                    # [G, page]
+        onehot = (levels[:, :, None] ==
+                  jax.lax.broadcasted_iota(jnp.int32, (1, 1, d + 1), 2))
+        onehot = jnp.logical_and(onehot, valid[:, :, None])
+        hist_ref[...] += jnp.sum(onehot.astype(jnp.int32), axis=1)
+        if block_skip:
+            blkmax_ref[i, 0] = jnp.max(jnp.where(valid, s, -d - 2))
+
+    @pl.when((ph == 0) & (i == nb - 1))
+    def _finalize_threshold():
+        thr_ref[...] = _threshold(hist_ref[...], nsel_ref[0], d)
+        num_ref[...] = jnp.zeros_like(num_ref)
+        den_ref[...] = jnp.zeros_like(den_ref)
+
+    if block_skip:
+        def _block_live():
+            return blkmax_ref[i, 0] >= jnp.min(thr_ref[...])
+    else:
+        def _block_live():
+            return jnp.asarray(True)
+
+    @pl.when((ph == 1) & _block_live())
+    def _accum_softmax():
+        s, valid = scores_valid()
+        keep = jnp.logical_and(s >= thr_ref[...], valid)
+        e = jnp.where(keep,
+                      jnp.exp(scale_ref[0] * (s - d).astype(jnp.float32)),
+                      0.0)
+        num_ref[...] += jax.lax.dot_general(
+            e, v_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        den_ref[...] += jnp.sum(e, axis=-1, keepdims=True)
+
+    @pl.when((ph == 1) & (i == nb - 1))
+    def _write_out():
+        o_ref[0] = num_ref[...] / jnp.maximum(den_ref[...], 1e-30)
+
+
+def paged_decode_attention(q_bits: Array, k_pool: Array, v_pool: Array,
+                           block_tables: Array, *, d: int, nsel: Array,
+                           scale: Array, lengths: Array,
+                           n_kv_heads: int, interpret: bool = True,
+                           block_skip: bool = True) -> Array:
+    """Fused HAD decode attention over paged K/V pools.
+
+    Args:
+      q_bits: [B*Hk, G, W] uint32 — new-token query bits per KV head.
+      k_pool: [n_pages, Hk, W, page] uint32 — paged K bit-planes.
+      v_pool: [n_pages, Hk, page, Dv] — paged V.
+      block_tables: [B, max_blocks] int32 physical page ids (>= 0;
+        entries past a slot's valid length may alias any page — masked).
+      d: head dimension (bits).
+      nsel: [1] int32 top-N; scale: [1] float32 logit scale.
+      lengths: [B*Hk] int32 valid cache length per row.
+      n_kv_heads: Hk (maps grid row -> (batch, kv head)).
+
+    Returns: [B*Hk, G, Dv] float32 attention outputs.
+    """
+    bhk, g, w = q_bits.shape
+    n_pages_k, hk, w2, page = k_pool.shape
+    n_pages_v, hk2, page2, dv = v_pool.shape
+    assert w == w2 and page == page2 and hk == hk2 == n_kv_heads
+    assert n_pages_k == n_pages_v
+    b, nb = block_tables.shape
+    assert b * hk == bhk, (b, hk, bhk)
+    kernel = functools.partial(_paged_decode_kernel, d=d, page=page,
+                               block_skip=block_skip)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,          # block_tables feeds the index maps
+        grid=(bhk, 2, nb),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # lengths [B*Hk]
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # nsel [1]
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # scale [1]
+            pl.BlockSpec((1, g, w), lambda bh, ph, i, bt: (bh, 0, 0)),
+            pl.BlockSpec((1, 1, w, page),
+                         lambda bh, ph, i, bt: (bt[bh // n_kv_heads, i],
+                                                bh % n_kv_heads, 0, 0)),
+            pl.BlockSpec((1, 1, page, dv),
+                         lambda bh, ph, i, bt: (bt[bh // n_kv_heads, i],
+                                                bh % n_kv_heads, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, dv), lambda bh, ph, i, bt: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, d + 1), jnp.int32),   # histogram
+            pltpu.VMEM((g, 1), jnp.int32),       # threshold
+            pltpu.VMEM((g, dv), jnp.float32),    # numerator
+            pltpu.VMEM((g, 1), jnp.float32),     # denominator
+            pltpu.VMEM((nb, 1), jnp.int32),      # per-block max (skip list)
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bhk, g, dv), jnp.float32),
+        interpret=interpret,
+    )(block_tables, lengths, nsel, scale, q_bits, k_pool, v_pool)

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.core import hamming
 from repro.kernels import binary_decode_attention as _dec
+from repro.kernels import binary_paged_decode_attention as _pdec
 from repro.kernels import binary_prefill_attention as _pre
 from repro.kernels import hamming_score as _hs
 
@@ -104,6 +105,39 @@ def decode_attention(q_bits: Array, k_bits: Array, v: Array, *, d: int,
         nsel=jnp.asarray([nsel], dtype=jnp.int32).reshape(1),
         scale=jnp.asarray([scale], dtype=jnp.float32).reshape(1),
         lengths=len_f.astype(jnp.int32), block_t=bt, interpret=interpret)
+    return out.reshape(b, h, dv)
+
+
+@functools.partial(jax.jit, static_argnames=("d", "interpret"))
+def paged_decode_attention(q_bits: Array, k_pool: Array, v_pool: Array,
+                           block_tables: Array, *, d: int,
+                           nsel: Array | int, scale: Array | float,
+                           lengths: Array,
+                           interpret: bool | None = None) -> Array:
+    """HAD decode attention for one new token against PAGED K/V pools.
+
+    q_bits: [B, H, W] uint32; k_pool: [n_pages, Hk, W, page] bit-planes;
+    v_pool: [n_pages, Hk, page, Dv]; block_tables: [B, max_blocks] int32
+    (-1/garbage entries past each row's valid length are clamped — they
+    are masked by `lengths`); lengths: [B] int32 valid cache lengths.
+    Returns [B, H, Dv] f32. Block tables and lengths are traced: new
+    contents never recompile.
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    b, h, w = q_bits.shape
+    _, hk, w2, _ = k_pool.shape
+    assert w == w2
+    g = h // hk
+    dv = v_pool.shape[-1]
+    qf = q_bits.reshape(b, hk, g, w).reshape(b * hk, g, w)
+    len_f = jnp.broadcast_to(lengths[:, None], (b, hk)).reshape(-1)
+    out = _pdec.paged_decode_attention(
+        qf, k_pool, v_pool,
+        jnp.maximum(jnp.asarray(block_tables, jnp.int32), 0),
+        d=d, nsel=jnp.asarray([nsel], dtype=jnp.int32).reshape(1),
+        scale=jnp.asarray([scale], dtype=jnp.float32).reshape(1),
+        lengths=len_f.astype(jnp.int32), n_kv_heads=hk,
+        interpret=interpret)
     return out.reshape(b, h, dv)
 
 

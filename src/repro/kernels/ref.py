@@ -46,6 +46,38 @@ def decode_attention_ref(q_bits: Array, k_bits: Array, v: Array, *, d: int,
     return jax.vmap(one)(q_bits, k_bits, v, lengths)
 
 
+def paged_decode_attention_ref(q_bits: Array, k_pool: Array, v_pool: Array,
+                               block_tables: Array, *, d: int, nsel: int,
+                               scale: float, lengths: Array) -> Array:
+    """Oracle for binary_paged_decode_attention.
+
+    q_bits: [B, Hk, G, W]; k_pool: [n_pages, Hk, W, page] bit-planes;
+    v_pool: [n_pages, Hk, page, Dv]; block_tables: [B, max_blocks] int32;
+    lengths: [B] int32. Gathers each slot's pages into the contiguous
+    row-major layout, then defers to decode_attention_ref — the paged
+    kernel must match a contiguous cache holding the same tokens.
+    Returns [B, Hk, G, Dv] float32.
+    """
+    b = block_tables.shape[0]
+    hk = k_pool.shape[1]
+    bt = jnp.maximum(block_tables, 0)
+    kg = k_pool[bt]                               # [B, NB, Hk, W, page]
+    kg = jnp.moveaxis(kg, 1, 3)                   # [B, Hk, W, NB, page]
+    k_rows = jnp.swapaxes(
+        kg.reshape(kg.shape[:3] + (-1,)), -1, -2)  # [B, Hk, T, W] row-major
+    vg = v_pool[bt]                               # [B, NB, Hk, page, Dv]
+    vg = jnp.moveaxis(vg, 1, 2)                   # [B, Hk, NB, page, Dv]
+    v_rows = vg.reshape(vg.shape[:2] + (-1, vg.shape[-1]))
+    t = k_rows.shape[2]
+    g = q_bits.shape[2]
+    lens_f = jnp.broadcast_to(lengths[:, None], (b, hk)).reshape(-1)
+    out = decode_attention_ref(
+        q_bits.reshape(b * hk, g, -1), k_rows.reshape(b * hk, t, -1),
+        v_rows.reshape(b * hk, t, -1), d=d, nsel=nsel, scale=scale,
+        lengths=lens_f)
+    return out.reshape(b, hk, g, -1)
+
+
 def prefill_attention_ref(q_bits: Array, k_bits: Array, v: Array, *, d: int,
                           nsel: int, scale: float, kv_length: int,
                           q_offset: int, group_size: int,

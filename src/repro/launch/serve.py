@@ -37,6 +37,14 @@ def main():
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--baseline", action="store_true",
                     help="full-precision attention instead of HAD")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache (block tables + shared page pool)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--n-pages", type=int, default=0,
+                    help="page pool size (0: dense-equivalent capacity; "
+                         "smaller overcommits and preempts on exhaustion)")
+    ap.add_argument("--policy", choices=("fcfs", "shortest-prompt"),
+                    default="fcfs", help="admission order for the queue")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -54,7 +62,10 @@ def main():
     binary = not args.baseline and cfg.had.enabled and cfg.has_attention
     eng = Engine(cfg, params, ServeConfig(max_len=max_len,
                                           batch_slots=args.slots,
-                                          binary=binary))
+                                          binary=binary, paged=args.paged,
+                                          page_size=args.page_size,
+                                          n_pages=args.n_pages or None,
+                                          policy=args.policy))
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, seed=args.seed)
 
@@ -88,6 +99,11 @@ def main():
     print(f"wall {dt:.2f}s  decode_steps={eng.stats['decode_steps']} "
           f"prefill_chunks={eng.stats['prefill_chunks']} "
           f"({gen_tok / dt:.1f} generated tok/s)")
+    if args.paged:
+        a = eng.allocator
+        print(f"kv pool: peak {a.peak_in_use}/{a.n_pages} pages "
+              f"x {a.page_size} tok, {eng.stats['preemptions']} preemptions, "
+              f"max {eng.stats['max_residents']} concurrent residents")
 
 
 if __name__ == "__main__":

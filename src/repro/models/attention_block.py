@@ -203,6 +203,84 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
     }
 
 
+def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int, *,
+                     binary: bool) -> dict:
+    """Per-attention-layer *paged* cache: one shared pool of fixed-size
+    pages instead of a dense [B, max_len] reservation. Slots map logical
+    token ranges to pages via a block table (serve/paged.py); the pool
+    has no batch axis."""
+    hk, dh = cfg.n_kv_heads, cfg.dh
+    if binary:
+        w = hamming.packed_words(dh)
+        return {
+            "k_bits": jnp.zeros((n_pages, hk, w, page_size), jnp.uint32),
+            "v": jnp.zeros((n_pages, hk, page_size, dh), cfg.dtype),
+        }
+    return {
+        "k": jnp.zeros((n_pages, hk, page_size, dh), cfg.dtype),
+        "v": jnp.zeros((n_pages, hk, page_size, dh), cfg.dtype),
+    }
+
+
+def _paged_cache_write(pool: Array, new: Array, pos: Array, bt: Array, *,
+                       offset_axis: int, n_valid: Array | None = None,
+                       active: Array | None = None) -> Array:
+    """Scatter per-token values into a shared page pool via the block table.
+
+    pool: [n_pages, ...] with the in-page token offset at `offset_axis`;
+    new:  [B, S, ...] per-token values (caller moves the token axis to 1);
+    pos:  scalar or [B] int32 — global position of new[:, 0] per slot;
+    bt:   [B, max_blocks] int32 block table (physical page ids; entries of
+          unwritten ranges may be -1/garbage — they are never addressed).
+
+    Token (b, j) lands at pool[bt[b, (pos_b+j) // page], ..., (pos_b+j) %
+    page, ...]. Writes of padded tokens (j >= n_valid[b]) and of inactive
+    rows are routed to the out-of-bounds page id `n_pages` and DROPPED by
+    the scatter (NOT -1: jnp's `.at[]` normalizes negative indices to the
+    array tail before mode="drop" applies, which would corrupt the last
+    page), so one jitted page-scatter serves decode, padded prefill
+    chunks, and riding-along free slots alike — the paged twin of
+    `_cache_write`'s masked update.
+    """
+    b, s = new.shape[:2]
+    page = pool.shape[offset_axis]
+    nb = bt.shape[1]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    gpos = pos[:, None] + jnp.arange(s, dtype=jnp.int32)[None]     # [B, S]
+    logical = gpos // page
+    off = gpos % page
+    phys = jnp.take_along_axis(bt, jnp.clip(logical, 0, nb - 1), axis=1)
+    ok = logical < nb
+    if n_valid is not None:
+        ok = jnp.logical_and(ok, jnp.arange(s)[None, :] < n_valid[:, None])
+    if active is not None:
+        ok = jnp.logical_and(ok, active[:, None])
+    # block-table entries can be -1 (unallocated) for masked rows; fold
+    # them into the same dropped sentinel before any negative id reaches
+    # the scatter's index normalization
+    phys = jnp.where(jnp.logical_and(ok, phys >= 0), phys, pool.shape[0])
+    idx: list = [phys.reshape(-1)] + [slice(None)] * (pool.ndim - 1)
+    idx[offset_axis] = off.reshape(-1)
+    vals = new.reshape((b * s,) + new.shape[2:]).astype(pool.dtype)
+    return pool.at[tuple(idx)].set(vals, mode="drop")
+
+
+def gather_pages(pool: Array, bt: Array, axis: int) -> Array:
+    """Block-table gather: pool [n_pages, ...] -> contiguous [B, ...] rows.
+
+    `axis` is the token axis of the *contiguous* layout (pages land there,
+    merged with the in-page offset axis). Pages beyond a slot's valid
+    length carry garbage — callers mask by kv_len exactly as on the dense
+    path. Used by the reference/prefill paths; the paged decode kernel
+    reads pages in place via its block-table index map instead.
+    """
+    g = pool[bt]                               # [B, NB, *pool.shape[1:]]
+    g = jnp.moveaxis(g, 1, axis)               # NB adjacent to the page axis
+    shape = g.shape
+    return g.reshape(shape[:axis] + (shape[axis] * shape[axis + 1],)
+                     + shape[axis + 2:])
+
+
 def _cache_write(buf: Array, new: Array, pos: Array, axis: int,
                  n_valid: Array | None = None) -> Array:
     """Write `new` into `buf` at sequence index `pos` along `axis`.
@@ -267,10 +345,41 @@ def _update_std_cache(cache: dict, k: Array, v: Array, pos: Array,
     return cache
 
 
+def _update_binary_cache_paged(cache: dict, k: Array, v: Array, pos: Array,
+                               bt: Array, n_valid: Array | None = None,
+                               active: Array | None = None) -> dict:
+    """Paged twin of `_update_binary_cache`: k,v [B, Hk, S, Dh] scattered
+    into the shared pools at pages named by the block table."""
+    kb = hamming.pack_bits(k.astype(jnp.float32))          # [B,Hk,S,W]
+    cache = dict(cache)
+    cache["k_bits"] = _paged_cache_write(
+        cache["k_bits"], kb.transpose(0, 2, 1, 3), pos, bt, offset_axis=3,
+        n_valid=n_valid, active=active)
+    cache["v"] = _paged_cache_write(
+        cache["v"], jnp.swapaxes(v, 1, 2), pos, bt, offset_axis=2,
+        n_valid=n_valid, active=active)
+    return cache
+
+
+def _update_std_cache_paged(cache: dict, k: Array, v: Array, pos: Array,
+                            bt: Array, n_valid: Array | None = None,
+                            active: Array | None = None) -> dict:
+    cache = dict(cache)
+    cache["k"] = _paged_cache_write(
+        cache["k"], jnp.swapaxes(k, 1, 2), pos, bt, offset_axis=2,
+        n_valid=n_valid, active=active)
+    cache["v"] = _paged_cache_write(
+        cache["v"], jnp.swapaxes(v, 1, 2), pos, bt, offset_axis=2,
+        n_valid=n_valid, active=active)
+    return cache
+
+
 def attn_serve(p: dict, x: Array, *, cfg: ModelConfig, cache: dict,
                pos: Array, n: int, binary: bool,
                cross: bool = False,
-               n_valid: Array | None = None) -> tuple[Array, dict]:
+               n_valid: Array | None = None,
+               block_tables: Array | None = None,
+               active: Array | None = None) -> tuple[Array, dict]:
     """Prefill (S>1) or decode (S=1) step against a KV cache.
 
     x: [B, S, D]; pos: scalar int32 (uniform batch) or [B] int32 vector of
@@ -284,12 +393,33 @@ def attn_serve(p: dict, x: Array, *, cfg: ModelConfig, cache: dict,
     one jit trace. Only the valid prefix is written to the cache, the
     valid cache length becomes pos + n_valid (not pos + S), and padded
     query rows yield garbage outputs the caller must discard.
+
+    block_tables ([B, max_blocks] int32, optional): the cache is *paged*
+    (one shared page pool per layer, see serve/paged.py) and slot rows
+    address it through this table. Writes become a page-scatter (inactive
+    rows and chunk padding are dropped at scatter time — `active` masks
+    here because a shared pool has no per-slot rows for serve_step's
+    post-hoc select), decode reads pages in place through the paged
+    Pallas kernel, and the prefill/reference paths gather pages into the
+    contiguous layout per step. Tables are traced arguments: their
+    contents never trigger recompilation.
     """
     b, s, _ = x.shape
     dh = cfg.dh
     h = cfg.n_heads
     q = (x @ p["wq"]).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
-    t_max = (cache["v"].shape[2])
+    paged = block_tables is not None and not cross
+    if paged:
+        # writes see the RAW table: a -1 (unallocated) entry under a
+        # valid token routes to _paged_cache_write's drop sentinel
+        # instead of silently corrupting page 0. Reads clamp -1 to page
+        # 0 — they only ever touch it past each row's kv_len, where
+        # masking discards the garbage.
+        bt_raw = jnp.asarray(block_tables, jnp.int32)
+        bt = jnp.maximum(bt_raw, 0)
+        t_max = bt.shape[1] * cache["v"].shape[2]
+    else:
+        t_max = cache["v"].shape[2]
     pos = jnp.asarray(pos, jnp.int32)
     ragged = pos.ndim == 1
     q_pos = (pos[:, None] if ragged else pos) + jnp.arange(s)
@@ -304,45 +434,71 @@ def attn_serve(p: dict, x: Array, *, cfg: ModelConfig, cache: dict,
     if binary:
         scale = (p["sigma_q"] * p["sigma_k"]).astype(jnp.float32) * scale_t
         if not cross:
-            cache = _update_binary_cache(cache, k, v, pos, n_valid=n_valid)
+            if paged:
+                cache = _update_binary_cache_paged(cache, k, v, pos,
+                                                   bt_raw, n_valid=n_valid,
+                                                   active=active)
+            else:
+                cache = _update_binary_cache(cache, k, v, pos,
+                                             n_valid=n_valid)
         kv_len = pos + s_new if not cross else cache.get("len", t_max)
         qb = hamming.pack_bits(q.astype(jnp.float32))      # [B,H,S,W]
-        if cfg.had.use_kernels:
-            if s == 1:
+        if cfg.had.use_kernels and s == 1:
+            if paged:
+                # raw table: the ops wrapper owns the -1 clamp
+                y = kops.paged_decode_attention(
+                    qb[:, :, 0], cache["k_bits"], cache["v"], bt_raw, d=dh,
+                    nsel=n, scale=scale,
+                    lengths=jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32),
+                                             (b,)))
+            else:
                 y = kops.decode_attention(
                     qb[:, :, 0], cache["k_bits"], cache["v"], d=dh,
                     nsel=n, scale=scale,
                     lengths=jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32),
                                              (b,)),
                     block_t=cfg.had.kernel_block_t, bitplanes=True)
-                y = y[:, :, None]                          # [B,H,1,Dh]
-            else:
+            y = y[:, :, None]                              # [B,H,1,Dh]
+        else:
+            k_bits_bp = (gather_pages(cache["k_bits"], bt, 3) if paged
+                         else cache["k_bits"])             # [B,Hk,W,T]
+            v_rows = (gather_pages(cache["v"], bt, 2) if paged
+                      else cache["v"])                     # [B,Hk,T,Dh]
+            if cfg.had.use_kernels:
                 y = kops.prefill_attention(
-                    qb, jnp.swapaxes(cache["k_bits"], -1, -2), cache["v"],
+                    qb, jnp.swapaxes(k_bits_bp, -1, -2), v_rows,
                     d=dh, nsel=n, scale=scale, kv_length=kv_len,
                     q_offset=pos, q_length=n_valid,
                     causal=cfg.causal and not cross,
                     block_q=cfg.had.kernel_block_q,
                     block_t=cfg.had.kernel_block_t)
-        else:
-            kb_rows = jnp.swapaxes(cache["k_bits"], -1, -2)  # [B,Hk,T,W]
-            kv_valid = jnp.broadcast_to(
-                jnp.arange(t_max)[None, :] < jnp.reshape(kv_len, (-1, 1)),
-                (b, t_max))
-            y = A.had_infer_attention(qb, kb_rows, cache["v"], d=dh, n=n,
-                                      scale=scale,
-                                      causal=cfg.causal and not cross,
-                                      q_offset=pos, kv_valid=kv_valid,
-                                      q_length=n_valid)
+            else:
+                kb_rows = jnp.swapaxes(k_bits_bp, -1, -2)  # [B,Hk,T,W]
+                kv_valid = jnp.broadcast_to(
+                    jnp.arange(t_max)[None, :] < jnp.reshape(kv_len,
+                                                             (-1, 1)),
+                    (b, t_max))
+                y = A.had_infer_attention(qb, kb_rows, v_rows, d=dh, n=n,
+                                          scale=scale,
+                                          causal=cfg.causal and not cross,
+                                          q_offset=pos, kv_valid=kv_valid,
+                                          q_length=n_valid)
         y = y.astype(x.dtype)
     else:
         if not cross:
-            cache = _update_std_cache(cache, k, v, pos, n_valid=n_valid)
+            if paged:
+                cache = _update_std_cache_paged(cache, k, v, pos, bt_raw,
+                                                n_valid=n_valid,
+                                                active=active)
+            else:
+                cache = _update_std_cache(cache, k, v, pos, n_valid=n_valid)
         kv_len = pos + s_new if not cross else cache.get("len", t_max)
+        k_rows = gather_pages(cache["k"], bt, 2) if paged else cache["k"]
+        v_rows = gather_pages(cache["v"], bt, 2) if paged else cache["v"]
         kv_valid = jnp.broadcast_to(
             jnp.arange(t_max)[None, :] < jnp.reshape(kv_len, (-1, 1)),
             (b, t_max))
-        y = A.standard_attention(q, cache["k"], cache["v"], scale=scale_t,
+        y = A.standard_attention(q, k_rows, v_rows, scale=scale_t,
                                  causal=cfg.causal and not cross,
                                  q_offset=pos, kv_valid=kv_valid)
     return _out(p, y, cfg), cache

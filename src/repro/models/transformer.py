@@ -314,12 +314,25 @@ def forward_distill(teacher: dict, student: dict, batch: dict, *,
 # ---------------------------------------------------------------------------
 
 def init_caches(cfg: ModelConfig, batch: int, max_len: int, *,
-                binary: bool) -> dict:
-    """Stacked per-position caches matching the blocks pytree structure."""
+                binary: bool, paged: bool = False,
+                n_pages: int | None = None, page_size: int = 16) -> dict:
+    """Stacked per-position caches matching the blocks pytree structure.
+
+    With ``paged=True`` self-attention layers allocate a shared page pool
+    (``[n_pages, ...]``, no batch axis — see serve/paged.py) addressed by
+    per-slot block tables instead of a dense ``[batch, max_len]``
+    reservation; cross-attention caches (static, n_image_tokens-sized) and
+    SSM states (O(1) per slot) stay dense.
+    """
     caches: dict[str, Any] = {}
     for i, ch in enumerate(cfg.layer_pattern):
         if ch == "A":
-            one = AB.init_cache(cfg, batch, max_len, binary=binary)
+            if paged:
+                assert n_pages is not None, "paged caches need n_pages"
+                one = AB.init_paged_cache(cfg, n_pages, page_size,
+                                          binary=binary)
+            else:
+                one = AB.init_cache(cfg, batch, max_len, binary=binary)
         elif ch == "C":
             # filled by prefill from image embeds; sized at n_image_tokens
             one = AB.init_cache(cfg, batch, max(cfg.n_image_tokens, 1),
@@ -336,7 +349,8 @@ def serve_step(params: dict, batch: dict, caches: dict, *, cfg: ModelConfig,
                pos: Array, n: int, binary: bool,
                logits_mode: str = "all",
                active: Array | None = None,
-               n_valid: Array | None = None) -> tuple[Array, dict]:
+               n_valid: Array | None = None,
+               block_tables: Array | None = None) -> tuple[Array, dict]:
     """Prefill (tokens [B, S>1]) or decode (tokens [B, 1]) against caches.
 
     Returns (logits [B, S, V], updated caches). `pos` is the index of the
@@ -359,6 +373,13 @@ def serve_step(params: dict, batch: dict, caches: dict, *, cfg: ModelConfig,
     valid prefix reaches the KV caches / SSM state, attention treats the
     row's valid cache length as pos + n_valid, and logits_mode="last"
     returns each row's logits at its *last valid* position.
+
+    `block_tables` ([B, max_blocks] int32, optional): self-attention
+    caches are paged (shared page pools, serve/paged.py) and addressed
+    through this table. The table is a traced argument — its contents
+    never force a recompile. Pool leaves have no batch axis, so the
+    per-slot `active` select below cannot apply to them; the page-scatter
+    inside attn_serve drops inactive rows' writes instead.
     """
     x = constrain(_embed_inputs(params, batch, cfg), "b..")
     img = _image_context(params, batch, cfg)
@@ -404,7 +425,9 @@ def serve_step(params: dict, batch: dict, caches: dict, *, cfg: ModelConfig,
             else:
                 mix, nc = AB.attn_serve(p_i["mixer"], h, cfg=cfg, cache=c_i,
                                         pos=pos, n=n, binary=binary,
-                                        n_valid=n_valid)
+                                        n_valid=n_valid,
+                                        block_tables=block_tables,
+                                        active=active)
             x = x + mix
             if cfg.d_ff > 0:
                 h2 = common.rmsnorm(p_i["norm2"], x, eps=cfg.norm_eps)
@@ -417,11 +440,20 @@ def serve_step(params: dict, batch: dict, caches: dict, *, cfg: ModelConfig,
     x, new_caches = jax.lax.scan(group_fwd, x, (params["blocks"], caches))
     if active is not None:
         # per-slot select: inactive slots keep their old cache/state
-        # (cache leaves are [n_groups, B, ...] -> batch axis 1)
+        # (cache leaves are [n_groups, B, ...] -> batch axis 1). Paged
+        # self-attention pools are shared across slots (leaves
+        # [n_groups, n_pages, ...]) — their writes were already
+        # active-masked at scatter time, so they bypass the select.
         def _sel(new, old):
             m = active.reshape((1, active.shape[0]) + (1,) * (new.ndim - 2))
             return jnp.where(m, new, old)
-        new_caches = jax.tree.map(_sel, new_caches, caches)
+        if block_tables is None:
+            new_caches = jax.tree.map(_sel, new_caches, caches)
+        else:
+            new_caches = {
+                key: (val if cfg.layer_pattern[int(key[3:])] == "A"
+                      else jax.tree.map(_sel, val, caches[key]))
+                for key, val in new_caches.items()}
     if logits_mode == "last":
         if n_valid is None:
             x = x[:, -1:]

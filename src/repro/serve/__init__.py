@@ -1,3 +1,4 @@
 """Serving: continuous-batching engine over the HAD binary-cache path."""
 from repro.serve.engine import (Engine, FinishedRequest, Request,
                                 SamplingParams, ServeConfig)
+from repro.serve.paged import BlockAllocator, PoolStats, pages_needed

@@ -48,6 +48,7 @@ import numpy as np
 
 from repro.models import model as M
 from repro.models.config import ModelConfig
+from repro.serve.paged import BlockAllocator, pages_needed
 
 Array = jax.Array
 
@@ -63,7 +64,23 @@ class ServeConfig:
     # running the batched decode. Smaller -> lower decode tail latency
     # (ITL) during admissions; larger -> faster TTFT for the admitted
     # request. Tail chunks are padded to this size (one jit trace).
+    # When NO slot is decoding the budget is lifted: an otherwise-idle
+    # batch spends as many chunks as it takes for a slot to reach decode.
     prefill_chunk: int = 512
+    # Paged KV cache (serve/paged.py): self-attention caches become one
+    # shared pool of `n_pages` pages of `page_size` tokens, allocated
+    # lazily per prefill chunk / decode token and freed when a request
+    # finishes — HBM scales with tokens resident, not slots x max_len.
+    # n_pages=None reserves dense-equivalent capacity (never preempts);
+    # smaller pools overcommit, and on exhaustion the engine preempts the
+    # youngest resident (frees its pages, re-queues it) to avoid deadlock.
+    paged: bool = False
+    page_size: int = 16
+    n_pages: int | None = None
+    # Admission policy: which queued request a freed slot takes next.
+    # "fcfs" -> submission order; "shortest-prompt" -> fewest prompt
+    # tokens first (ties by submission order). Pure host-side reordering.
+    policy: str = "fcfs"
 
 
 @dataclasses.dataclass
@@ -99,6 +116,8 @@ class _Slot:
     next_token: int = 0            # pending token to feed next decode
     generated: list[int] = dataclasses.field(default_factory=list)
     rng: Any = None
+    prompt_len: int = 0            # ORIGINAL prompt length (resumed
+                                   # requests carry re-prefilled tokens)
 
     @property
     def prefilling(self) -> bool:
@@ -167,23 +186,50 @@ class Engine:
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
+        if scfg.policy not in ("fcfs", "shortest-prompt"):
+            raise ValueError(f"unknown policy {scfg.policy!r}")
         self.n = scfg.topn if scfg.topn is not None else cfg.had.topn(scfg.max_len)
         self.chunk = max(1, min(scfg.prefill_chunk, scfg.max_len))
-        self.caches = M.init_caches(cfg, scfg.batch_slots, scfg.max_len,
-                                    binary=scfg.binary)
+        if scfg.paged:
+            self.page = scfg.page_size
+            self.max_blocks = pages_needed(scfg.max_len, self.page)
+            n_pages = (scfg.n_pages if scfg.n_pages is not None
+                       else scfg.batch_slots * self.max_blocks)
+            self.allocator: BlockAllocator | None = BlockAllocator(
+                n_pages, self.page)
+            # host-side block tables, mirrored to device every step as a
+            # TRACED argument (contents never recompile); -1 = unallocated
+            self.block_tables = np.full(
+                (scfg.batch_slots, self.max_blocks), -1, np.int32)
+            self.caches = M.init_caches(cfg, scfg.batch_slots, scfg.max_len,
+                                        binary=scfg.binary, paged=True,
+                                        n_pages=n_pages, page_size=self.page)
+        else:
+            self.allocator = None
+            self.block_tables = None
+            self.caches = M.init_caches(cfg, scfg.batch_slots, scfg.max_len,
+                                        binary=scfg.binary)
         self.slots = [_Slot() for _ in range(scfg.batch_slots)]
         self.queue: collections.deque[Request] = collections.deque()
         self._finished: list[FinishedRequest] = []
+        self._resume: dict[int, dict] = {}     # preempted-request state
         self._next_id = 0
         self.stats = {"decode_steps": 0, "prefill_chunks": 0,
-                      "prefill_tokens": 0, "tokens_generated": 0}
+                      "prefill_tokens": 0, "tokens_generated": 0,
+                      "preemptions": 0, "max_residents": 0}
 
         @functools.partial(jax.jit, static_argnames=("n", "binary"))
-        def _step(params, batch, caches, pos, active, n_valid, *, n, binary):
+        def _step(params, batch, caches, pos, active, n_valid, block_tables,
+                  *, n, binary):
             return M.serve_step(params, batch, caches, cfg=cfg, pos=pos,
                                 n=n, binary=binary, logits_mode="last",
-                                active=active, n_valid=n_valid)
+                                active=active, n_valid=n_valid,
+                                block_tables=block_tables)
         self._step = _step
+
+    def _bt_device(self) -> Array | None:
+        return (None if self.block_tables is None
+                else jnp.asarray(self.block_tables))
 
     # ------------------------------------------------------------------
     # scheduler API
@@ -209,28 +255,75 @@ class Engine:
             raise ValueError(
                 f"prompt ({req.tokens.size}) + max_new_tokens "
                 f"({req.max_new_tokens}) exceeds max_len {self.scfg.max_len}")
+        if (self.scfg.paged and
+                pages_needed(req.tokens.size + req.max_new_tokens, self.page)
+                > self.allocator.n_pages):
+            raise ValueError(
+                f"request needs more pages than the whole pool "
+                f"({req.tokens.size + req.max_new_tokens} tokens, "
+                f"{self.allocator.n_pages} x {self.page}-token pages)")
         req.request_id = self._next_id
         self._next_id += 1
         self.queue.append(req)
         return req.request_id
 
+    def _prompt_rank(self, req: Request) -> tuple[int, int]:
+        """shortest-prompt sort key. Preempted requests rank by their
+        ORIGINAL prompt length (their tokens grew by the folded-in
+        generation replay — ranking on that would self-deprioritize a
+        request a little more on every eviction, starving it under a
+        stream of short submissions)."""
+        entry = self._resume.get(req.request_id)
+        size = entry["prompt_len"] if entry else int(req.tokens.size)
+        return (size, req.request_id)
+
+    def _pop_next(self) -> Request:
+        """Take the next request per ServeConfig.policy (host-side only)."""
+        if self.scfg.policy == "shortest-prompt":
+            best = min(range(len(self.queue)),
+                       key=lambda i: self._prompt_rank(self.queue[i]))
+            self.queue.rotate(-best)
+            req = self.queue.popleft()
+            self.queue.rotate(best)
+            return req
+        return self.queue.popleft()
+
     def step(self) -> list[FinishedRequest]:
         """One scheduler step: admit queued requests into free slots, spend
-        the prefill budget on at most one chunk of the earliest admission,
-        then run one batched ragged decode step for all decoding slots.
-        Returns newly finished requests."""
+        the prefill budget (one chunk of the earliest admission — or as
+        many chunks as it takes to reach a decodable slot when nothing is
+        decoding), then run one batched ragged decode step for all
+        decoding slots. Returns newly finished requests."""
         for i, slot in enumerate(self.slots):
             if slot.request is None and self.queue:
-                self._admit(i, self.queue.popleft())
-        prefilling = [i for i, s in enumerate(self.slots) if s.prefilling]
-        if prefilling:
-            i = min(prefilling,
-                    key=lambda j: self.slots[j].request.request_id)
-            self._prefill_chunk(i)
+                self._admit(i, self._pop_next())
+        residents = sum(s.request is not None for s in self.slots)
+        self.stats["max_residents"] = max(self.stats["max_residents"],
+                                          residents)
+        self._run_prefill_budget()
         decoding = [i for i, s in enumerate(self.slots) if s.decoding]
         if decoding:
             self._decode_once(decoding)
         return self._drain_finished()
+
+    def _run_prefill_budget(self) -> None:
+        """Spend the step's prefill budget. With a decoding resident the
+        budget is ONE chunk (interleaving bounds residents' ITL); on an
+        otherwise-idle batch chunks keep flowing until a slot reaches
+        decode (or nothing is left to prefill), so a lone long admission
+        no longer costs one scheduler step per chunk."""
+        spent = 0
+        while True:
+            prefilling = [i for i, s in enumerate(self.slots)
+                          if s.prefilling]
+            if not prefilling:
+                return
+            if spent >= 1 and any(s.decoding for s in self.slots):
+                return
+            i = min(prefilling,
+                    key=lambda j: self.slots[j].request.request_id)
+            self._prefill_chunk(i)
+            spent += 1
 
     def run(self) -> dict[int, np.ndarray]:
         """Step until queue and slots drain; returns request_id -> tokens."""
@@ -246,6 +339,110 @@ class Engine:
         """Zero the counters (e.g. after a warm-up pass, so benchmark stats
         don't double-count)."""
         self.stats = {k: 0 for k in self.stats}
+        if self.allocator is not None:
+            self.allocator.reset_watermark()
+
+    # ------------------------------------------------------------------
+    # paged-pool internals
+    # ------------------------------------------------------------------
+    def _slot_page_count(self, i: int) -> int:
+        row = self.block_tables[i]
+        return int((row >= 0).sum())
+
+    def _free_slot_pages(self, i: int) -> None:
+        row = self.block_tables[i]
+        for page in row[row >= 0]:
+            self.allocator.free(int(page))
+        row[:] = -1
+
+    def _seq_extra_blocks_resume(self, slot: _Slot) -> bool:
+        """Recompute-style resume replays prompt+generated tokens, but
+        sequence-aligned extra inputs (e.g. `frames`, axis 1 == prompt
+        length) have no values for generated positions — once a slot with
+        such extras has generated tokens, it cannot be preempted
+        faithfully."""
+        req = slot.request
+        if not slot.generated or not req.extra:
+            return False
+        return any(k != "image_embeds" and np.ndim(v) >= 2
+                   and np.shape(v)[1] == slot.prompt_len
+                   for k, v in req.extra.items())
+
+    def _pick_victim(self) -> int:
+        """Youngest resident (highest request_id) pays for pool pressure —
+        the preemption order that keeps FCFS progress guarantees. Slots
+        whose resume would be lossy (sequence-aligned extras + generated
+        tokens) are never evicted; if no clean victim exists the pool is
+        genuinely too small for the workload."""
+        ok = [i for i, s in enumerate(self.slots)
+              if s.request is not None
+              and not self._seq_extra_blocks_resume(s)]
+        if not ok:
+            raise RuntimeError(
+                "KV page pool exhausted and every resident carries "
+                "sequence-aligned extra inputs that cannot be "
+                "re-prefilled after eviction; increase n_pages")
+        return max(ok, key=lambda i: self.slots[i].request.request_id)
+
+    def _preempt(self, i: int) -> None:
+        """Evict slot i: free its pages and re-queue its request at the
+        front (it keeps its request_id, hence its age priority).
+        Recompute-style resume: tokens generated so far are appended to
+        the prompt and re-prefilled on re-admission; the slot's sampling
+        rng rides along so the continuation draws the same stream."""
+        slot = self.slots[i]
+        req = slot.request
+        self.stats["preemptions"] += 1
+        # the slot (not self._resume — _admit pops entries) carries the
+        # ORIGINAL prompt length across resumes; only generated tokens
+        # not yet folded into the prompt by an earlier preemption are
+        # appended (tokens[prompt_len:] already replays those)
+        prompt_len = slot.prompt_len
+        already = int(req.tokens.size) - prompt_len
+        if len(slot.generated) > already:
+            req.tokens = np.concatenate(
+                [req.tokens,
+                 np.asarray(slot.generated[already:], np.int32)])
+        self._resume[req.request_id] = {
+            "prompt_len": prompt_len,
+            "generated": list(slot.generated),
+            "rng": slot.rng,
+        }
+        self._free_slot_pages(i)
+        self.queue.appendleft(req)
+        slot.request = None
+        slot.length = 0
+        slot.prefill_pos = 0
+        slot.next_token = 0
+        slot.generated = []
+
+    def _ensure_pages(self, i: int, upto: int, *, preempt: bool = True
+                      ) -> bool:
+        """Grow slot i's block table to cover `upto` tokens, allocating
+        lazily from the shared pool. On exhaustion, preempt the youngest
+        resident and retry. Returns False iff slot i itself was the
+        victim (the caller skips its work this step; the request is back
+        in the queue)."""
+        if not self.scfg.paged:
+            return True
+        need = pages_needed(upto, self.page)
+        row = self.block_tables[i]
+        have = self._slot_page_count(i)
+        while have < need:
+            page = self.allocator.alloc()
+            if page is None:
+                if not preempt:
+                    raise RuntimeError(
+                        f"KV page pool exhausted "
+                        f"({self.allocator.n_pages} pages in use)")
+                victim = self._pick_victim()
+                self._preempt(victim)
+                if victim == i:
+                    return False
+                continue
+            row[have] = page
+            have += 1
+        return True
 
     # ------------------------------------------------------------------
     # internals
@@ -253,13 +450,22 @@ class Engine:
     def _admit(self, i: int, req: Request) -> None:
         """Bind `req` to slot i. Metadata only — prefill happens one chunk
         per `step()`, written in place into the slot's rows of the shared
-        cache (no per-admission cache allocation or copy-back)."""
+        cache (no per-admission cache allocation or copy-back). A
+        preempted request restores its generation state (its re-extended
+        prompt replays the tokens already emitted)."""
         slot = self.slots[i]
         slot.request = req
         slot.length = 0
         slot.prefill_pos = 0
-        slot.generated = []
-        slot.rng = np.random.default_rng(req.sampling.seed)
+        entry = self._resume.pop(req.request_id, None)
+        if entry is not None:
+            slot.prompt_len = entry["prompt_len"]
+            slot.generated = list(entry["generated"])
+            slot.rng = entry["rng"]
+        else:
+            slot.prompt_len = int(req.tokens.size)
+            slot.generated = []
+            slot.rng = np.random.default_rng(req.sampling.seed)
 
     def _prefill_step(self, tokens: np.ndarray, extra: dict,
                       pos: np.ndarray, active: np.ndarray,
@@ -272,7 +478,7 @@ class Engine:
         batch.update(extra)
         logits, self.caches = self._step(
             self.params, batch, self.caches, jnp.asarray(pos),
-            jnp.asarray(active), jnp.asarray(n_valid),
+            jnp.asarray(active), jnp.asarray(n_valid), self._bt_device(),
             n=self.n, binary=self.scfg.binary)
         self.stats["prefill_chunks"] += 1
         self.stats["prefill_tokens"] += int(n_valid.sum())
@@ -289,6 +495,8 @@ class Engine:
         lo = slot.prefill_pos
         hi = min(lo + self.chunk, s)
         nv = hi - lo
+        if not self._ensure_pages(i, hi):
+            return                      # slot itself preempted for pages
         b = self.scfg.batch_slots
         tokens = np.zeros((b, self.chunk), np.int32)
         tokens[i, :nv] = req.tokens[lo:hi]
@@ -315,6 +523,17 @@ class Engine:
     def _decode_once(self, decoding: list[int]) -> None:
         """One batched ragged decode step for the given slots; prefilling
         and free slots ride along with cache updates masked out."""
+        if self.scfg.paged:
+            # oldest slots claim pages first, so pool pressure lands on
+            # the youngest (and an ensure can only preempt younger slots
+            # or the requester itself)
+            for i in sorted(decoding,
+                            key=lambda j: self.slots[j].request.request_id):
+                if self.slots[i].decoding:
+                    self._ensure_pages(i, self.slots[i].length + 1)
+            decoding = [i for i in decoding if self.slots[i].decoding]
+            if not decoding:
+                return
         tokens = np.array([s.next_token if s.decoding else 0
                            for s in self.slots], np.int32)
         pos = np.array([s.length for s in self.slots], np.int32)
@@ -322,7 +541,7 @@ class Engine:
         logits, self.caches = self._step(
             self.params, {"tokens": jnp.asarray(tokens)[:, None]},
             self.caches, jnp.asarray(pos), jnp.asarray(active), None,
-            n=self.n, binary=self.scfg.binary)
+            self._bt_device(), n=self.n, binary=self.scfg.binary)
         logits = np.asarray(logits[:, 0, :self.cfg.vocab_size])
         self.stats["decode_steps"] += 1
         for i in decoding:
@@ -344,11 +563,14 @@ class Engine:
         slot = self.slots[i]
         self._finished.append(FinishedRequest(
             request_id=slot.request.request_id,
-            prompt_len=int(slot.request.tokens.size),
+            prompt_len=slot.prompt_len,
             tokens=np.asarray(slot.generated, np.int32)))
         # free the slot AND reset its serving state: a stale `length` would
         # false-trip the lockstep decode() guard and feed garbage positions
-        # for the inactive row in step()
+        # for the inactive row in step(). Paged: return every page to the
+        # pool the moment the request finishes.
+        if self.scfg.paged:
+            self._free_slot_pages(i)
         slot.request = None
         slot.length = 0
         slot.prefill_pos = 0
@@ -370,8 +592,19 @@ class Engine:
         tokens = np.asarray(tokens, np.int32)
         b, s = tokens.shape
         assert b == self.scfg.batch_slots, (b, self.scfg.batch_slots)
-        self.caches = M.init_caches(self.cfg, b, self.scfg.max_len,
-                                    binary=self.scfg.binary)
+        if self.scfg.paged:
+            n_pages = self.allocator.n_pages
+            self.allocator = BlockAllocator(n_pages, self.page)
+            self.block_tables[:] = -1
+            self.caches = M.init_caches(self.cfg, b, self.scfg.max_len,
+                                        binary=self.scfg.binary, paged=True,
+                                        n_pages=n_pages,
+                                        page_size=self.page)
+            for i in range(b):  # lockstep never preempts: all-or-error
+                self._ensure_pages(i, s, preempt=False)
+        else:
+            self.caches = M.init_caches(self.cfg, b, self.scfg.max_len,
+                                        binary=self.scfg.binary)
         logits = None
         lo = 0
         while lo < s:
@@ -397,10 +630,14 @@ class Engine:
         if (pos >= self.scfg.max_len).any():
             raise ValueError(f"slot cache full (max_len={self.scfg.max_len})")
         b = self.scfg.batch_slots
+        if self.scfg.paged:
+            for i in range(b):  # lockstep never preempts: all-or-error
+                self._ensure_pages(i, int(pos[i]) + 1, preempt=False)
         batch = {"tokens": jnp.asarray(np.asarray(tokens, np.int32))[:, None]}
         logits, self.caches = self._step(
             self.params, batch, self.caches, jnp.asarray(pos),
-            jnp.ones((b,), bool), None, n=self.n, binary=self.scfg.binary)
+            jnp.ones((b,), bool), None, self._bt_device(),
+            n=self.n, binary=self.scfg.binary)
         for slot in self.slots:
             slot.length += 1
         return logits[:, 0, :self.cfg.vocab_size]

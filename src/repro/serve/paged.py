@@ -1,0 +1,118 @@
+"""Paged KV-cache subsystem: block allocator + block-table bookkeeping.
+
+Instead of reserving a dense ``[batch_slots, max_len]`` cache per slot,
+attention caches are carved into fixed-size *pages* drawn from one shared
+pool (vLLM-style PagedAttention, adapted to the HAD packed-bit K cache):
+
+  * per layer, ``k_bits: [n_pages, Hk, W, page]`` uint32 bit-planes and
+    ``v: [n_pages, Hk, page, Dh]`` (full-precision twins ``k``/``v`` with
+    the same ``[n_pages, Hk, page, Dh]`` layout);
+  * per slot, a block table ``block_tables[i, j]`` naming the physical
+    page that holds tokens ``[j*page, (j+1)*page)`` of slot i's sequence
+    (``-1`` = not allocated). The same logical table addresses every
+    layer's pool, so allocation is per-token-range, not per-layer.
+
+HBM then scales with tokens actually *resident* rather than
+``batch_slots x max_len`` reserved — the regime where the paper's 16x
+smaller K cache buys real concurrency.
+
+The allocator is host-side and O(1) per operation: a free-list stack plus
+per-page reference counts (ref-counting is the hook for future
+prefix-cache page sharing; the engine currently holds one ref per page).
+Invariants (property-tested):
+
+  * a page is on the free list iff its refcount is 0;
+  * ``alloc`` never hands out a page twice without an interleaved final
+    ``free``;
+  * ``in_use + n_free == n_pages`` at all times;
+  * ``peak_in_use`` is a high-watermark over the instance's lifetime
+    (reset via ``reset_watermark`` after benchmark warm-up).
+
+Exhaustion is not an error here — ``alloc`` returns ``None`` and the
+*engine* decides (it preempts the youngest resident and re-queues it).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolStats:
+    n_pages: int
+    page_size: int
+    in_use: int
+    n_free: int
+    peak_in_use: int
+    alloc_count: int
+    free_count: int
+
+
+class BlockAllocator:
+    """Free-list allocator over ``n_pages`` fixed-size cache pages."""
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages < 1:
+            raise ValueError(f"n_pages must be >= 1, got {n_pages}")
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        # stack: pop() returns low page ids first (deterministic layouts
+        # in tests; irrelevant to correctness)
+        self._free = list(range(n_pages - 1, -1, -1))
+        self._ref = [0] * n_pages
+        self.peak_in_use = 0
+        self.alloc_count = 0
+        self.free_count = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def stats(self) -> PoolStats:
+        return PoolStats(self.n_pages, self.page_size, self.in_use,
+                         self.n_free, self.peak_in_use, self.alloc_count,
+                         self.free_count)
+
+    def reset_watermark(self) -> None:
+        self.peak_in_use = self.in_use
+
+    # ------------------------------------------------------------------
+    def alloc(self) -> int | None:
+        """Take one page (refcount 1), or None when the pool is exhausted."""
+        if not self._free:
+            return None
+        page = self._free.pop()
+        self._ref[page] = 1
+        self.alloc_count += 1
+        if self.in_use > self.peak_in_use:
+            self.peak_in_use = self.in_use
+        return page
+
+    def incref(self, page: int) -> None:
+        """Add a reference to an allocated page (future prefix sharing)."""
+        if not 0 <= page < self.n_pages or self._ref[page] <= 0:
+            raise ValueError(f"incref of unallocated page {page}")
+        self._ref[page] += 1
+
+    def free(self, page: int) -> None:
+        """Drop one reference; the page returns to the pool at zero."""
+        if not 0 <= page < self.n_pages or self._ref[page] <= 0:
+            raise ValueError(f"free of unallocated page {page}")
+        self._ref[page] -= 1
+        if self._ref[page] == 0:
+            self._free.append(page)
+            self.free_count += 1
+
+    def refcount(self, page: int) -> int:
+        return self._ref[page]
+
+
+def pages_needed(n_tokens: int, page_size: int) -> int:
+    """Pages required to hold ``n_tokens`` (ceil division)."""
+    return -(-n_tokens // page_size)

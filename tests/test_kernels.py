@@ -289,6 +289,86 @@ def test_decode_agrees_with_prefill_last_row():
                                rtol=2e-5, atol=2e-5)
 
 
+# ---------------------------------------------------------------------------
+# binary_paged_decode_attention
+# ---------------------------------------------------------------------------
+
+def _paged_case(b, h, hk, nb, page, d, dv, nsel, lengths, n_pages,
+                seed=0, vdtype=jnp.float32):
+    """Scatter contiguous K/V into a shuffled page pool, then check the
+    paged kernel against (a) the gather-based oracle and (b) the
+    contiguous kernel on the same tokens — the latter bit-exactly, since
+    pages stream in logical order with block_t == page."""
+    t = nb * page
+    rng = np.random.default_rng(seed + 2)
+    qb = _bits((b, h, d), seed)
+    kb = _bits((b, hk, t, d), seed + 1)            # row-major contiguous
+    v = jnp.asarray(rng.normal(size=(b, hk, t, dv)).astype(np.float32),
+                    dtype=vdtype)
+    w = kb.shape[-1]
+    perm = rng.permutation(n_pages)[: b * nb]
+    bt = perm.reshape(b, nb).astype(np.int32)
+    k_pool = np.zeros((n_pages, hk, w, page), np.uint32)
+    v_pool = np.zeros((n_pages, hk, page, dv),
+                      np.asarray(jnp.zeros((), vdtype)).dtype)
+    for bi in range(b):
+        for j in range(nb):
+            pg = bt[bi, j]
+            k_pool[pg] = np.swapaxes(
+                np.asarray(kb)[bi, :, j * page:(j + 1) * page], -1, -2)
+            v_pool[pg] = np.asarray(v)[bi, :, j * page:(j + 1) * page]
+    scale = 1.0 / np.sqrt(d)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    got = ops.paged_decode_attention(
+        qb, jnp.asarray(k_pool), jnp.asarray(v_pool), jnp.asarray(bt),
+        d=d, nsel=nsel, scale=scale, lengths=lengths, interpret=True)
+    g = h // hk
+    want = ref.paged_decode_attention_ref(
+        qb.reshape(b, hk, g, -1), jnp.asarray(k_pool), jnp.asarray(v_pool),
+        jnp.asarray(bt), d=d, nsel=nsel, scale=scale,
+        lengths=lengths).reshape(b, h, dv)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want, np.float32),
+                               rtol=2e-5, atol=2e-5)
+    contig = ops.decode_attention(qb, kb, v, d=d, nsel=nsel, scale=scale,
+                                  lengths=lengths, block_t=page,
+                                  interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(contig))
+
+
+@pytest.mark.parametrize("d", [32, 64, 128])
+@pytest.mark.parametrize("hk", [1, 2])
+def test_paged_decode_basic(d, hk):
+    _paged_case(b=2, h=4, hk=hk, nb=6, page=16, d=d, dv=16, nsel=10,
+                lengths=[96, 96], n_pages=16, seed=d)
+
+
+def test_paged_decode_ragged_lengths_and_garbage_tail():
+    """Short rows leave trailing block-table entries unused; the wrapper
+    clamps them and `lengths` masks whatever page they alias."""
+    _paged_case(b=3, h=2, hk=1, nb=8, page=8, d=32, dv=8, nsel=5,
+                lengths=[64, 17, 1], n_pages=24, seed=7)
+
+
+def test_paged_decode_bf16_values():
+    _paged_case(b=1, h=2, hk=1, nb=4, page=16, d=64, dv=16, nsel=6,
+                lengths=[64], n_pages=6, seed=11, vdtype=jnp.bfloat16)
+
+
+def test_paged_decode_n_exceeds_length():
+    _paged_case(b=1, h=1, hk=1, nb=4, page=8, d=32, dv=4, nsel=1000,
+                lengths=[20], seed=13, n_pages=4)
+
+
+@given(st.integers(1, 3), st.integers(1, 2), st.integers(2, 4),
+       st.integers(1, 48), st.integers(0, 1000))
+@settings(max_examples=8, deadline=None)
+def test_paged_decode_property(b, hk, g, nsel, seed):
+    nb, page = 6, 8
+    lens = np.random.default_rng(seed).integers(1, nb * page + 1, b)
+    _paged_case(b=b, h=hk * g, hk=hk, nb=nb, page=page, d=32, dv=8,
+                nsel=nsel, lengths=list(lens), n_pages=b * nb + 3, seed=seed)
+
+
 def test_decode_block_skip_matches_no_skip():
     """V-block skipping (per-block max < min threshold) is exact: skipped
     blocks contain no kept entries by construction."""

@@ -1,0 +1,121 @@
+"""BlockAllocator unit + property tests (serve/paged.py).
+
+Invariants under arbitrary alloc/incref/free interleavings:
+no double allocation, in_use + n_free == n_pages, a page is free iff its
+refcount is zero, exhaustion returns None (never raises, never corrupts),
+and the peak watermark is monotone within a lifetime.
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.serve import BlockAllocator, pages_needed
+
+
+def test_alloc_free_roundtrip():
+    a = BlockAllocator(4, page_size=8)
+    pages = [a.alloc() for _ in range(4)]
+    assert sorted(pages) == [0, 1, 2, 3]
+    assert a.in_use == 4 and a.n_free == 0
+    assert a.alloc() is None                      # exhausted, not an error
+    for p in pages:
+        a.free(p)
+    assert a.in_use == 0 and a.n_free == 4
+    assert a.peak_in_use == 4
+
+
+def test_refcount_keeps_page_allocated():
+    a = BlockAllocator(2, page_size=4)
+    p = a.alloc()
+    a.incref(p)                                   # 2 refs (prefix sharing)
+    a.free(p)
+    assert a.refcount(p) == 1 and a.in_use == 1   # still held
+    a.free(p)
+    assert a.refcount(p) == 0 and a.in_use == 0
+    assert p in [a.alloc(), a.alloc()]            # back in the pool
+
+
+def test_double_free_and_bad_incref_raise():
+    a = BlockAllocator(2, page_size=4)
+    p = a.alloc()
+    a.free(p)
+    with pytest.raises(ValueError):
+        a.free(p)
+    with pytest.raises(ValueError):
+        a.incref(p)
+    with pytest.raises(ValueError):
+        a.free(99)
+
+
+def test_watermark_reset():
+    a = BlockAllocator(4, page_size=4)
+    p0, p1 = a.alloc(), a.alloc()
+    a.free(p1)
+    assert a.peak_in_use == 2
+    a.reset_watermark()
+    assert a.peak_in_use == 1                     # = current in_use
+    a.alloc()
+    assert a.peak_in_use == 2
+
+
+def test_stats_snapshot():
+    a = BlockAllocator(3, page_size=16)
+    a.free(a.alloc())
+    s = a.stats()
+    assert (s.n_pages, s.page_size) == (3, 16)
+    assert s.alloc_count == 1 and s.free_count == 1
+    assert s.in_use == 0 and s.n_free == 3
+
+
+@pytest.mark.parametrize("n_pages,page_size", [(0, 4), (4, 0)])
+def test_rejects_degenerate_sizes(n_pages, page_size):
+    with pytest.raises(ValueError):
+        BlockAllocator(n_pages, page_size)
+
+
+def test_pages_needed():
+    assert pages_needed(0, 8) == 0
+    assert pages_needed(1, 8) == 1
+    assert pages_needed(8, 8) == 1
+    assert pages_needed(9, 8) == 2
+    assert pages_needed(48, 16) == 3
+
+
+@given(st.integers(1, 12), st.lists(st.integers(0, 3), min_size=1,
+                                    max_size=200), st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_allocator_invariants_property(n_pages, ops, seed):
+    """Random op soup: 0=alloc, 1=free random held page, 2=incref random
+    held page, 3=free (possibly dropping to refcount 0)."""
+    rng = np.random.default_rng(seed)
+    a = BlockAllocator(n_pages, page_size=4)
+    held: dict[int, int] = {}                     # page -> expected refs
+    for op in ops:
+        if op == 0:
+            p = a.alloc()
+            if p is None:
+                assert a.n_free == 0
+            else:
+                assert p not in held, "double allocation"
+                held[p] = 1
+        elif held:
+            p = int(rng.choice(sorted(held)))
+            if op == 2:
+                a.incref(p)
+                held[p] += 1
+            else:
+                a.free(p)
+                held[p] -= 1
+                if held[p] == 0:
+                    del held[p]
+        # invariants after every op
+        assert a.in_use + a.n_free == a.n_pages
+        assert a.in_use == len(held)
+        for p, refs in held.items():
+            assert a.refcount(p) == refs
+        assert a.peak_in_use >= a.in_use
+    # drain: every held page frees cleanly back to a full pool
+    for p, refs in list(held.items()):
+        for _ in range(refs):
+            a.free(p)
+    assert a.n_free == a.n_pages

@@ -30,9 +30,9 @@ def params():
     return M.init_params(jax.random.PRNGKey(10), CFG)
 
 
-def _scfg(slots, binary, max_len=48, chunk=8):
+def _scfg(slots, binary, max_len=48, chunk=8, **kw):
     return ServeConfig(max_len=max_len, batch_slots=slots, binary=binary,
-                       topn=6, prefill_chunk=chunk)
+                       topn=6, prefill_chunk=chunk, **kw)
 
 
 def _sequential(cfg, params, prompts, steps, binary, steps_list=None):
@@ -183,14 +183,14 @@ def test_refill_does_not_disturb_resident_tokens(params):
 # interleaved chunked prefill
 # ---------------------------------------------------------------------------
 
-def _interleave_case(cfg, params, binary):
+def _interleave_case(cfg, params, binary, **scfg_kw):
     """Resident slot A decodes while long prompt B is chunk-prefilled;
     A must emit tokens BETWEEN B's prefill chunks, and both must match
     sequential single-request serving exactly."""
     rng = np.random.default_rng(20)
     pa = rng.integers(0, 64, 6)
     pb = rng.integers(0, 64, 33)                  # 5 chunks at chunk=8
-    eng = Engine(cfg, params, _scfg(2, binary))
+    eng = Engine(cfg, params, _scfg(2, binary, **scfg_kw))
     rid_a = eng.submit(pa, max_new_tokens=12)
     while not eng.slots[0].decoding:              # finish A's admission
         eng.step()
@@ -291,6 +291,264 @@ def test_finish_at_max_len_resets_slot_and_refills(params):
     e1 = Engine(CFG, params, _scfg(1, True, max_len=16))
     sid = e1.submit(pb, max_new_tokens=3)
     np.testing.assert_array_equal(got, e1.run()[sid])
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache (block tables) vs contiguous cache
+# ---------------------------------------------------------------------------
+
+PAGED = dict(paged=True, page_size=8)
+
+
+@pytest.mark.parametrize("binary", [True, False])
+def test_paged_matches_contiguous(params, binary):
+    """Paged serving (block-table addressed page pool) must be pinned to
+    the dense-cache scheduler token-for-token — binary and fp paths."""
+    rng = np.random.default_rng(30)
+    prompts = [rng.integers(0, 64, n) for n in (13, 5, 9)]
+    dense = Engine(CFG, params, _scfg(3, binary))
+    ids_d = [dense.submit(p, max_new_tokens=5) for p in prompts]
+    want = dense.run()
+    paged = Engine(CFG, params, _scfg(3, binary, **PAGED))
+    ids_p = [paged.submit(p, max_new_tokens=5) for p in prompts]
+    got = paged.run()
+    for a, b in zip(ids_d, ids_p):
+        np.testing.assert_array_equal(got[b], want[a])
+    assert paged.stats["preemptions"] == 0      # dense-equivalent pool
+
+
+def test_paged_matches_contiguous_kernel_path():
+    """Paged Pallas decode kernel (block-table prefetch) + gathered-page
+    prefill kernel vs the contiguous kernels."""
+    kparams = M.init_params(jax.random.PRNGKey(10), KCFG)
+    rng = np.random.default_rng(31)
+    prompts = [rng.integers(0, 64, n) for n in (12, 7)]
+    dense = Engine(KCFG, kparams, _scfg(2, True))
+    ids_d = [dense.submit(p, max_new_tokens=4) for p in prompts]
+    want = dense.run()
+    paged = Engine(KCFG, kparams, _scfg(2, True, **PAGED))
+    ids_p = [paged.submit(p, max_new_tokens=4) for p in prompts]
+    got = paged.run()
+    for a, b in zip(ids_d, ids_p):
+        np.testing.assert_array_equal(got[b], want[a])
+
+
+def test_paged_hybrid_ssm_matches_sequential():
+    """Paged attention pools compose with dense SSM decode state: the
+    active-select must keep applying to SSM/conv leaves while the shared
+    pools (no batch axis) are masked at scatter time."""
+    params = M.init_params(jax.random.PRNGKey(13), HCFG)
+    rng = np.random.default_rng(32)
+    prompts = [rng.integers(0, 64, n) for n in (10, 6, 8)]
+    eng = Engine(HCFG, params, _scfg(2, True, **PAGED))
+    ids = [eng.submit(p, max_new_tokens=4) for p in prompts]
+    got = eng.run()
+    want = _sequential(HCFG, params, prompts, 4, True)
+    for rid, w in zip(ids, want):
+        np.testing.assert_array_equal(got[rid], w)
+
+
+@pytest.mark.parametrize("binary", [True, False])
+def test_paged_interleaved_decode_between_chunks(params, binary):
+    """The chunked-prefill/decode interleaving contract holds unchanged
+    over paged caches (pages allocated lazily per chunk / per token)."""
+    _interleave_case(CFG, params, binary, **PAGED)
+
+
+def test_paged_interleave_kernel_path():
+    kparams = M.init_params(jax.random.PRNGKey(10), KCFG)
+    _interleave_case(KCFG, kparams, True, **PAGED)
+
+
+@pytest.mark.parametrize("binary", [True, False])
+def test_paged_preemption_roundtrip(params, binary):
+    """Pool exhaustion preempts the youngest resident (pages freed,
+    request re-queued) and the re-admitted request still produces its
+    sequential-reference tokens — a full preemption -> re-prefill -> keep
+    decoding round trip, binary and fp."""
+    rng = np.random.default_rng(33)
+    prompts = [rng.integers(0, 64, n) for n in (13, 5, 9)]
+    eng = Engine(CFG, params, _scfg(3, binary, paged=True, page_size=8,
+                                    n_pages=3))
+    ids = [eng.submit(p, max_new_tokens=5) for p in prompts]
+    got = eng.run()
+    assert eng.stats["preemptions"] > 0, "pool never exhausted: test is void"
+    want = _sequential(CFG, params, prompts, 5, binary)
+    for rid, w in zip(ids, want):
+        np.testing.assert_array_equal(got[rid], w)
+    assert eng.allocator.in_use == 0            # all pages returned
+
+
+def test_paged_preemption_roundtrip_kernel_path():
+    kparams = M.init_params(jax.random.PRNGKey(10), KCFG)
+    rng = np.random.default_rng(34)
+    prompts = [rng.integers(0, 64, n) for n in (13, 5, 9)]
+    eng = Engine(KCFG, kparams, _scfg(3, True, paged=True, page_size=8,
+                                      n_pages=3))
+    ids = [eng.submit(p, max_new_tokens=4) for p in prompts]
+    got = eng.run()
+    assert eng.stats["preemptions"] > 0
+    want = _sequential(KCFG, kparams, prompts, 4, True)
+    for rid, w in zip(ids, want):
+        np.testing.assert_array_equal(got[rid], w)
+
+
+def test_paged_double_preemption_does_not_duplicate_tokens(params):
+    """A request preempted TWICE must not re-fold already-replayed
+    generated tokens into its prompt (the original prompt length lives on
+    the slot — a _resume lookup in _preempt always missed, because
+    _admit pops entries, so the second eviction duplicated the replay
+    and corrupted the continuation). Tight pool + long generations force
+    repeated evictions of the same requests."""
+    rng = np.random.default_rng(40)
+    prompts = [rng.integers(0, 64, n) for n in (13, 9, 11)]
+    eng = Engine(CFG, params, _scfg(3, True, paged=True, page_size=8,
+                                    n_pages=4))
+    ids = [eng.submit(p, max_new_tokens=12) for p in prompts]
+    got = eng.run()
+    assert eng.stats["preemptions"] >= 2, eng.stats
+    want = _sequential(CFG, params, prompts, 12, True)
+    for rid, w in zip(ids, want):
+        np.testing.assert_array_equal(got[rid], w)
+
+
+def test_paged_victim_skips_unreplayable_seq_extras(params):
+    """Recompute-style resume cannot replay sequence-aligned extras
+    (e.g. frames) for generated positions: such slots must never be
+    picked as preemption victims, and if no clean victim exists the
+    engine raises instead of silently corrupting."""
+    from repro.serve.engine import Request
+    eng = Engine(CFG, params, _scfg(2, True, paged=True, page_size=8,
+                                    n_pages=4))
+    r0 = Request(tokens=np.arange(6, dtype=np.int32), request_id=0,
+                 extra={"frames": np.zeros((1, 6, 4), np.float32)})
+    r1 = Request(tokens=np.arange(4, dtype=np.int32), request_id=1)
+    eng._admit(0, r0)
+    eng._admit(1, r1)
+    eng.slots[0].generated = [3]        # frames slot has emitted a token
+    eng.slots[1].generated = [5]
+    assert eng._pick_victim() == 1      # younger AND clean -> slot 1
+    eng.slots[1].request = None         # only the frames slot remains
+    with pytest.raises(RuntimeError):
+        eng._pick_victim()
+    eng.slots[0].generated = []         # no tokens yet -> clean replay
+    assert eng._pick_victim() == 0
+
+
+def test_paged_prefill_chunk_lengths_share_one_trace(params):
+    """Paged serving keeps the compile-count pin: ONE padded prefill-chunk
+    trace + ONE decode trace — block tables are traced arguments, so
+    neither prompt length nor page placement recompiles."""
+    eng = Engine(CFG, params, _scfg(1, True, **PAGED))
+    rng = np.random.default_rng(35)
+    for n in (5, 8, 13, 21, 3):
+        eng.submit(rng.integers(0, 64, n), max_new_tokens=3)
+    eng.run()
+    assert eng._step._cache_size() == 2, eng._step._cache_size()
+
+
+def test_paged_submit_rejects_request_larger_than_pool(params):
+    eng = Engine(CFG, params, _scfg(1, True, paged=True, page_size=8,
+                                    n_pages=2))
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros(15, np.int32), max_new_tokens=3)  # 18 tok > 16
+
+
+def test_paged_lockstep_prefill_decode(params):
+    """The hand-driven lockstep API works over paged caches (pages
+    allocated up front per uniform prefill, strict no-preempt mode)."""
+    prompts = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(12), (2, 8), 0, 64))
+    dense = Engine(CFG, params, _scfg(2, True, max_len=16))
+    paged = Engine(CFG, params, _scfg(2, True, max_len=16, **PAGED))
+    ld = dense.prefill(prompts)
+    lp = paged.prefill(prompts)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(ld),
+                               rtol=1e-5, atol=1e-5)
+    tok = np.asarray(jnp.argmax(lp, -1))
+    np.testing.assert_allclose(np.asarray(paged.decode(tok)),
+                               np.asarray(dense.decode(tok)),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(paged.lengths, [9, 9])
+
+
+# ---------------------------------------------------------------------------
+# scheduler policies + idle multi-chunk prefill
+# ---------------------------------------------------------------------------
+
+def test_shortest_prompt_policy_admits_short_first(params):
+    eng = Engine(CFG, params, _scfg(1, True, policy="shortest-prompt"))
+    rng = np.random.default_rng(36)
+    rid_long = eng.submit(rng.integers(0, 64, 20), max_new_tokens=6)
+    rid_short = eng.submit(rng.integers(0, 64, 4), max_new_tokens=6)
+    eng.step()
+    assert eng.slots[0].request.request_id == rid_short
+    out = eng.run()
+    assert sorted(out) == sorted([rid_long, rid_short])
+    # fcfs keeps submission order
+    eng2 = Engine(CFG, params, _scfg(1, True))
+    rid_l2 = eng2.submit(rng.integers(0, 64, 20), max_new_tokens=6)
+    eng2.submit(rng.integers(0, 64, 4), max_new_tokens=6)
+    eng2.step()
+    assert eng2.slots[0].request.request_id == rid_l2
+
+
+def test_shortest_prompt_outputs_match_fcfs_outputs(params):
+    """Admission order is pure host-side scheduling: every request's
+    tokens are identical under either policy."""
+    rng = np.random.default_rng(37)
+    prompts = [rng.integers(0, 64, n) for n in (17, 4, 11, 7)]
+    outs = {}
+    for policy in ("fcfs", "shortest-prompt"):
+        eng = Engine(CFG, params, _scfg(2, True, policy=policy))
+        ids = [eng.submit(p, max_new_tokens=4) for p in prompts]
+        got = eng.run()
+        outs[policy] = [got[r] for r in ids]
+    for a, b in zip(outs["fcfs"], outs["shortest-prompt"]):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_shortest_prompt_ranks_preempted_by_original_length(params):
+    """A preempted request's tokens grow by the folded-in replay; the
+    shortest-prompt rank must use its ORIGINAL prompt length, or every
+    eviction would deprioritize it further (starvation under a stream of
+    short submissions)."""
+    from repro.serve.engine import Request
+    eng = Engine(CFG, params, _scfg(1, True, policy="shortest-prompt",
+                                    paged=True, page_size=8, n_pages=6))
+    # preempted request: originally 5 tokens, grown to 9 by the replay
+    rp = Request(tokens=np.arange(9, dtype=np.int32), request_id=0)
+    eng._resume[0] = {"prompt_len": 5, "generated": [1, 2, 3, 4],
+                      "rng": np.random.default_rng(0)}
+    fresh = Request(tokens=np.arange(7, dtype=np.int32), request_id=1)
+    eng.queue.extend([fresh, rp])
+    assert eng._pop_next() is rp        # 5 < 7 despite 9 carried tokens
+    assert eng._pop_next() is fresh
+
+
+def test_idle_batch_prefills_whole_prompt_in_one_step(params):
+    """With no decoding resident the per-step budget lifts: a 33-token
+    prompt (5 chunks at chunk=8) admits fully within one step()."""
+    eng = Engine(CFG, params, _scfg(2, True))
+    rng = np.random.default_rng(38)
+    eng.submit(rng.integers(0, 64, 33), max_new_tokens=3)
+    eng.step()
+    assert eng.stats["prefill_chunks"] == 5
+    assert eng.slots[0].decoding
+
+
+def test_busy_batch_still_spends_one_chunk_per_step(params):
+    """A decoding resident caps the budget at one chunk (the ITL bound
+    interleaved prefill exists for)."""
+    rng = np.random.default_rng(39)
+    eng = Engine(CFG, params, _scfg(2, True))
+    eng.submit(rng.integers(0, 64, 5), max_new_tokens=8)
+    while not eng.slots[0].decoding:
+        eng.step()
+    chunks0 = eng.stats["prefill_chunks"]
+    eng.submit(rng.integers(0, 64, 33), max_new_tokens=2)
+    eng.step()
+    assert eng.stats["prefill_chunks"] == chunks0 + 1
 
 
 # ---------------------------------------------------------------------------
