@@ -23,6 +23,15 @@ pool holds fewer tokens than ``batch_slots x max_len`` — dense layout
 capacity — while still serving the whole workload (preempting on
 exhaustion), i.e. paging admits strictly more concurrent residents than
 the dense cache could hold.
+
+With ``--prefix-cache`` a *shared-system-prompt* case runs the same
+staggered arrival workload twice — cold (plain paged) and with automatic
+prefix caching — and reports the TTFT percentiles and ``prefill_tokens``
+side by side plus the hit-rate / cached-page columns
+(``serve_prefix_on_cached,<cached_tokens>,<hit_rate>`` and
+``serve_prefix_on_pages,<page_hits>,<registered>,<evictions>``): the
+matched prefix's prefill chunks are skipped outright, so shared-prefix
+TTFT drops from O(prompt) to O(suffix).
 """
 from __future__ import annotations
 
@@ -110,12 +119,14 @@ def _drive(eng: Engine, prompts: list[np.ndarray], *, stagger: int = 0
 
 
 def _engine(params, cfg, *, slots: int, binary: bool, paged: bool = False,
-            page_size: int = 16, n_pages: int | None = None) -> Engine:
+            page_size: int = 16, n_pages: int | None = None,
+            prefix_cache: bool = False) -> Engine:
     return Engine(cfg, params, ServeConfig(max_len=MAX_LEN, batch_slots=slots,
                                            binary=binary,
                                            prefill_chunk=CHUNK, paged=paged,
                                            page_size=page_size,
-                                           n_pages=n_pages))
+                                           n_pages=n_pages,
+                                           prefix_cache=prefix_cache))
 
 
 def _pcts(xs: list[float]) -> tuple[float, float, float]:
@@ -158,7 +169,7 @@ def _serve_case(params, cfg, *, slots: int, skew: str, binary: bool,
 
 def run(print_fn=print, slot_counts=(1, 2, 4), n_req: int = 4,
         stagger: int = 2, paged: bool = False,
-        page_size: int = 16) -> list[str]:
+        page_size: int = 16, prefix_cache: bool = False) -> list[str]:
     csv = []
     cfg = causal_cfg(d=64, layers=2, heads=4)
     params = M.init_params(jax.random.PRNGKey(0), cfg)
@@ -210,6 +221,68 @@ def run(print_fn=print, slot_counts=(1, 2, 4), n_req: int = 4,
         csv += _overcommit_case(print_fn, params, cfg,
                                 slots=slot_counts[-1], n_req=n_req,
                                 page_size=page_size)
+    if prefix_cache:
+        csv += _prefix_case(print_fn, params, cfg, slots=slot_counts[-1],
+                            n_req=n_req, stagger=stagger,
+                            page_size=page_size)
+    return csv
+
+
+def _prefix_case(print_fn, params, cfg, *, slots: int, n_req: int,
+                 stagger: int, page_size: int) -> list[str]:
+    """Shared-system-prompt arrivals: every request is one long common
+    prefix plus a short unique suffix — the repeated-long-context regime
+    prefix caching exists for. The same staggered workload runs cold
+    (plain paged) and with the prefix cache; the cached pass's admissions
+    skip the matched prefix's prefill chunks entirely, so TTFT and
+    prefill_tokens drop together (bit-identical outputs are pinned in
+    tests/test_prefix_cache.py; the harness asserts the prefill-work
+    reduction)."""
+    rng = np.random.default_rng(11)
+    sys_prompt = rng.integers(0, 512, size=2 * PROMPT_MEAN)
+    suffix = min(page_size, MAX_LEN - 2 * PROMPT_MEAN - GEN)
+    assert suffix >= 1, "shared prompt leaves no room for a unique suffix"
+    n_lat = max(n_req, slots + 2)
+    prompts = [np.concatenate([sys_prompt,
+                               rng.integers(0, 512, size=suffix)])
+               for _ in range(n_lat)]
+    csv, ptoks = [], {}
+    for cached in (False, True):
+        tag = "on" if cached else "off"
+        eng = _engine(params, cfg, slots=slots, binary=True, paged=True,
+                      page_size=page_size, prefix_cache=cached)
+        # warm-up compiles AND (cached pass) populates the index, so the
+        # timed pass measures the steady-state hit regime
+        _drive(eng, prompts, stagger=stagger)
+        eng.reset_stats()
+        r = _drive(eng, prompts, stagger=stagger)
+        st = eng.stats
+        t50, t95, t99 = _pcts(r["ttft"])
+        name = f"serve_prefix_{tag}_s{slots}"
+        csv.append(f"{name}_ttft_p50,{t50:.2f},ms")
+        csv.append(f"{name}_ttft_p95,{t95:.2f},ms")
+        csv.append(f"{name}_ttft_p99,{t99:.2f},ms")
+        csv.append(f"{name}_prefill_tokens,{st['prefill_tokens']},tok")
+        csv.append(_kvpool_row(name, eng))
+        ptoks[tag] = st["prefill_tokens"]
+        if cached:
+            seen = st["cached_tokens"] + st["prefill_tokens"]
+            rate = st["cached_tokens"] / max(seen, 1)
+            pc = eng.prefix
+            csv.append(f"serve_prefix_on_cached,{st['cached_tokens']},"
+                       f"{rate:.3f}")
+            csv.append(f"serve_prefix_on_pages,{pc.hits},{pc.registered},"
+                       f"{pc.evictions}")
+            print_fn(f"  prefix   slots={slots} shared-prompt: TTFT p50 "
+                     f"{t50:.1f} ms, prefill {st['prefill_tokens']} tok, "
+                     f"{st['cached_tokens']} cached "
+                     f"({100 * rate:.0f}% hit rate, {pc.hits} page hits, "
+                     f"{pc.evictions} evictions)")
+        else:
+            print_fn(f"  no-cache slots={slots} shared-prompt: TTFT p50 "
+                     f"{t50:.1f} ms, prefill {st['prefill_tokens']} tok")
+    assert ptoks["on"] < ptoks["off"], (
+        "prefix cache failed to reduce prefill work", ptoks)
     return csv
 
 
@@ -256,15 +329,26 @@ if __name__ == "__main__":
                          "adds KV-pool CSV columns + an overcommit case)")
     ap.add_argument("--page-size", type=int, default=16,
                     help="tokens per KV-cache page (with --paged)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="run the shared-system-prompt case cold vs with "
+                         "automatic prefix caching (implies --paged; adds "
+                         "TTFT/prefill/hit-rate CSV columns)")
     args = ap.parse_args()
+    paged = args.paged or args.prefix_cache
     if args.smoke:
-        lines = run(slot_counts=(2,), n_req=2, paged=args.paged,
-                    page_size=args.page_size)
+        lines = run(slot_counts=(2,), n_req=2, paged=paged,
+                    page_size=args.page_size,
+                    prefix_cache=args.prefix_cache)
         assert any("_ttft_p99," in l for l in lines), lines
         assert any("_stats," in l for l in lines), lines
-        if args.paged:
+        if paged:
             assert any("_kvpool," in l for l in lines), lines
             assert any("overcommit" in l for l in lines), lines
+        if args.prefix_cache:
+            assert any("serve_prefix_on_cached," in l for l in lines), lines
+            assert any(l.startswith("serve_prefix_off_") and "_ttft_p50," in l
+                       for l in lines), lines
         print("smoke ok")
     else:
-        run(paged=args.paged, page_size=args.page_size)
+        run(paged=paged, page_size=args.page_size,
+            prefix_cache=args.prefix_cache)

@@ -43,6 +43,11 @@ def main():
     ap.add_argument("--n-pages", type=int, default=0,
                     help="page pool size (0: dense-equivalent capacity; "
                          "smaller overcommits and preempts on exhaustion)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="automatic prefix caching over the paged pool "
+                         "(implies --paged): requests sharing a page-"
+                         "aligned prompt prefix reuse its KV pages and "
+                         "skip that prefill work")
     ap.add_argument("--policy", choices=("fcfs", "shortest-prompt"),
                     default="fcfs", help="admission order for the queue")
     ap.add_argument("--seed", type=int, default=0)
@@ -60,12 +65,14 @@ def main():
     prompts = [rng.integers(0, cfg.vocab_size, size=int(s)) for s in lens]
     max_len = int(max(lens)) + args.gen
     binary = not args.baseline and cfg.had.enabled and cfg.has_attention
+    paged = args.paged or args.prefix_cache
     eng = Engine(cfg, params, ServeConfig(max_len=max_len,
                                           batch_slots=args.slots,
-                                          binary=binary, paged=args.paged,
+                                          binary=binary, paged=paged,
                                           page_size=args.page_size,
                                           n_pages=args.n_pages or None,
-                                          policy=args.policy))
+                                          policy=args.policy,
+                                          prefix_cache=args.prefix_cache))
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, seed=args.seed)
 
@@ -99,11 +106,17 @@ def main():
     print(f"wall {dt:.2f}s  decode_steps={eng.stats['decode_steps']} "
           f"prefill_chunks={eng.stats['prefill_chunks']} "
           f"({gen_tok / dt:.1f} generated tok/s)")
-    if args.paged:
+    if paged:
         a = eng.allocator
         print(f"kv pool: peak {a.peak_in_use}/{a.n_pages} pages "
               f"x {a.page_size} tok, {eng.stats['preemptions']} preemptions, "
               f"max {eng.stats['max_residents']} concurrent residents")
+    if args.prefix_cache:
+        pc = eng.prefix
+        print(f"prefix cache: {eng.stats['cached_tokens']} prompt tok "
+              f"served from cached pages ({pc.hits} page hits, "
+              f"{pc.registered} registered, {pc.evictions} evicted, "
+              f"{len(pc)} resident entries)")
 
 
 if __name__ == "__main__":

@@ -1,4 +1,5 @@
 """Serving: continuous-batching engine over the HAD binary-cache path."""
 from repro.serve.engine import (Engine, FinishedRequest, Request,
                                 SamplingParams, ServeConfig)
-from repro.serve.paged import BlockAllocator, PoolStats, pages_needed
+from repro.serve.paged import (BlockAllocator, PoolStats, PrefixCache,
+                               chain_hash, pages_needed)

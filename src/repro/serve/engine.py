@@ -22,6 +22,15 @@ with *interleaved chunked prefill* (Sarathi/vLLM-style):
     length shares one compiled trace (plus one decode trace).
   * Per-slot stop conditions (max_new_tokens / eos) free a slot the moment
     its request finishes; the next `step()` re-fills it from the queue.
+  * With `ServeConfig(paged=True, prefix_cache=True)` admission first maps
+    the longest *cached* page-aligned prefix of the prompt into the slot's
+    block table (content-addressed chained page hashes, serve/paged.py)
+    and starts prefill at the matched boundary — a request sharing a long
+    system prompt with a predecessor skips that prefix's prefill chunks
+    entirely. Fully-written pages are published as prefill/decode
+    completes them; a finished request's pages downgrade to a reclaimable
+    LRU rather than freeing, and pool pressure evicts LRU pages before any
+    resident is preempted.
   * `run()` loops until the queue and all slots are drained.
 
 Sampling is pluggable per request: greedy (temperature=0) or
@@ -38,6 +47,7 @@ convenience that routes through the scheduler.
 from __future__ import annotations
 
 import collections
+import copy
 import dataclasses
 import functools
 from typing import Any
@@ -48,7 +58,8 @@ import numpy as np
 
 from repro.models import model as M
 from repro.models.config import ModelConfig
-from repro.serve.paged import BlockAllocator, pages_needed
+from repro.serve.paged import (BlockAllocator, PrefixCache, chain_hash,
+                               pages_needed)
 
 Array = jax.Array
 
@@ -77,6 +88,18 @@ class ServeConfig:
     paged: bool = False
     page_size: int = 16
     n_pages: int | None = None
+    # Automatic prefix caching (requires paged): fully-written pages are
+    # published in a content-addressed index (chained page hashes), and
+    # admission maps the longest cached page-aligned prefix of a prompt
+    # straight into the slot's block table — those tokens are never
+    # prefilled again (shared-system-prompt TTFT becomes O(suffix)). A
+    # finished request's pages are downgraded to an LRU instead of freed;
+    # pool pressure reclaims LRU pages BEFORE preempting any resident.
+    # Unsound for models with SSM or cross-attention layers (per-slot
+    # recurrent/cross state is only zeroed for a fresh occupant at
+    # position 0, which a matched admission skips) — the engine rejects
+    # those combinations at construction.
+    prefix_cache: bool = False
     # Admission policy: which queued request a freed slot takes next.
     # "fcfs" -> submission order; "shortest-prompt" -> fewest prompt
     # tokens first (ties by submission order). Pure host-side reordering.
@@ -118,6 +141,11 @@ class _Slot:
     rng: Any = None
     prompt_len: int = 0            # ORIGINAL prompt length (resumed
                                    # requests carry re-prefilled tokens)
+    # prefix caching: chained keys of the slot's COMPLETED (fully-written
+    # or matched) pages so far; False for requests whose KV content is not
+    # a pure function of their tokens (per-request extra inputs)
+    page_keys: list = dataclasses.field(default_factory=list)
+    cacheable: bool = False
 
     @property
     def prefilling(self) -> bool:
@@ -190,6 +218,17 @@ class Engine:
             raise ValueError(f"unknown policy {scfg.policy!r}")
         self.n = scfg.topn if scfg.topn is not None else cfg.had.topn(scfg.max_len)
         self.chunk = max(1, min(scfg.prefill_chunk, scfg.max_len))
+        if scfg.prefix_cache and not scfg.paged:
+            raise ValueError("prefix_cache requires paged=True (pages are "
+                             "the unit of sharing)")
+        if scfg.prefix_cache and any(ch in cfg.layer_pattern for ch in "MC"):
+            raise ValueError(
+                "prefix_cache is unsound for models with SSM or cross-"
+                "attention layers: per-slot SSM state depends on every "
+                "prefix token, and both it and the cross cache are only "
+                "zeroed for a fresh occupant by a position-0 chunk — a "
+                "prefix-matched admission starts past 0 and would inherit "
+                "the previous occupant's state")
         if scfg.paged:
             self.page = scfg.page_size
             self.max_blocks = pages_needed(scfg.max_len, self.page)
@@ -209,6 +248,8 @@ class Engine:
             self.block_tables = None
             self.caches = M.init_caches(cfg, scfg.batch_slots, scfg.max_len,
                                         binary=scfg.binary)
+        self.prefix = (PrefixCache(self.allocator) if scfg.prefix_cache
+                       else None)
         self.slots = [_Slot() for _ in range(scfg.batch_slots)]
         self.queue: collections.deque[Request] = collections.deque()
         self._finished: list[FinishedRequest] = []
@@ -216,7 +257,8 @@ class Engine:
         self._next_id = 0
         self.stats = {"decode_steps": 0, "prefill_chunks": 0,
                       "prefill_tokens": 0, "tokens_generated": 0,
-                      "preemptions": 0, "max_residents": 0}
+                      "preemptions": 0, "max_residents": 0,
+                      "cached_tokens": 0}
 
         @functools.partial(jax.jit, static_argnames=("n", "binary"))
         def _step(params, batch, caches, pos, active, n_valid, block_tables,
@@ -241,11 +283,19 @@ class Engine:
         """Enqueue a request; returns its request_id. May be called at any
         time — admission happens at the next `step()` if a slot is free."""
         if isinstance(tokens, Request):
-            req = dataclasses.replace(tokens)  # own copy: never alias caller
+            # own copy: never alias caller. dataclasses.replace alone is
+            # SHALLOW — `sampling` and `extra` (and the arrays inside
+            # `extra`) would still alias the caller's objects, so a
+            # mutate-after-submit would rewrite a queued request.
+            req = dataclasses.replace(
+                tokens, sampling=dataclasses.replace(tokens.sampling),
+                extra=copy.deepcopy(tokens.extra))
         else:
             req = Request(tokens=np.asarray(tokens, np.int32),
                           max_new_tokens=max_new_tokens, eos_token=eos_token,
-                          sampling=sampling or SamplingParams(), extra=extra)
+                          sampling=(dataclasses.replace(sampling) if sampling
+                                    else SamplingParams()),
+                          extra=copy.deepcopy(extra))
         # copy (np.array, not asarray): the queued prompt must not alias a
         # caller buffer that may be reused before admission
         req.tokens = np.array(req.tokens, np.int32).reshape(-1)
@@ -337,10 +387,17 @@ class Engine:
 
     def reset_stats(self) -> None:
         """Zero the counters (e.g. after a warm-up pass, so benchmark stats
-        don't double-count)."""
+        don't double-count). `max_residents` is a watermark, not a counter:
+        it restarts at the CURRENT resident count (mirroring
+        `reset_watermark`'s in-use baseline) — zeroing it mid-flight
+        under-reported until the next step."""
         self.stats = {k: 0 for k in self.stats}
+        self.stats["max_residents"] = sum(s.request is not None
+                                          for s in self.slots)
         if self.allocator is not None:
             self.allocator.reset_watermark()
+        if self.prefix is not None:
+            self.prefix.reset_stats()
 
     # ------------------------------------------------------------------
     # paged-pool internals
@@ -350,8 +407,12 @@ class Engine:
         return int((row >= 0).sum())
 
     def _free_slot_pages(self, i: int) -> None:
+        # highest block first: cached pages then park on the LRU leaf-
+        # before-root, so pool pressure evicts a cached chain from its
+        # TAIL — evicting the root first would unmatchably orphan every
+        # descendant key while those pages still sat in the pool
         row = self.block_tables[i]
-        for page in row[row >= 0]:
+        for page in row[row >= 0][::-1]:
             self.allocator.free(int(page))
         row[:] = -1
 
@@ -415,14 +476,17 @@ class Engine:
         slot.prefill_pos = 0
         slot.next_token = 0
         slot.generated = []
+        slot.page_keys = []
+        slot.cacheable = False
 
     def _ensure_pages(self, i: int, upto: int, *, preempt: bool = True
                       ) -> bool:
         """Grow slot i's block table to cover `upto` tokens, allocating
-        lazily from the shared pool. On exhaustion, preempt the youngest
-        resident and retry. Returns False iff slot i itself was the
-        victim (the caller skips its work this step; the request is back
-        in the queue)."""
+        lazily from the shared pool. On exhaustion, reclaim in order:
+        first evict LRU-cached pages (no resident loses work), then
+        preempt the youngest resident and retry. Returns False iff slot i
+        itself was the victim (the caller skips its work this step; the
+        request is back in the queue)."""
         if not self.scfg.paged:
             return True
         need = pages_needed(upto, self.page)
@@ -431,6 +495,8 @@ class Engine:
         while have < need:
             page = self.allocator.alloc()
             if page is None:
+                if self.prefix is not None and self.prefix.evict_one():
+                    continue
                 if not preempt:
                     raise RuntimeError(
                         f"KV page pool exhausted "
@@ -443,6 +509,78 @@ class Engine:
             row[have] = page
             have += 1
         return True
+
+    # ------------------------------------------------------------------
+    # prefix-cache internals
+    # ------------------------------------------------------------------
+    def _chain_keys(self, tokens: np.ndarray, n_full: int,
+                    prev: bytes = b""):
+        """Yield chained content keys for `tokens`' first `n_full` full
+        pages, continuing the chain from `prev`. Lazy: a consumer that
+        stops at the first index miss never pays for hashing the rest of
+        a long prompt."""
+        for j in range(n_full):
+            chunk = np.ascontiguousarray(
+                tokens[j * self.page:(j + 1) * self.page], np.int32)
+            prev = chain_hash(prev, chunk.tobytes())
+            yield prev
+
+    def _match_prefix(self, i: int, slot: _Slot, req: Request) -> None:
+        """Map the longest cached page-aligned prefix of `req` into slot
+        i's block table and start prefill at the matched boundary. Host-
+        side metadata only (block table + refcounts) — the pages' KV
+        content is already on device. At least one token is always left
+        to prefill: sampling the first generated token needs real last-
+        position logits, so a fully-cached prompt recomputes its tail."""
+        n_full = (int(req.tokens.size) - 1) // self.page
+        if n_full <= 0 or len(self.prefix) == 0:
+            return
+        pages, keys = [], []
+        for key in self._chain_keys(req.tokens, n_full):
+            page = self.prefix.lookup(key)
+            if page is None:
+                break
+            pages.append(page)
+            keys.append(key)
+        if not pages:
+            return
+        k = len(pages)
+        self.block_tables[i, :k] = pages
+        slot.page_keys = keys
+        slot.prefill_pos = slot.length = k * self.page
+        self.stats["cached_tokens"] += k * self.page
+
+    def _cache_tokens(self, slot: _Slot) -> np.ndarray:
+        """The tokens actually written to slot's cache rows [0, length):
+        the request's tokens then any generated tokens beyond them (a
+        resumed request's `tokens` already contains the replayed ones)."""
+        req = slot.request
+        replayed = int(req.tokens.size) - slot.prompt_len
+        seq = req.tokens
+        new = slot.generated[replayed:]
+        if new:
+            seq = np.concatenate([seq, np.asarray(new, np.int32)])
+        return seq[:slot.length]
+
+    def _register_full_pages(self, i: int, slot: _Slot) -> None:
+        """Publish every newly COMPLETED page of slot i in the prefix
+        index. Only full pages are ever registered — the partially-filled
+        tail page stays private, so no registered (shareable) page is ever
+        scattered into again: immutability by construction, and the
+        copy-on-write boundary is always page-aligned."""
+        if self.prefix is None or not slot.cacheable:
+            return
+        n_full = slot.length // self.page
+        done = len(slot.page_keys)
+        if n_full <= done:
+            return
+        seq = self._cache_tokens(slot)
+        row = self.block_tables[i]
+        prev = slot.page_keys[-1] if slot.page_keys else b""
+        keys = self._chain_keys(seq[done * self.page:], n_full - done, prev)
+        for j, key in enumerate(keys, start=done):
+            self.prefix.register(key, int(row[j]))
+            slot.page_keys.append(key)
 
     # ------------------------------------------------------------------
     # internals
@@ -466,6 +604,13 @@ class Engine:
             slot.prompt_len = int(req.tokens.size)
             slot.generated = []
             slot.rng = np.random.default_rng(req.sampling.seed)
+        slot.page_keys = []
+        # KV pages are content-addressed by TOKENS alone; per-request extra
+        # inputs (images, frames) also shape the KV, so such requests
+        # neither publish nor consume shared pages
+        slot.cacheable = self.prefix is not None and not req.extra
+        if slot.cacheable:
+            self._match_prefix(i, slot, req)
 
     def _prefill_step(self, tokens: np.ndarray, extra: dict,
                       pos: np.ndarray, active: np.ndarray,
@@ -511,6 +656,7 @@ class Engine:
             pos, active, n_valid)
         slot.prefill_pos = hi
         slot.length = hi
+        self._register_full_pages(i, slot)
         if hi < s:
             return                      # admission continues next step
         if req.max_new_tokens == 0:
@@ -547,6 +693,7 @@ class Engine:
         for i in decoding:
             slot = self.slots[i]
             slot.length += 1
+            self._register_full_pages(i, slot)   # decode filled a page?
             tok = _sample_token(logits[i], slot.request.sampling, slot.rng)
             self._push_token(i, slot, tok)
 
@@ -567,14 +714,19 @@ class Engine:
             tokens=np.asarray(slot.generated, np.int32)))
         # free the slot AND reset its serving state: a stale `length` would
         # false-trip the lockstep decode() guard and feed garbage positions
-        # for the inactive row in step(). Paged: return every page to the
-        # pool the moment the request finishes.
+        # for the inactive row in step(). Paged: drop the slot's page refs
+        # the moment the request finishes — unregistered pages return to
+        # the pool, prefix-registered ones downgrade to the reclaimable
+        # LRU (that downgrade-not-free is what keeps a finished request's
+        # prompt pages matchable by its successors).
         if self.scfg.paged:
             self._free_slot_pages(i)
         slot.request = None
         slot.length = 0
         slot.prefill_pos = 0
         slot.next_token = 0
+        slot.page_keys = []
+        slot.cacheable = False
 
     def _drain_finished(self) -> list[FinishedRequest]:
         out, self._finished = self._finished, []
@@ -587,14 +739,27 @@ class Engine:
         """Uniform-length batched prefill of ALL slots at once.
 
         tokens: [batch_slots, S]. Resets every slot (any resident requests
-        are dropped). Returns last-position logits [batch_slots, V].
-        Shares the padded-chunk trace with scheduler admissions."""
+        are dropped — their caches, sampling rngs and pending tokens are
+        cleared, not just their bindings). Raises if requests are still
+        QUEUED: silently discarding unstarted submissions is never what
+        the caller meant — drain the scheduler first. Returns
+        last-position logits [batch_slots, V]. Shares the padded-chunk
+        trace with scheduler admissions."""
+        if self.queue:
+            raise RuntimeError(
+                f"lockstep prefill() with {len(self.queue)} queued "
+                f"request(s): it would silently orphan them — drain the "
+                f"scheduler (run()) or don't mix the APIs")
         tokens = np.asarray(tokens, np.int32)
         b, s = tokens.shape
         assert b == self.scfg.batch_slots, (b, self.scfg.batch_slots)
         if self.scfg.paged:
             n_pages = self.allocator.n_pages
             self.allocator = BlockAllocator(n_pages, self.page)
+            if self.prefix is not None:
+                # the pool (and its contents) was just reset: every index
+                # entry points at dead content
+                self.prefix = PrefixCache(self.allocator)
             self.block_tables[:] = -1
             self.caches = M.init_caches(self.cfg, b, self.scfg.max_len,
                                         binary=self.scfg.binary, paged=True,
@@ -605,6 +770,19 @@ class Engine:
         else:
             self.caches = M.init_caches(self.cfg, b, self.scfg.max_len,
                                         binary=self.scfg.binary)
+        # dropping residents must drop ALL their scheduler state — stale
+        # `generated`/`next_token`/`rng` leaked into the next occupant's
+        # bookkeeping, and a preempted resident's _resume entry would
+        # outlive the request it belonged to
+        self._resume.clear()
+        for slot in self.slots:
+            slot.request = None
+            slot.next_token = 0
+            slot.generated = []
+            slot.rng = None
+            slot.prompt_len = 0
+            slot.page_keys = []
+            slot.cacheable = False
         logits = None
         lo = 0
         while lo < s:
@@ -618,7 +796,6 @@ class Engine:
                 np.full((b,), nv, np.int32))
             lo = hi
         for slot in self.slots:
-            slot.request = None
             slot.length = s
             slot.prefill_pos = s
         return logits[:, -1, :self.cfg.vocab_size]  # logits_mode="last": S==1

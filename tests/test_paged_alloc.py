@@ -1,15 +1,17 @@
-"""BlockAllocator unit + property tests (serve/paged.py).
+"""BlockAllocator + PrefixCache unit/property tests (serve/paged.py).
 
-Invariants under arbitrary alloc/incref/free interleavings:
-no double allocation, in_use + n_free == n_pages, a page is free iff its
-refcount is zero, exhaustion returns None (never raises, never corrupts),
-and the peak watermark is monotone within a lifetime.
+Invariants under arbitrary alloc/incref/free/cache/evict interleavings:
+no double allocation, in_use + n_lru + n_free == n_pages, a page is on
+the free list iff its refcount is zero AND it is not cached, a page is on
+the LRU iff it is cached with refcount zero, exhaustion returns None
+(never raises, never corrupts), and the peak watermark is monotone within
+a lifetime.
 """
 import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.serve import BlockAllocator, pages_needed
+from repro.serve import BlockAllocator, PrefixCache, chain_hash, pages_needed
 
 
 def test_alloc_free_roundtrip():
@@ -64,7 +66,7 @@ def test_stats_snapshot():
     s = a.stats()
     assert (s.n_pages, s.page_size) == (3, 16)
     assert s.alloc_count == 1 and s.free_count == 1
-    assert s.in_use == 0 and s.n_free == 3
+    assert s.in_use == 0 and s.n_free == 3 and s.n_lru == 0
 
 
 @pytest.mark.parametrize("n_pages,page_size", [(0, 4), (4, 0)])
@@ -81,23 +83,109 @@ def test_pages_needed():
     assert pages_needed(48, 16) == 3
 
 
-@given(st.integers(1, 12), st.lists(st.integers(0, 3), min_size=1,
+# ---------------------------------------------------------------------------
+# cached pages: the LRU downgrade path
+# ---------------------------------------------------------------------------
+
+def test_cached_page_parks_on_lru_not_free_list():
+    a = BlockAllocator(2, page_size=4)
+    p = a.alloc()
+    a.mark_cached(p)
+    a.free(p)
+    assert a.refcount(p) == 0 and a.in_lru(p)
+    assert a.in_use == 0 and a.n_lru == 1 and a.n_free == 1
+    # the free list never hands out an LRU page implicitly
+    assert a.alloc() != p
+    assert a.alloc() is None
+
+
+def test_reuse_revives_from_lru_and_shares():
+    a = BlockAllocator(2, page_size=4)
+    p = a.alloc()
+    a.mark_cached(p)
+    a.free(p)
+    a.reuse(p)                                    # prefix hit: revive
+    assert a.refcount(p) == 1 and not a.in_lru(p) and a.in_use == 1
+    a.reuse(p)                                    # second sharer
+    assert a.refcount(p) == 2
+    a.free(p)
+    a.free(p)
+    assert a.in_lru(p)                            # back to the LRU, kept
+    with pytest.raises(ValueError):
+        a.reuse(a.alloc())                        # uncached page
+
+
+def test_mark_cached_requires_live_reference():
+    a = BlockAllocator(2, page_size=4)
+    p = a.alloc()
+    a.free(p)
+    with pytest.raises(ValueError):
+        a.mark_cached(p)
+
+
+def test_evict_lru_is_least_recently_used_first():
+    a = BlockAllocator(3, page_size=4)
+    pages = [a.alloc() for _ in range(3)]
+    for p in pages:
+        a.mark_cached(p)
+    a.free(pages[1])                              # LRU order: 1, 2, 0
+    a.free(pages[2])
+    a.free(pages[0])
+    assert a.evict_lru() == pages[1]
+    assert not a.is_cached(pages[1])              # forgotten, back in pool
+    a.reuse(pages[2])                             # revive 2 -> LRU: 0
+    assert a.evict_lru() == pages[0]
+    assert a.evict_lru() is None                  # 2 is referenced again
+    assert a.in_use + a.n_lru + a.n_free == 3
+
+
+def test_watermark_counts_revived_pages():
+    a = BlockAllocator(4, page_size=4)
+    p = a.alloc()
+    a.mark_cached(p)
+    a.free(p)
+    a.reset_watermark()
+    assert a.peak_in_use == 0                     # LRU pages are not in use
+    a.reuse(p)
+    assert a.peak_in_use == 1
+
+
+@given(st.integers(1, 12), st.lists(st.integers(0, 6), min_size=1,
                                     max_size=200), st.integers(0, 10_000))
 @settings(max_examples=30, deadline=None)
 def test_allocator_invariants_property(n_pages, ops, seed):
-    """Random op soup: 0=alloc, 1=free random held page, 2=incref random
-    held page, 3=free (possibly dropping to refcount 0)."""
+    """Random op soup: 0=alloc, 1/3=free random held page, 2=incref,
+    4=mark_cached a held page, 5=reuse a cached page, 6=evict_lru."""
     rng = np.random.default_rng(seed)
     a = BlockAllocator(n_pages, page_size=4)
     held: dict[int, int] = {}                     # page -> expected refs
+    cached: set[int] = set()                      # expected cached flags
+    lru: set[int] = set()                         # expected LRU residents
     for op in ops:
         if op == 0:
             p = a.alloc()
             if p is None:
                 assert a.n_free == 0
             else:
-                assert p not in held, "double allocation"
+                assert p not in held and p not in lru, "double allocation"
                 held[p] = 1
+        elif op == 5 and cached:
+            p = int(rng.choice(sorted(cached)))
+            a.reuse(p)
+            held[p] = held.get(p, 0) + 1
+            lru.discard(p)
+        elif op == 6:
+            p = a.evict_lru()
+            if p is None:
+                assert not lru
+            else:
+                assert p in lru
+                lru.discard(p)
+                cached.discard(p)
+        elif op == 4 and held:
+            p = int(rng.choice(sorted(held)))
+            a.mark_cached(p)
+            cached.add(p)
         elif held:
             p = int(rng.choice(sorted(held)))
             if op == 2:
@@ -108,14 +196,97 @@ def test_allocator_invariants_property(n_pages, ops, seed):
                 held[p] -= 1
                 if held[p] == 0:
                     del held[p]
+                    if p in cached:
+                        lru.add(p)
         # invariants after every op
-        assert a.in_use + a.n_free == a.n_pages
+        assert a.in_use + a.n_lru + a.n_free == a.n_pages
         assert a.in_use == len(held)
+        assert a.n_lru == len(lru)
         for p, refs in held.items():
             assert a.refcount(p) == refs
+        for p in lru:
+            assert a.in_lru(p) and a.refcount(p) == 0 and a.is_cached(p)
+        # a page is on the free list iff refcount 0 and not LRU-cached
+        assert set(a._free) == {p for p in range(a.n_pages)
+                                if a.refcount(p) == 0 and not a.in_lru(p)}
         assert a.peak_in_use >= a.in_use
-    # drain: every held page frees cleanly back to a full pool
+    # drain: held pages free cleanly; LRU pages evict cleanly
     for p, refs in list(held.items()):
         for _ in range(refs):
             a.free(p)
+    while a.evict_lru() is not None:
+        pass
     assert a.n_free == a.n_pages
+
+
+# ---------------------------------------------------------------------------
+# PrefixCache: chained-hash index over cached pages
+# ---------------------------------------------------------------------------
+
+def _keys(chunks, prev=b""):
+    out = []
+    for c in chunks:
+        prev = chain_hash(prev, np.asarray(c, np.int32).tobytes())
+        out.append(prev)
+    return out
+
+
+def test_chain_hash_commits_to_prefix():
+    # same page content, different prefix -> different key
+    k_a = _keys([[1, 2], [7, 8]])
+    k_b = _keys([[3, 4], [7, 8]])
+    assert k_a[0] != k_b[0] and k_a[1] != k_b[1]
+    assert _keys([[1, 2], [7, 8]]) == k_a         # deterministic
+
+
+def test_prefix_cache_match_register_roundtrip():
+    a = BlockAllocator(4, page_size=2)
+    pc = PrefixCache(a)
+    keys = _keys([[1, 2], [3, 4]])
+    p0, p1 = a.alloc(), a.alloc()
+    assert pc.register(keys[0], p0) and pc.register(keys[1], p1)
+    assert len(pc) == 2 and a.is_cached(p0) and a.is_cached(p1)
+    # full-chain hit increfs every page
+    assert pc.match(keys) == [p0, p1]
+    assert a.refcount(p0) == 2 and a.refcount(p1) == 2
+    assert pc.hits == 2 and pc.misses == 0
+    # a diverging chain matches only the shared prefix
+    other = _keys([[1, 2], [9, 9]])
+    assert pc.match(other) == [p0]
+    assert pc.misses == 1
+
+
+def test_prefix_cache_first_writer_wins():
+    a = BlockAllocator(4, page_size=2)
+    pc = PrefixCache(a)
+    key = _keys([[5, 6]])[0]
+    p0, p1 = a.alloc(), a.alloc()
+    assert pc.register(key, p0)
+    assert not pc.register(key, p1)               # duplicate content
+    assert not a.is_cached(p1)                    # stays private
+    assert pc.match([key]) == [p0]
+
+
+def test_prefix_cache_evict_one_forgets_key():
+    a = BlockAllocator(2, page_size=2)
+    pc = PrefixCache(a)
+    key = _keys([[1, 1]])[0]
+    p = a.alloc()
+    pc.register(key, p)
+    a.free(p)                                     # -> LRU
+    assert pc.evict_one()
+    assert len(pc) == 0 and pc.evictions == 1
+    assert pc.match([key]) == []                  # key is gone
+    assert not pc.evict_one()                     # LRU empty
+    assert a.n_free == 2
+
+
+def test_prefix_cache_reset_stats():
+    a = BlockAllocator(2, page_size=2)
+    pc = PrefixCache(a)
+    key = _keys([[1, 1]])[0]
+    pc.register(key, a.alloc())
+    pc.match([key])
+    pc.reset_stats()
+    assert (pc.hits, pc.misses, pc.registered, pc.evictions) == (0, 0, 0, 0)
+    assert len(pc) == 1                           # the index itself persists

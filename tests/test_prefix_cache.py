@@ -1,0 +1,333 @@
+"""Automatic prefix caching (copy-on-write KV page sharing) tests.
+
+The load-bearing property: serving with a warm prefix cache is
+bit-identical to serving cold — on the binary, Pallas-kernel, and
+full-precision paths — while the matched prefix's prefill chunks are
+skipped entirely. Sharing must be copy-on-write at page granularity (only
+FULL immutable pages are ever shared; the divergent tail page is always
+private), and pool pressure must reclaim LRU-cached pages before any
+resident is preempted.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig
+from repro.models import model as M
+from repro.models.config import HADConfig
+from repro.serve import Engine, ServeConfig
+
+CFG = ModelConfig(name="pfx", family="dense", n_layers=2, d_model=32,
+                  n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64,
+                  head_dim=16, param_dtype="float32", q_block=16, remat=False)
+KCFG = dataclasses.replace(
+    CFG, had=HADConfig(use_kernels=True, kernel_block_q=8, kernel_block_t=16))
+
+PAGE = 8
+PFX = dict(paged=True, page_size=PAGE, prefix_cache=True)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(jax.random.PRNGKey(10), CFG)
+
+
+def _scfg(slots, binary, max_len=48, chunk=8, **kw):
+    return ServeConfig(max_len=max_len, batch_slots=slots, binary=binary,
+                       topn=6, prefill_chunk=chunk, **kw)
+
+
+def _cold(cfg, params, prompt, steps, binary, **kw):
+    eng = Engine(cfg, params, _scfg(1, binary, **kw))
+    rid = eng.submit(prompt, max_new_tokens=steps)
+    return eng.run()[rid]
+
+
+def _shared_prompts(rng, shared_len=17, tails=(5, 3)):
+    shared = rng.integers(0, 64, shared_len)
+    return [np.concatenate([shared, rng.integers(0, 64, t)]) for t in tails]
+
+
+# ---------------------------------------------------------------------------
+# warm-cache outputs == cold run, prefill skipped
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("binary", [True, False])
+def test_shared_prefix_bit_identical_and_skips_prefill(params, binary):
+    """Acceptance pin: a second request sharing an N-page prefix admits
+    with prefill_tokens reduced by exactly N*page_size versus cold, and
+    its tokens are bit-identical to a cold-cache run."""
+    rng = np.random.default_rng(50)
+    pa, pb = _shared_prompts(rng)                 # share 17 tok = 2 pages
+    eng = Engine(CFG, params, _scfg(2, binary, **PFX))
+    ra = eng.submit(pa, max_new_tokens=5)
+    got_a = eng.run()[ra]
+    before = eng.stats["prefill_tokens"]
+    rb = eng.submit(pb, max_new_tokens=5)
+    got_b = eng.run()[rb]
+    np.testing.assert_array_equal(got_a, _cold(CFG, params, pa, 5, binary))
+    np.testing.assert_array_equal(got_b, _cold(CFG, params, pb, 5, binary))
+    matched = 2 * PAGE                            # 17 shared -> 2 full pages
+    assert eng.stats["cached_tokens"] == matched
+    assert (eng.stats["prefill_tokens"] - before
+            == int(pb.size) - matched)            # only the suffix prefilled
+    assert eng.prefix.hits == 2
+
+
+def test_shared_prefix_bit_identical_kernel_path():
+    kparams = M.init_params(jax.random.PRNGKey(10), KCFG)
+    rng = np.random.default_rng(51)
+    pa, pb = _shared_prompts(rng, shared_len=19, tails=(6, 4))
+    eng = Engine(KCFG, kparams, _scfg(2, True, **PFX))
+    ra = eng.submit(pa, max_new_tokens=4)
+    got_a = eng.run()[ra]
+    rb = eng.submit(pb, max_new_tokens=4)
+    got_b = eng.run()[rb]
+    assert eng.stats["cached_tokens"] == 2 * PAGE
+    np.testing.assert_array_equal(got_a, _cold(KCFG, kparams, pa, 4, True))
+    np.testing.assert_array_equal(got_b, _cold(KCFG, kparams, pb, 4, True))
+
+
+def test_identical_prompt_leaves_one_token_to_prefill(params):
+    """A fully-cached prompt must still prefill its tail: sampling the
+    first token needs real last-position logits. Prompt length an exact
+    page multiple is the sharpest case — all but the last page match."""
+    rng = np.random.default_rng(52)
+    p = rng.integers(0, 64, 3 * PAGE)             # exactly 3 pages
+    eng = Engine(CFG, params, _scfg(1, True, **PFX))
+    r1 = eng.submit(p, max_new_tokens=4)
+    first = eng.run()[r1]
+    before = eng.stats["prefill_tokens"]
+    r2 = eng.submit(p, max_new_tokens=4)
+    second = eng.run()[r2]
+    np.testing.assert_array_equal(first, second)
+    assert eng.stats["cached_tokens"] == 2 * PAGE     # (3*8-1)//8 = 2 pages
+    assert eng.stats["prefill_tokens"] - before == PAGE
+
+
+# ---------------------------------------------------------------------------
+# copy-on-write: full pages shared in place, tail page private
+# ---------------------------------------------------------------------------
+
+def test_cow_shares_full_pages_and_isolates_tail(params):
+    """While both sharers are resident, their block tables alias the SAME
+    physical pages for the matched prefix (refcount 2) but DIFFERENT pages
+    for the divergent tail — and both token streams stay cold-identical."""
+    rng = np.random.default_rng(53)
+    pa, pb = _shared_prompts(rng, shared_len=2 * PAGE + 3, tails=(5, 4))
+    eng = Engine(CFG, params, _scfg(2, True, **PFX))
+    ra = eng.submit(pa, max_new_tokens=10)
+    while not eng.slots[0].decoding:              # A registers its pages
+        eng.step()
+    rb = eng.submit(pb, max_new_tokens=3)
+    eng.step()                                    # B admits + matches
+    bt = eng.block_tables
+    np.testing.assert_array_equal(bt[0, :2], bt[1, :2])   # shared prefix
+    assert bt[1, 2] >= 0 and bt[1, 2] != bt[0, 2]         # private tails
+    for j in range(2):
+        assert eng.allocator.refcount(int(bt[0, j])) == 2
+    got = eng.run()
+    np.testing.assert_array_equal(got[ra], _cold(CFG, params, pa, 10, True))
+    np.testing.assert_array_equal(got[rb], _cold(CFG, params, pb, 3, True))
+
+
+def test_registered_pages_are_never_rewritten(params):
+    """Immutability invariant: once a page is published in the index, no
+    later scatter may target it. Track every page id the engine maps at a
+    block-table index below a slot's write frontier."""
+    rng = np.random.default_rng(54)
+    prompts = _shared_prompts(rng, shared_len=20, tails=(6, 5, 7))
+    eng = Engine(CFG, params, _scfg(3, True, **PFX))
+    ids = [eng.submit(p, max_new_tokens=6) for p in prompts]
+    registered_at = {}                            # page -> length when published
+    while eng.queue or any(s.request is not None for s in eng.slots):
+        eng.step()
+        for i, slot in enumerate(eng.slots):
+            if slot.request is None:
+                continue
+            for j, key in enumerate(slot.page_keys):
+                page = int(eng.block_tables[i, j])
+                # a registered page must always sit wholly below the
+                # slot's write frontier (length), so writes at >= length
+                # can never land in it
+                assert (j + 1) * PAGE <= slot.length
+                registered_at.setdefault(page, key)
+                # and the page's key binding must never change
+                assert registered_at[page] == key
+    assert registered_at                           # pages actually shared
+
+
+# ---------------------------------------------------------------------------
+# eviction order: LRU-cached pages reclaim BEFORE preemption
+# ---------------------------------------------------------------------------
+
+def test_lru_eviction_preferred_over_preemption(params):
+    """A finished request's cached pages are reclaimable: admitting a new
+    request into a pool full of LRU pages must evict from the LRU, never
+    preempt, and still serve cold-identical tokens."""
+    rng = np.random.default_rng(55)
+    pa = rng.integers(0, 64, 20)
+    pb = rng.integers(0, 64, 20)                  # no shared prefix
+    eng = Engine(CFG, params, _scfg(1, True, paged=True, page_size=PAGE,
+                                    n_pages=4, prefix_cache=True))
+    eng.submit(pa, max_new_tokens=4)
+    eng.run()
+    assert eng.allocator.n_lru == 2               # A's 2 full pages cached
+    rb = eng.submit(pb, max_new_tokens=4)
+    got = eng.run()[rb]
+    np.testing.assert_array_equal(got, _cold(CFG, params, pb, 4, True))
+    assert eng.stats["preemptions"] == 0
+    assert eng.prefix.evictions > 0
+
+
+def test_evicting_shared_page_never_corrupts_surviving_sharer(params):
+    """Prefix cache x preemption: a tight pool forces evictions and
+    preemptions while pages are shared between residents; every request
+    must still produce its cold-cache token stream, and the pool must
+    drain clean."""
+    rng = np.random.default_rng(56)
+    shared = rng.integers(0, 64, 2 * PAGE)
+    prompts = [np.concatenate([shared, rng.integers(0, 64, 5 + i)])
+               for i in range(3)]
+    eng = Engine(CFG, params, _scfg(3, True, paged=True, page_size=PAGE,
+                                    n_pages=4, prefix_cache=True))
+    ids = [eng.submit(p, max_new_tokens=8) for p in prompts]
+    got = eng.run()
+    assert eng.stats["preemptions"] > 0, "pool never pressured: test is void"
+    for rid, p in zip(ids, prompts):
+        np.testing.assert_array_equal(got[rid], _cold(CFG, params, p, 8, True))
+    assert eng.allocator.in_use == 0              # every ref returned
+
+
+@pytest.mark.parametrize("binary", [True, False])
+def test_prefix_cache_matches_plain_paged_under_pressure(params, binary):
+    """With and without the prefix cache, the same overcommitted workload
+    yields identical tokens (sharing is a pure optimization)."""
+    rng = np.random.default_rng(57)
+    shared = rng.integers(0, 64, 12)
+    prompts = [np.concatenate([shared, rng.integers(0, 64, 3 + i)])
+               for i in range(3)]
+    outs = {}
+    for cached in (False, True):
+        eng = Engine(CFG, params, _scfg(3, binary, paged=True,
+                                        page_size=PAGE, n_pages=4,
+                                        prefix_cache=cached))
+        ids = [eng.submit(p, max_new_tokens=6) for p in prompts]
+        got = eng.run()
+        outs[cached] = [got[r] for r in ids]
+    for a, b in zip(outs[False], outs[True]):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# scheduler integration
+# ---------------------------------------------------------------------------
+
+def test_prefix_cache_keeps_one_prefill_one_decode_trace(params):
+    """Matching moves the prefill start to an arbitrary page boundary;
+    the padded-chunk trace and decode trace must still be the only two."""
+    eng = Engine(CFG, params, _scfg(2, True, **PFX))
+    rng = np.random.default_rng(58)
+    shared = rng.integers(0, 64, 21)
+    for t in (5, 8, 2, 13):
+        eng.submit(np.concatenate([shared, rng.integers(0, 64, t)]),
+                   max_new_tokens=3)
+    eng.run()
+    assert eng.stats["cached_tokens"] > 0
+    assert eng._step._cache_size() == 2, eng._step._cache_size()
+
+
+def test_preempted_request_rematches_its_own_pages(params):
+    """Recompute-style resume composes with the prefix cache: a preempted
+    request's surviving registered pages satisfy part of its re-prefill
+    (cached_tokens counts them), and the continuation is exact."""
+    rng = np.random.default_rng(59)
+    prompts = [rng.integers(0, 64, n) for n in (13, 9, 11)]
+    eng = Engine(CFG, params, _scfg(3, True, paged=True, page_size=PAGE,
+                                    n_pages=4, prefix_cache=True))
+    ids = [eng.submit(p, max_new_tokens=12) for p in prompts]
+    got = eng.run()
+    assert eng.stats["preemptions"] >= 2, eng.stats
+    for rid, p in zip(ids, prompts):
+        np.testing.assert_array_equal(got[rid],
+                                      _cold(CFG, params, p, 12, True))
+
+
+def test_requests_with_extras_never_share_pages(params):
+    """KV pages are content-addressed by tokens alone, so a request whose
+    KV also depends on extra inputs must neither publish nor consume
+    shared pages — `cacheable` is off for it from admission."""
+    from repro.serve.engine import Request
+    rng = np.random.default_rng(60)
+    prompt = np.asarray(rng.integers(0, 64, 20), np.int32)
+    eng = Engine(CFG, params, _scfg(2, True, **PFX))
+    # seed the index with a clean request sharing the same tokens
+    eng.submit(prompt, max_new_tokens=3)
+    eng.run()
+    assert len(eng.prefix) == 2                   # 2 full pages published
+    before = len(eng.prefix)
+    eng._admit(0, Request(tokens=prompt, request_id=97,
+                          extra={"frames": np.zeros((1, 20, 4), np.float32)}))
+    slot = eng.slots[0]
+    assert not slot.cacheable
+    assert eng.stats["cached_tokens"] == 0        # no match consumed
+    assert slot.prefill_pos == 0                  # prefill starts cold
+    slot.length = 16                              # 2 pages "written"
+    eng.block_tables[0, :2] = [7, 8]
+    eng._register_full_pages(0, slot)
+    assert len(eng.prefix) == before              # nothing published
+
+
+def test_prefix_cache_requires_paged_and_rejects_stateful_layers(params):
+    """SSM state and the cross cache are only zeroed for a fresh occupant
+    by a position-0 chunk; a prefix-matched admission starts past 0 and
+    would inherit the previous occupant's state — both layer kinds must
+    be rejected at construction."""
+    with pytest.raises(ValueError, match="paged"):
+        Engine(CFG, params, _scfg(1, True, prefix_cache=True))
+    hcfg = dataclasses.replace(CFG, name="pfxhyb", family="hybrid",
+                               layer_pattern="AM", ssm_state=16,
+                               ssm_head_dim=16, ssm_chunk=8)
+    hparams = M.init_params(jax.random.PRNGKey(13), hcfg)
+    with pytest.raises(ValueError, match="SSM"):
+        Engine(hcfg, hparams, _scfg(1, True, **PFX))
+    ccfg = dataclasses.replace(CFG, name="pfxvlm", layer_pattern="AC",
+                               n_image_tokens=4, frontend_dim=8)
+    cparams = M.init_params(jax.random.PRNGKey(14), ccfg)
+    with pytest.raises(ValueError, match="cross"):
+        Engine(ccfg, cparams, _scfg(1, True, **PFX))
+
+
+def test_finished_chain_evicts_leaf_before_root(params):
+    """A finished request's cached chain parks on the LRU leaf-first, so
+    pool pressure reclaims it from the TAIL: after one eviction the chain
+    ROOT must still be matchable (evicting the root first would orphan
+    every descendant key while those pages still sat in the pool)."""
+    rng = np.random.default_rng(62)
+    p = rng.integers(0, 64, 3 * PAGE + 4)         # 3 full pages + tail
+    eng = Engine(CFG, params, _scfg(1, True, max_len=48, **PFX))
+    eng.submit(p, max_new_tokens=2)
+    eng.run()
+    assert eng.allocator.n_lru == 3
+    assert eng.prefix.evict_one()                 # pressure: reclaim ONE
+    # the root two pages still match; only the leaf (page 3) was lost
+    eng.stats["cached_tokens"] = 0
+    rid = eng.submit(p, max_new_tokens=2)
+    got = eng.run()[rid]
+    assert eng.stats["cached_tokens"] == 2 * PAGE
+    np.testing.assert_array_equal(got, _cold(CFG, params, p, 2, True))
+
+
+def test_lockstep_prefill_resets_prefix_index(params):
+    """Lockstep prefill() rebuilds pool + caches from zeros: stale index
+    entries would alias dead content and must be dropped with it."""
+    rng = np.random.default_rng(61)
+    eng = Engine(CFG, params, _scfg(2, True, max_len=16, **PFX))
+    eng.submit(rng.integers(0, 64, 12), max_new_tokens=2)
+    eng.run()
+    assert len(eng.prefix) > 0
+    eng.prefill(np.asarray(rng.integers(0, 64, (2, 8)), np.int32))
+    assert len(eng.prefix) == 0
+    assert eng.prefix.allocator is eng.allocator  # rebound to the new pool

@@ -627,6 +627,95 @@ def test_topk_sampling_keeps_exactly_k_on_ties():
 
 
 # ---------------------------------------------------------------------------
+# serving-state bug sweep regressions
+# ---------------------------------------------------------------------------
+
+def test_submit_request_never_aliases_caller_objects(params):
+    """submit(Request) must deep-copy `sampling` and `extra` (and arrays
+    inside `extra`): dataclasses.replace alone is shallow, so a caller
+    mutating after submit rewrote the queued request."""
+    rng = np.random.default_rng(70)
+    prompt = rng.integers(0, 64, 6)
+    sp = SamplingParams(temperature=0.8, top_k=8, seed=123)
+    extra = {"frames": np.zeros((1, 6, 4), np.float32)}
+    eng = Engine(CFG, params, _scfg(1, True))
+    eng.submit(Request(tokens=prompt, max_new_tokens=6,
+                       sampling=sp, extra=extra))
+    # the convenience overload must copy just the same
+    eng.submit(prompt, max_new_tokens=6, sampling=sp, extra=extra)
+    for q in eng.queue:
+        assert q.sampling is not sp
+        assert q.extra is not extra
+        assert not np.shares_memory(q.extra["frames"], extra["frames"])
+
+    def run_once(mutate):
+        sp_local = dataclasses.replace(sp)
+        e = Engine(CFG, params, _scfg(1, True))
+        rid = e.submit(Request(tokens=prompt, max_new_tokens=6,
+                               sampling=sp_local))
+        if mutate:                      # caller reuses its objects
+            sp_local.temperature = 0.0
+            sp_local.seed = 999
+        return e.run()[rid]
+
+    np.testing.assert_array_equal(run_once(False), run_once(True))
+
+
+def test_lockstep_prefill_raises_on_queued_requests(params):
+    """prefill() drops residents by contract, but silently discarding
+    QUEUED requests was never the contract — it must raise."""
+    eng = Engine(CFG, params, _scfg(1, True))
+    eng.submit(np.arange(5, dtype=np.int32), max_new_tokens=4)
+    eng.submit(np.arange(7, dtype=np.int32), max_new_tokens=4)  # queued
+    eng.step()
+    with pytest.raises(RuntimeError, match="queued"):
+        eng.prefill(np.zeros((1, 4), np.int32))
+
+
+def test_lockstep_prefill_clears_dropped_resident_state(params):
+    """Dropping residents must clear generated/next_token/rng and stale
+    _resume entries — the old prefill() left them, so the next occupant's
+    bookkeeping started from another request's state."""
+    rng = np.random.default_rng(71)
+    eng = Engine(CFG, params, _scfg(2, True, max_len=16))
+    eng.submit(rng.integers(0, 64, 5), max_new_tokens=8)
+    while not eng.slots[0].decoding:
+        eng.step()
+    eng.step()
+    assert eng.slots[0].generated               # resident mid-generation
+    eng._resume[99] = {"prompt_len": 1, "generated": [], "rng": None}
+    prompts = np.asarray(rng.integers(0, 64, (2, 8)), np.int32)
+    logits = eng.prefill(prompts)
+    assert logits.shape == (2, CFG.vocab_size)
+    for slot in eng.slots:
+        assert slot.request is None and slot.generated == []
+        assert slot.next_token == 0 and slot.rng is None
+    assert not eng._resume
+    # the lockstep session proceeds as if freshly constructed
+    fresh = Engine(CFG, params, _scfg(2, True, max_len=16))
+    np.testing.assert_allclose(np.asarray(logits),
+                               np.asarray(fresh.prefill(prompts)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_reset_stats_keeps_current_residents_watermark(params):
+    """reset_stats() mid-flight must restart max_residents at the CURRENT
+    resident count (like reset_watermark), not zero — serve_bench resets
+    after warm-up while slots are still resident."""
+    eng = Engine(CFG, params, _scfg(2, True))
+    eng.submit(np.arange(9, dtype=np.int32), max_new_tokens=12)
+    eng.step()
+    assert eng.stats["max_residents"] == 1
+    eng.reset_stats()
+    assert eng.stats["max_residents"] == 1      # resident survived reset
+    assert eng.stats["decode_steps"] == 0       # counters did reset
+    eng.run()
+    # idle engine resets to zero as before
+    eng.reset_stats()
+    assert eng.stats["max_residents"] == 0
+
+
+# ---------------------------------------------------------------------------
 # chunked prefill extra routing (the dropped-`extra` bug)
 # ---------------------------------------------------------------------------
 
