@@ -32,6 +32,16 @@ side by side plus the hit-rate / cached-page columns
 ``serve_prefix_on_pages,<page_hits>,<registered>,<evictions>``): the
 matched prefix's prefill chunks are skipped outright, so shared-prefix
 TTFT drops from O(prompt) to O(suffix).
+
+With ``--swap-pages N`` a *preemption-mechanism* case runs the overcommit
+workload twice — recompute preemption (swap off) vs page-aligned swap-out
+to an N-page host pool — and reports TTFT/ITL percentiles side by side
+plus the preemption-cost columns
+(``serve_swapout_{off,on}_tokens,<swapped_back>,<re_prefilled>`` and
+``serve_swapout_on_bytes,<swap_out_bytes>,<swap_in_bytes>``): swapped
+victims restore their pages verbatim instead of replaying their prompt +
+generation, so the harness asserts the swap pass re-prefills strictly
+fewer tokens.
 """
 from __future__ import annotations
 
@@ -120,13 +130,14 @@ def _drive(eng: Engine, prompts: list[np.ndarray], *, stagger: int = 0
 
 def _engine(params, cfg, *, slots: int, binary: bool, paged: bool = False,
             page_size: int = 16, n_pages: int | None = None,
-            prefix_cache: bool = False) -> Engine:
+            prefix_cache: bool = False, swap_pages: int = 0) -> Engine:
     return Engine(cfg, params, ServeConfig(max_len=MAX_LEN, batch_slots=slots,
                                            binary=binary,
                                            prefill_chunk=CHUNK, paged=paged,
                                            page_size=page_size,
                                            n_pages=n_pages,
-                                           prefix_cache=prefix_cache))
+                                           prefix_cache=prefix_cache,
+                                           swap_pages=swap_pages))
 
 
 def _pcts(xs: list[float]) -> tuple[float, float, float]:
@@ -169,7 +180,8 @@ def _serve_case(params, cfg, *, slots: int, skew: str, binary: bool,
 
 def run(print_fn=print, slot_counts=(1, 2, 4), n_req: int = 4,
         stagger: int = 2, paged: bool = False,
-        page_size: int = 16, prefix_cache: bool = False) -> list[str]:
+        page_size: int = 16, prefix_cache: bool = False,
+        swap_pages: int = 0) -> list[str]:
     csv = []
     cfg = causal_cfg(d=64, layers=2, heads=4)
     params = M.init_params(jax.random.PRNGKey(0), cfg)
@@ -225,6 +237,70 @@ def run(print_fn=print, slot_counts=(1, 2, 4), n_req: int = 4,
         csv += _prefix_case(print_fn, params, cfg, slots=slot_counts[-1],
                             n_req=n_req, stagger=stagger,
                             page_size=page_size)
+    if swap_pages:
+        csv += _swap_case(print_fn, params, cfg, slots=slot_counts[-1],
+                          n_req=n_req, stagger=stagger,
+                          page_size=page_size, swap_pages=swap_pages)
+    return csv
+
+
+def _swap_case(print_fn, params, cfg, *, slots: int, n_req: int,
+               stagger: int, page_size: int, swap_pages: int) -> list[str]:
+    """Preemption-mechanism comparison under an overcommitted pool: the
+    same staggered mixed-length workload runs with recompute preemption
+    (swap off) and with page-aligned swap-out to a host pool. Recompute
+    throws away every computed token of a victim and replays it; swap-out
+    moves the victim's pages to host RAM and restores them verbatim, so
+    its re-prefilled token count drops (to zero when every eviction
+    swaps) — bit-identical outputs are pinned in tests/test_serve_ragged;
+    the harness asserts the prefill-work reduction and reports the
+    host-transfer byte cost that buys it."""
+    from repro.serve import pages_needed
+    dense_pages = slots * pages_needed(MAX_LEN, page_size)
+    n_pages = max(pages_needed(MAX_LEN, page_size), int(dense_pages * 0.4))
+    rng = np.random.default_rng(13)
+    prompts = _prompts(max(n_req, slots + 2), "mixed", rng)
+    csv, replayed = [], {}
+    for swap in (0, swap_pages):
+        tag = "on" if swap else "off"
+        eng = _engine(params, cfg, slots=slots, binary=True, paged=True,
+                      page_size=page_size, n_pages=n_pages, swap_pages=swap)
+        _drive(eng, prompts, stagger=stagger)        # warm-up compile pass
+        eng.reset_stats()
+        r = _drive(eng, prompts, stagger=stagger)
+        st = eng.stats
+        name = f"serve_swapout_{tag}_s{slots}"
+        t50, t95, t99 = _pcts(r["ttft"])
+        i50, i95, i99 = _pcts(r["itl"]) if r["itl"] else (0.0, 0.0, 0.0)
+        for metric, (p50, p95, p99) in (("ttft", (t50, t95, t99)),
+                                        ("itl", (i50, i95, i99))):
+            csv.append(f"{name}_{metric}_p50,{p50:.2f},ms")
+            csv.append(f"{name}_{metric}_p95,{p95:.2f},ms")
+            csv.append(f"{name}_{metric}_p99,{p99:.2f},ms")
+        csv.append(f"{name}_tokens,{st['swapped_tokens']},"
+                   f"{st['replayed_tokens']}")
+        csv.append(_kvpool_row(name, eng))
+        replayed[tag] = st["replayed_tokens"]
+        if swap:
+            assert st["swap_outs"] > 0, (
+                "overcommit never forced a swap-out", dict(st))
+            assert eng.swap.in_use == 0, "swap pool leaked reservations"
+            csv.append(f"{name}_bytes,{st['swap_out_bytes']},"
+                       f"{st['swap_in_bytes']}")
+            print_fn(f"  swap-out  slots={slots}: {st['preemptions']} "
+                     f"preemptions ({st['swap_outs']} swapped), "
+                     f"{st['swapped_tokens']} tok swapped back vs "
+                     f"{st['replayed_tokens']} re-prefilled | TTFT p50 "
+                     f"{t50:.1f} ms | {st['swap_out_bytes']} B out / "
+                     f"{st['swap_in_bytes']} B in")
+        else:
+            assert st["preemptions"] > 0, (
+                "overcommit never preempted: case is void", dict(st))
+            print_fn(f"  recompute slots={slots}: {st['preemptions']} "
+                     f"preemptions, {st['replayed_tokens']} tok "
+                     f"re-prefilled | TTFT p50 {t50:.1f} ms")
+    assert replayed["on"] < replayed["off"], (
+        "swap-out failed to reduce re-prefilled tokens", replayed)
     return csv
 
 
@@ -333,12 +409,19 @@ if __name__ == "__main__":
                     help="run the shared-system-prompt case cold vs with "
                          "automatic prefix caching (implies --paged; adds "
                          "TTFT/prefill/hit-rate CSV columns)")
+    ap.add_argument("--swap-pages", type=int, default=0,
+                    help="run the overcommit case with recompute vs page-"
+                         "aligned swap-out preemption to a host pool of "
+                         "this many pages (implies --paged; adds "
+                         "swapped/re-prefilled token + swap-bytes CSV "
+                         "columns)")
     args = ap.parse_args()
-    paged = args.paged or args.prefix_cache
+    paged = args.paged or args.prefix_cache or bool(args.swap_pages)
     if args.smoke:
         lines = run(slot_counts=(2,), n_req=2, paged=paged,
                     page_size=args.page_size,
-                    prefix_cache=args.prefix_cache)
+                    prefix_cache=args.prefix_cache,
+                    swap_pages=args.swap_pages)
         assert any("_ttft_p99," in l for l in lines), lines
         assert any("_stats," in l for l in lines), lines
         if paged:
@@ -348,7 +431,14 @@ if __name__ == "__main__":
             assert any("serve_prefix_on_cached," in l for l in lines), lines
             assert any(l.startswith("serve_prefix_off_") and "_ttft_p50," in l
                        for l in lines), lines
+        if args.swap_pages:
+            assert any(l.startswith("serve_swapout_on_") and "_tokens," in l
+                       for l in lines), lines
+            assert any(l.startswith("serve_swapout_on_") and "_bytes," in l
+                       for l in lines), lines
+            assert any(l.startswith("serve_swapout_off_") and "_ttft_p50," in l
+                       for l in lines), lines
         print("smoke ok")
     else:
         run(paged=paged, page_size=args.page_size,
-            prefix_cache=args.prefix_cache)
+            prefix_cache=args.prefix_cache, swap_pages=args.swap_pages)

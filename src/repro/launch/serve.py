@@ -33,6 +33,10 @@ def main():
     ap.add_argument("--stagger", type=int, default=2,
                     help="submit a new request every K decode steps "
                          "(0: all up front)")
+    ap.add_argument("--prefill-chunk", type=int, default=512,
+                    help="per-step prefill token budget (smaller bounds "
+                         "resident ITL during admissions and lets partial "
+                         "admissions carry swappable content)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--baseline", action="store_true",
@@ -50,6 +54,16 @@ def main():
                          "skip that prefill work")
     ap.add_argument("--policy", choices=("fcfs", "shortest-prompt"),
                     default="fcfs", help="admission order for the queue")
+    ap.add_argument("--swap-pages", type=int, default=0,
+                    help="page-aligned swap-out preemption (implies "
+                         "--paged): evicted residents' KV pages move to a "
+                         "host pool of this many pages and are restored "
+                         "verbatim on re-admission — no re-prefill")
+    ap.add_argument("--victim-policy", choices=("youngest", "longest-idle"),
+                    default="youngest",
+                    help="which resident pays for pool pressure: the "
+                         "youngest (FCFS progress) or the slot idle the "
+                         "longest since its last emitted token (fairness)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -65,14 +79,17 @@ def main():
     prompts = [rng.integers(0, cfg.vocab_size, size=int(s)) for s in lens]
     max_len = int(max(lens)) + args.gen
     binary = not args.baseline and cfg.had.enabled and cfg.has_attention
-    paged = args.paged or args.prefix_cache
+    paged = args.paged or args.prefix_cache or bool(args.swap_pages)
     eng = Engine(cfg, params, ServeConfig(max_len=max_len,
                                           batch_slots=args.slots,
+                                          prefill_chunk=args.prefill_chunk,
                                           binary=binary, paged=paged,
                                           page_size=args.page_size,
                                           n_pages=args.n_pages or None,
                                           policy=args.policy,
-                                          prefix_cache=args.prefix_cache))
+                                          prefix_cache=args.prefix_cache,
+                                          swap_pages=args.swap_pages,
+                                          victim_policy=args.victim_policy))
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, seed=args.seed)
 
@@ -117,6 +134,15 @@ def main():
               f"served from cached pages ({pc.hits} page hits, "
               f"{pc.registered} registered, {pc.evictions} evicted, "
               f"{len(pc)} resident entries)")
+    if args.swap_pages:
+        sw = eng.swap
+        print(f"swap pool: {eng.stats['swap_outs']} swap-outs / "
+              f"{eng.stats['swap_ins']} swap-ins (peak {sw.peak_in_use}/"
+              f"{sw.capacity} pages), {eng.stats['swapped_tokens']} tok "
+              f"restored without re-prefill vs "
+              f"{eng.stats['replayed_tokens']} recomputed, "
+              f"{eng.stats['swap_out_bytes']} B out / "
+              f"{eng.stats['swap_in_bytes']} B in")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,13 @@
-"""Serving: continuous-batching engine over the HAD binary-cache path."""
+"""Serving: continuous-batching engine over the HAD binary-cache path.
+
+Layered as Scheduler (pure policy -> SchedulePlan) -> ModelRunner
+(executes plans verbatim) -> Engine (compatibility facade).
+"""
 from repro.serve.engine import (Engine, FinishedRequest, Request,
                                 SamplingParams, ServeConfig)
 from repro.serve.paged import (BlockAllocator, PoolStats, PrefixCache,
-                               chain_hash, pages_needed)
+                               SwapPool, SwapStats, chain_hash, pages_needed)
+from repro.serve.runner import ModelRunner
+from repro.serve.scheduler import (DecodeSlot, PlannedAdmission,
+                                   PrefillChunk, Reclaim, SchedulePlan,
+                                   Scheduler, SwapIn)

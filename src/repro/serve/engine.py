@@ -1,40 +1,40 @@
 """Continuous-batching serving engine over the HAD inference path.
 
-The engine is a slot scheduler (vLLM-lite) around one jitted serve step,
-with *interleaved chunked prefill* (Sarathi/vLLM-style):
+The engine is a thin compatibility facade over an explicit
+scheduler/executor split (vLLM-style):
+
+  * :class:`repro.serve.scheduler.Scheduler` — pure host-side *policy*:
+    the request queue, slot metadata, `BlockAllocator` / `PrefixCache` /
+    `SwapPool` bookkeeping, admission order, the prefill budget, victim
+    selection and reclaim ordering. `schedule()` emits a frozen
+    `SchedulePlan` (device-free, unit-testable with no params or caches).
+  * :class:`repro.serve.runner.ModelRunner` — *execution*: the jitted
+    serve step, cache pools, sampling, and swapped pages' contents. It
+    executes a plan verbatim and returns the sampled tokens.
+  * `Engine.step()` is exactly `commit(plan, execute(schedule()))`.
+
+Serving semantics (unchanged public contract):
 
   * `submit()` enqueues a `Request` (prompt of any length, per-request
-    sampling params / stop conditions). Requests arrive at any time —
-    including between decode steps of resident slots.
-  * `step()` ADMITS queued requests into free slots (metadata only — no
-    compute), then spends its prefill token budget (`prefill_chunk`) on at
-    most ONE chunk of the earliest-admitted prefilling slot, written
-    directly into that slot's rows of the shared cache (per-slot
-    `pos`/`active`/`n_valid` masking inside the jitted `_step` — no
-    per-admission batch-1 cache and no host-side cache copy-back), and
-    finally runs ONE batched decode step for every decoding slot with a
-    per-slot position vector `pos: [B]` (ragged batch). A long admission
-    therefore costs residents one chunk of latency per step instead of a
-    whole prompt: resident slots emit decode tokens *between* the prefill
-    chunks of a concurrently admitted request.
-  * Tail prefill chunks are padded to `prefill_chunk` and masked by a
-    per-slot valid-token count (`n_valid`), so every chunk of every prompt
-    length shares one compiled trace (plus one decode trace).
-  * Per-slot stop conditions (max_new_tokens / eos) free a slot the moment
-    its request finishes; the next `step()` re-fills it from the queue.
-  * With `ServeConfig(paged=True, prefix_cache=True)` admission first maps
-    the longest *cached* page-aligned prefix of the prompt into the slot's
-    block table (content-addressed chained page hashes, serve/paged.py)
-    and starts prefill at the matched boundary — a request sharing a long
-    system prompt with a predecessor skips that prefix's prefill chunks
-    entirely. Fully-written pages are published as prefill/decode
-    completes them; a finished request's pages downgrade to a reclaimable
-    LRU rather than freeing, and pool pressure evicts LRU pages before any
-    resident is preempted.
+    sampling params / stop conditions) at any time.
+  * `step()` ADMITS queued requests into free slots (metadata only),
+    spends its prefill token budget (`prefill_chunk`) on at most ONE
+    chunk of the earliest-admitted prefilling slot — written in place
+    into that slot's rows of the shared cache via per-slot
+    `pos`/`active`/`n_valid` masking — then runs ONE batched ragged
+    decode step for every decoding slot. Residents emit tokens *between*
+    a long admission's prefill chunks; tail chunks are padded so every
+    prompt length shares one prefill trace plus one decode trace.
+  * With `ServeConfig(paged=True)` caches are shared page pools behind
+    per-slot block tables; pool pressure reclaims LRU prefix pages
+    first, then evicts a victim — by **page-aligned swap-out** to a
+    bounded host pool when `swap_pages > 0` (pages gathered/freed,
+    restored verbatim on re-admission: zero tokens re-prefilled, rng and
+    generated tokens preserved) and by recompute preemption otherwise.
+  * With `prefix_cache=True` admission maps the longest cached
+    page-aligned prompt prefix into the block table and skips its
+    prefill entirely.
   * `run()` loops until the queue and all slots are drained.
-
-Sampling is pluggable per request: greedy (temperature=0) or
-temperature softmax with optional top-k, seeded per request.
 
 The binary path stores the K cache bit-packed (16x smaller than bf16) and
 top-N-sparsifies the V accumulation — the paper's long-context serving
@@ -46,167 +46,16 @@ convenience that routes through the scheduler.
 """
 from __future__ import annotations
 
-import collections
-import copy
-import dataclasses
-import functools
-from typing import Any
-
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.models import model as M
 from repro.models.config import ModelConfig
-from repro.serve.paged import (BlockAllocator, PrefixCache, chain_hash,
-                               pages_needed)
+from repro.serve.paged import BlockAllocator, PrefixCache, SwapPool  # noqa: F401 (re-export)
+from repro.serve.runner import ModelRunner, _chunk_extra, _sample_token
+from repro.serve.scheduler import (FinishedRequest, Request, SamplingParams,
+                                   SchedulePlan, Scheduler, ServeConfig)
 
-Array = jax.Array
-
-
-@dataclasses.dataclass
-class ServeConfig:
-    max_len: int
-    batch_slots: int
-    binary: bool = True            # HAD path vs full-precision baseline
-    topn: int | None = None        # None -> cfg.had.topn(max_len)
-    # `step()` prefill token budget: each scheduler step spends at most one
-    # prefill chunk of this many tokens on the slot being admitted before
-    # running the batched decode. Smaller -> lower decode tail latency
-    # (ITL) during admissions; larger -> faster TTFT for the admitted
-    # request. Tail chunks are padded to this size (one jit trace).
-    # When NO slot is decoding the budget is lifted: an otherwise-idle
-    # batch spends as many chunks as it takes for a slot to reach decode.
-    prefill_chunk: int = 512
-    # Paged KV cache (serve/paged.py): self-attention caches become one
-    # shared pool of `n_pages` pages of `page_size` tokens, allocated
-    # lazily per prefill chunk / decode token and freed when a request
-    # finishes — HBM scales with tokens resident, not slots x max_len.
-    # n_pages=None reserves dense-equivalent capacity (never preempts);
-    # smaller pools overcommit, and on exhaustion the engine preempts the
-    # youngest resident (frees its pages, re-queues it) to avoid deadlock.
-    paged: bool = False
-    page_size: int = 16
-    n_pages: int | None = None
-    # Automatic prefix caching (requires paged): fully-written pages are
-    # published in a content-addressed index (chained page hashes), and
-    # admission maps the longest cached page-aligned prefix of a prompt
-    # straight into the slot's block table — those tokens are never
-    # prefilled again (shared-system-prompt TTFT becomes O(suffix)). A
-    # finished request's pages are downgraded to an LRU instead of freed;
-    # pool pressure reclaims LRU pages BEFORE preempting any resident.
-    # Unsound for models with SSM or cross-attention layers (per-slot
-    # recurrent/cross state is only zeroed for a fresh occupant at
-    # position 0, which a matched admission skips) — the engine rejects
-    # those combinations at construction.
-    prefix_cache: bool = False
-    # Admission policy: which queued request a freed slot takes next.
-    # "fcfs" -> submission order; "shortest-prompt" -> fewest prompt
-    # tokens first (ties by submission order). Pure host-side reordering.
-    policy: str = "fcfs"
-
-
-@dataclasses.dataclass
-class SamplingParams:
-    temperature: float = 0.0       # 0 -> greedy argmax
-    top_k: int = 0                 # 0 -> full vocab
-    seed: int = 0
-
-
-@dataclasses.dataclass
-class Request:
-    """One generation request. `tokens` is the [S] int prompt."""
-    tokens: np.ndarray
-    max_new_tokens: int = 16
-    eos_token: int | None = None
-    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
-    extra: dict | None = None      # per-request model inputs, batch dim 1
-    request_id: int = -1           # assigned by Engine.submit
-
-
-@dataclasses.dataclass
-class FinishedRequest:
-    request_id: int
-    prompt_len: int
-    tokens: np.ndarray             # generated tokens (includes eos if hit)
-
-
-@dataclasses.dataclass
-class _Slot:
-    request: Request | None = None
-    length: int = 0                # valid cache length (tokens written)
-    prefill_pos: int = 0           # prompt tokens prefilled so far
-    next_token: int = 0            # pending token to feed next decode
-    generated: list[int] = dataclasses.field(default_factory=list)
-    rng: Any = None
-    prompt_len: int = 0            # ORIGINAL prompt length (resumed
-                                   # requests carry re-prefilled tokens)
-    # prefix caching: chained keys of the slot's COMPLETED (fully-written
-    # or matched) pages so far; False for requests whose KV content is not
-    # a pure function of their tokens (per-request extra inputs)
-    page_keys: list = dataclasses.field(default_factory=list)
-    cacheable: bool = False
-
-    @property
-    def prefilling(self) -> bool:
-        return (self.request is not None
-                and self.prefill_pos < self.request.tokens.size)
-
-    @property
-    def decoding(self) -> bool:
-        return self.request is not None and not self.prefilling
-
-
-def _sample_token(logits: np.ndarray, sp: SamplingParams, rng) -> int:
-    if sp.temperature <= 0.0:
-        return int(np.argmax(logits))
-    l = logits.astype(np.float64) / sp.temperature
-    if 0 < sp.top_k < l.size:
-        # exactly top_k survive; ties at the k-th value break by lowest
-        # index (a plain `l >= kth` keeps every tied logit, sampling from
-        # outside the requested top-k). O(V) partition — no full-vocab
-        # sort on the per-token host path.
-        kth = np.partition(l, -sp.top_k)[-sp.top_k]
-        above = l > kth
-        ties = np.flatnonzero(l == kth)[:sp.top_k - int(above.sum())]
-        masked = np.full_like(l, -np.inf)
-        masked[above] = l[above]
-        masked[ties] = kth
-        l = masked
-    l -= l.max()
-    p = np.exp(l)
-    p /= p.sum()
-    return int(rng.choice(l.size, p=p))
-
-
-def _chunk_extra(extra: dict | None, s: int, lo: int, hi: int, chunk: int,
-                 *, batch: int | None = None, row: int | None = None) -> dict:
-    """Route extra model inputs into the padded [lo, hi) prefill chunk.
-
-    `image_embeds` fills the (static, persisted) cross cache — first chunk
-    only. Sequence-aligned arrays (axis 1 == prompt length, e.g. `frames`)
-    are sliced to the chunk and zero-padded to `chunk` so every chunk
-    shape shares one trace. Anything else rides with the first chunk.
-    With `row`/`batch` set (in-slot admission), batch-1 request arrays are
-    scattered into row `row` of a zeros [batch, ...] array — rows of other
-    slots are masked out of cache updates anyway.
-    """
-    out: dict[str, Any] = {}
-    for key, val in (extra or {}).items():
-        arr = jnp.asarray(val)
-        if key != "image_embeds" and arr.ndim >= 2 and arr.shape[1] == s:
-            arr = arr[:, lo:hi]
-            if hi - lo < chunk:
-                widths = [(0, 0)] * arr.ndim
-                widths[1] = (0, chunk - (hi - lo))
-                arr = jnp.pad(arr, widths)
-        elif lo != 0:
-            continue
-        if row is not None:
-            full = jnp.zeros((batch,) + arr.shape[1:], arr.dtype)
-            arr = full.at[row].set(arr[0])
-        out[key] = arr
-    return out
+__all__ = ["Engine", "FinishedRequest", "Request", "SamplingParams",
+           "SchedulePlan", "Scheduler", "ModelRunner", "ServeConfig"]
 
 
 class Engine:
@@ -214,13 +63,6 @@ class Engine:
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
-        if scfg.policy not in ("fcfs", "shortest-prompt"):
-            raise ValueError(f"unknown policy {scfg.policy!r}")
-        self.n = scfg.topn if scfg.topn is not None else cfg.had.topn(scfg.max_len)
-        self.chunk = max(1, min(scfg.prefill_chunk, scfg.max_len))
-        if scfg.prefix_cache and not scfg.paged:
-            raise ValueError("prefix_cache requires paged=True (pages are "
-                             "the unit of sharing)")
         if scfg.prefix_cache and any(ch in cfg.layer_pattern for ch in "MC"):
             raise ValueError(
                 "prefix_cache is unsound for models with SSM or cross-"
@@ -229,49 +71,86 @@ class Engine:
                 "zeroed for a fresh occupant by a position-0 chunk — a "
                 "prefix-matched admission starts past 0 and would inherit "
                 "the previous occupant's state")
-        if scfg.paged:
-            self.page = scfg.page_size
-            self.max_blocks = pages_needed(scfg.max_len, self.page)
-            n_pages = (scfg.n_pages if scfg.n_pages is not None
-                       else scfg.batch_slots * self.max_blocks)
-            self.allocator: BlockAllocator | None = BlockAllocator(
-                n_pages, self.page)
-            # host-side block tables, mirrored to device every step as a
-            # TRACED argument (contents never recompile); -1 = unallocated
-            self.block_tables = np.full(
-                (scfg.batch_slots, self.max_blocks), -1, np.int32)
-            self.caches = M.init_caches(cfg, scfg.batch_slots, scfg.max_len,
-                                        binary=scfg.binary, paged=True,
-                                        n_pages=n_pages, page_size=self.page)
-        else:
-            self.allocator = None
-            self.block_tables = None
-            self.caches = M.init_caches(cfg, scfg.batch_slots, scfg.max_len,
-                                        binary=scfg.binary)
-        self.prefix = (PrefixCache(self.allocator) if scfg.prefix_cache
-                       else None)
-        self.slots = [_Slot() for _ in range(scfg.batch_slots)]
-        self.queue: collections.deque[Request] = collections.deque()
-        self._finished: list[FinishedRequest] = []
-        self._resume: dict[int, dict] = {}     # preempted-request state
-        self._next_id = 0
-        self.stats = {"decode_steps": 0, "prefill_chunks": 0,
-                      "prefill_tokens": 0, "tokens_generated": 0,
-                      "preemptions": 0, "max_residents": 0,
-                      "cached_tokens": 0}
+        if scfg.swap_pages and any(ch in cfg.layer_pattern for ch in "MC"):
+            raise ValueError(
+                "swap_pages is unsound for models with SSM or cross-"
+                "attention layers: their per-slot state lives in dense "
+                "(non-paged) arrays that the slot's next occupant "
+                "overwrites, so a swapped-out request could not restore "
+                "it — use recompute preemption (swap_pages=0)")
+        self.scheduler = Scheduler(scfg)
+        self.runner = ModelRunner(cfg, params, scfg,
+                                  stats=self.scheduler.stats)
+        self.n = self.runner.n
+        self.chunk = self.scheduler.chunk
 
-        @functools.partial(jax.jit, static_argnames=("n", "binary"))
-        def _step(params, batch, caches, pos, active, n_valid, block_tables,
-                  *, n, binary):
-            return M.serve_step(params, batch, caches, cfg=cfg, pos=pos,
-                                n=n, binary=binary, logits_mode="last",
-                                active=active, n_valid=n_valid,
-                                block_tables=block_tables)
-        self._step = _step
+    # ------------------------------------------------------------------
+    # facade: shared state lives on the scheduler (host) / runner (device)
+    # ------------------------------------------------------------------
+    @property
+    def stats(self) -> dict:
+        return self.scheduler.stats
 
-    def _bt_device(self) -> Array | None:
-        return (None if self.block_tables is None
-                else jnp.asarray(self.block_tables))
+    @property
+    def slots(self):
+        return self.scheduler.slots
+
+    @property
+    def queue(self):
+        return self.scheduler.queue
+
+    @property
+    def allocator(self) -> BlockAllocator | None:
+        return self.scheduler.allocator
+
+    @property
+    def prefix(self) -> PrefixCache | None:
+        return self.scheduler.prefix
+
+    @property
+    def swap(self) -> SwapPool | None:
+        return self.scheduler.swap
+
+    @property
+    def block_tables(self):
+        return self.scheduler.block_tables
+
+    @property
+    def max_blocks(self) -> int:
+        return self.scheduler.max_blocks
+
+    @property
+    def page(self) -> int:
+        return self.scheduler.page
+
+    @property
+    def caches(self) -> dict:
+        return self.runner.caches
+
+    @caches.setter
+    def caches(self, value: dict) -> None:
+        self.runner.caches = value
+
+    @property
+    def _step(self):
+        return self.runner._step
+
+    @property
+    def _resume(self) -> dict:
+        return self.scheduler._resume
+
+    # scheduler internals kept addressable for tests / introspection
+    def _admit(self, i: int, req: Request) -> None:
+        self.scheduler._admit(i, req)
+
+    def _pop_next(self) -> Request:
+        return self.scheduler._pop_next()
+
+    def _pick_victim(self) -> int:
+        return self.scheduler._pick_victim()
+
+    def _register_full_pages(self, i: int, slot) -> None:
+        self.scheduler._register_full_pages(i, slot)
 
     # ------------------------------------------------------------------
     # scheduler API
@@ -282,98 +161,17 @@ class Engine:
                extra: dict | None = None) -> int:
         """Enqueue a request; returns its request_id. May be called at any
         time — admission happens at the next `step()` if a slot is free."""
-        if isinstance(tokens, Request):
-            # own copy: never alias caller. dataclasses.replace alone is
-            # SHALLOW — `sampling` and `extra` (and the arrays inside
-            # `extra`) would still alias the caller's objects, so a
-            # mutate-after-submit would rewrite a queued request.
-            req = dataclasses.replace(
-                tokens, sampling=dataclasses.replace(tokens.sampling),
-                extra=copy.deepcopy(tokens.extra))
-        else:
-            req = Request(tokens=np.asarray(tokens, np.int32),
-                          max_new_tokens=max_new_tokens, eos_token=eos_token,
-                          sampling=(dataclasses.replace(sampling) if sampling
-                                    else SamplingParams()),
-                          extra=copy.deepcopy(extra))
-        # copy (np.array, not asarray): the queued prompt must not alias a
-        # caller buffer that may be reused before admission
-        req.tokens = np.array(req.tokens, np.int32).reshape(-1)
-        if req.tokens.size < 1:
-            raise ValueError("empty prompt")
-        if req.tokens.size + req.max_new_tokens > self.scfg.max_len:
-            raise ValueError(
-                f"prompt ({req.tokens.size}) + max_new_tokens "
-                f"({req.max_new_tokens}) exceeds max_len {self.scfg.max_len}")
-        if (self.scfg.paged and
-                pages_needed(req.tokens.size + req.max_new_tokens, self.page)
-                > self.allocator.n_pages):
-            raise ValueError(
-                f"request needs more pages than the whole pool "
-                f"({req.tokens.size + req.max_new_tokens} tokens, "
-                f"{self.allocator.n_pages} x {self.page}-token pages)")
-        req.request_id = self._next_id
-        self._next_id += 1
-        self.queue.append(req)
-        return req.request_id
-
-    def _prompt_rank(self, req: Request) -> tuple[int, int]:
-        """shortest-prompt sort key. Preempted requests rank by their
-        ORIGINAL prompt length (their tokens grew by the folded-in
-        generation replay — ranking on that would self-deprioritize a
-        request a little more on every eviction, starving it under a
-        stream of short submissions)."""
-        entry = self._resume.get(req.request_id)
-        size = entry["prompt_len"] if entry else int(req.tokens.size)
-        return (size, req.request_id)
-
-    def _pop_next(self) -> Request:
-        """Take the next request per ServeConfig.policy (host-side only)."""
-        if self.scfg.policy == "shortest-prompt":
-            best = min(range(len(self.queue)),
-                       key=lambda i: self._prompt_rank(self.queue[i]))
-            self.queue.rotate(-best)
-            req = self.queue.popleft()
-            self.queue.rotate(best)
-            return req
-        return self.queue.popleft()
+        return self.scheduler.submit(tokens, max_new_tokens,
+                                     eos_token=eos_token, sampling=sampling,
+                                     extra=extra)
 
     def step(self) -> list[FinishedRequest]:
-        """One scheduler step: admit queued requests into free slots, spend
-        the prefill budget (one chunk of the earliest admission — or as
-        many chunks as it takes to reach a decodable slot when nothing is
-        decoding), then run one batched ragged decode step for all
-        decoding slots. Returns newly finished requests."""
-        for i, slot in enumerate(self.slots):
-            if slot.request is None and self.queue:
-                self._admit(i, self._pop_next())
-        residents = sum(s.request is not None for s in self.slots)
-        self.stats["max_residents"] = max(self.stats["max_residents"],
-                                          residents)
-        self._run_prefill_budget()
-        decoding = [i for i, s in enumerate(self.slots) if s.decoding]
-        if decoding:
-            self._decode_once(decoding)
-        return self._drain_finished()
-
-    def _run_prefill_budget(self) -> None:
-        """Spend the step's prefill budget. With a decoding resident the
-        budget is ONE chunk (interleaving bounds residents' ITL); on an
-        otherwise-idle batch chunks keep flowing until a slot reaches
-        decode (or nothing is left to prefill), so a lone long admission
-        no longer costs one scheduler step per chunk."""
-        spent = 0
-        while True:
-            prefilling = [i for i, s in enumerate(self.slots)
-                          if s.prefilling]
-            if not prefilling:
-                return
-            if spent >= 1 and any(s.decoding for s in self.slots):
-                return
-            i = min(prefilling,
-                    key=lambda j: self.slots[j].request.request_id)
-            self._prefill_chunk(i)
-            spent += 1
+        """One scheduler step — the whole engine loop is the three-line
+        policy/execution contract: plan, execute verbatim, fold the
+        sampled tokens back. Returns newly finished requests."""
+        plan = self.scheduler.schedule()
+        results = self.runner.execute(plan)
+        return self.scheduler.commit(plan, results)
 
     def run(self) -> dict[int, np.ndarray]:
         """Step until queue and slots drain; returns request_id -> tokens."""
@@ -381,361 +179,19 @@ class Engine:
         while self.queue or any(s.request is not None for s in self.slots):
             for fr in self.step():
                 out[fr.request_id] = fr.tokens
-        for fr in self._drain_finished():
+        for fr in self.scheduler._drain_finished():
             out[fr.request_id] = fr.tokens
         return out
 
     def reset_stats(self) -> None:
         """Zero the counters (e.g. after a warm-up pass, so benchmark stats
-        don't double-count). `max_residents` is a watermark, not a counter:
-        it restarts at the CURRENT resident count (mirroring
-        `reset_watermark`'s in-use baseline) — zeroing it mid-flight
-        under-reported until the next step."""
-        self.stats = {k: 0 for k in self.stats}
-        self.stats["max_residents"] = sum(s.request is not None
-                                          for s in self.slots)
-        if self.allocator is not None:
-            self.allocator.reset_watermark()
-        if self.prefix is not None:
-            self.prefix.reset_stats()
-
-    # ------------------------------------------------------------------
-    # paged-pool internals
-    # ------------------------------------------------------------------
-    def _slot_page_count(self, i: int) -> int:
-        row = self.block_tables[i]
-        return int((row >= 0).sum())
-
-    def _free_slot_pages(self, i: int) -> None:
-        # highest block first: cached pages then park on the LRU leaf-
-        # before-root, so pool pressure evicts a cached chain from its
-        # TAIL — evicting the root first would unmatchably orphan every
-        # descendant key while those pages still sat in the pool
-        row = self.block_tables[i]
-        for page in row[row >= 0][::-1]:
-            self.allocator.free(int(page))
-        row[:] = -1
-
-    def _seq_extra_blocks_resume(self, slot: _Slot) -> bool:
-        """Recompute-style resume replays prompt+generated tokens, but
-        sequence-aligned extra inputs (e.g. `frames`, axis 1 == prompt
-        length) have no values for generated positions — once a slot with
-        such extras has generated tokens, it cannot be preempted
-        faithfully."""
-        req = slot.request
-        if not slot.generated or not req.extra:
-            return False
-        return any(k != "image_embeds" and np.ndim(v) >= 2
-                   and np.shape(v)[1] == slot.prompt_len
-                   for k, v in req.extra.items())
-
-    def _pick_victim(self) -> int:
-        """Youngest resident (highest request_id) pays for pool pressure —
-        the preemption order that keeps FCFS progress guarantees. Slots
-        whose resume would be lossy (sequence-aligned extras + generated
-        tokens) are never evicted; if no clean victim exists the pool is
-        genuinely too small for the workload."""
-        ok = [i for i, s in enumerate(self.slots)
-              if s.request is not None
-              and not self._seq_extra_blocks_resume(s)]
-        if not ok:
-            raise RuntimeError(
-                "KV page pool exhausted and every resident carries "
-                "sequence-aligned extra inputs that cannot be "
-                "re-prefilled after eviction; increase n_pages")
-        return max(ok, key=lambda i: self.slots[i].request.request_id)
-
-    def _preempt(self, i: int) -> None:
-        """Evict slot i: free its pages and re-queue its request at the
-        front (it keeps its request_id, hence its age priority).
-        Recompute-style resume: tokens generated so far are appended to
-        the prompt and re-prefilled on re-admission; the slot's sampling
-        rng rides along so the continuation draws the same stream."""
-        slot = self.slots[i]
-        req = slot.request
-        self.stats["preemptions"] += 1
-        # the slot (not self._resume — _admit pops entries) carries the
-        # ORIGINAL prompt length across resumes; only generated tokens
-        # not yet folded into the prompt by an earlier preemption are
-        # appended (tokens[prompt_len:] already replays those)
-        prompt_len = slot.prompt_len
-        already = int(req.tokens.size) - prompt_len
-        if len(slot.generated) > already:
-            req.tokens = np.concatenate(
-                [req.tokens,
-                 np.asarray(slot.generated[already:], np.int32)])
-        self._resume[req.request_id] = {
-            "prompt_len": prompt_len,
-            "generated": list(slot.generated),
-            "rng": slot.rng,
-        }
-        self._free_slot_pages(i)
-        self.queue.appendleft(req)
-        slot.request = None
-        slot.length = 0
-        slot.prefill_pos = 0
-        slot.next_token = 0
-        slot.generated = []
-        slot.page_keys = []
-        slot.cacheable = False
-
-    def _ensure_pages(self, i: int, upto: int, *, preempt: bool = True
-                      ) -> bool:
-        """Grow slot i's block table to cover `upto` tokens, allocating
-        lazily from the shared pool. On exhaustion, reclaim in order:
-        first evict LRU-cached pages (no resident loses work), then
-        preempt the youngest resident and retry. Returns False iff slot i
-        itself was the victim (the caller skips its work this step; the
-        request is back in the queue)."""
-        if not self.scfg.paged:
-            return True
-        need = pages_needed(upto, self.page)
-        row = self.block_tables[i]
-        have = self._slot_page_count(i)
-        while have < need:
-            page = self.allocator.alloc()
-            if page is None:
-                if self.prefix is not None and self.prefix.evict_one():
-                    continue
-                if not preempt:
-                    raise RuntimeError(
-                        f"KV page pool exhausted "
-                        f"({self.allocator.n_pages} pages in use)")
-                victim = self._pick_victim()
-                self._preempt(victim)
-                if victim == i:
-                    return False
-                continue
-            row[have] = page
-            have += 1
-        return True
-
-    # ------------------------------------------------------------------
-    # prefix-cache internals
-    # ------------------------------------------------------------------
-    def _chain_keys(self, tokens: np.ndarray, n_full: int,
-                    prev: bytes = b""):
-        """Yield chained content keys for `tokens`' first `n_full` full
-        pages, continuing the chain from `prev`. Lazy: a consumer that
-        stops at the first index miss never pays for hashing the rest of
-        a long prompt."""
-        for j in range(n_full):
-            chunk = np.ascontiguousarray(
-                tokens[j * self.page:(j + 1) * self.page], np.int32)
-            prev = chain_hash(prev, chunk.tobytes())
-            yield prev
-
-    def _match_prefix(self, i: int, slot: _Slot, req: Request) -> None:
-        """Map the longest cached page-aligned prefix of `req` into slot
-        i's block table and start prefill at the matched boundary. Host-
-        side metadata only (block table + refcounts) — the pages' KV
-        content is already on device. At least one token is always left
-        to prefill: sampling the first generated token needs real last-
-        position logits, so a fully-cached prompt recomputes its tail."""
-        n_full = (int(req.tokens.size) - 1) // self.page
-        if n_full <= 0 or len(self.prefix) == 0:
-            return
-        pages, keys = [], []
-        for key in self._chain_keys(req.tokens, n_full):
-            page = self.prefix.lookup(key)
-            if page is None:
-                break
-            pages.append(page)
-            keys.append(key)
-        if not pages:
-            return
-        k = len(pages)
-        self.block_tables[i, :k] = pages
-        slot.page_keys = keys
-        slot.prefill_pos = slot.length = k * self.page
-        self.stats["cached_tokens"] += k * self.page
-
-    def _cache_tokens(self, slot: _Slot) -> np.ndarray:
-        """The tokens actually written to slot's cache rows [0, length):
-        the request's tokens then any generated tokens beyond them (a
-        resumed request's `tokens` already contains the replayed ones)."""
-        req = slot.request
-        replayed = int(req.tokens.size) - slot.prompt_len
-        seq = req.tokens
-        new = slot.generated[replayed:]
-        if new:
-            seq = np.concatenate([seq, np.asarray(new, np.int32)])
-        return seq[:slot.length]
-
-    def _register_full_pages(self, i: int, slot: _Slot) -> None:
-        """Publish every newly COMPLETED page of slot i in the prefix
-        index. Only full pages are ever registered — the partially-filled
-        tail page stays private, so no registered (shareable) page is ever
-        scattered into again: immutability by construction, and the
-        copy-on-write boundary is always page-aligned."""
-        if self.prefix is None or not slot.cacheable:
-            return
-        n_full = slot.length // self.page
-        done = len(slot.page_keys)
-        if n_full <= done:
-            return
-        seq = self._cache_tokens(slot)
-        row = self.block_tables[i]
-        prev = slot.page_keys[-1] if slot.page_keys else b""
-        keys = self._chain_keys(seq[done * self.page:], n_full - done, prev)
-        for j, key in enumerate(keys, start=done):
-            self.prefix.register(key, int(row[j]))
-            slot.page_keys.append(key)
-
-    # ------------------------------------------------------------------
-    # internals
-    # ------------------------------------------------------------------
-    def _admit(self, i: int, req: Request) -> None:
-        """Bind `req` to slot i. Metadata only — prefill happens one chunk
-        per `step()`, written in place into the slot's rows of the shared
-        cache (no per-admission cache allocation or copy-back). A
-        preempted request restores its generation state (its re-extended
-        prompt replays the tokens already emitted)."""
-        slot = self.slots[i]
-        slot.request = req
-        slot.length = 0
-        slot.prefill_pos = 0
-        entry = self._resume.pop(req.request_id, None)
-        if entry is not None:
-            slot.prompt_len = entry["prompt_len"]
-            slot.generated = list(entry["generated"])
-            slot.rng = entry["rng"]
-        else:
-            slot.prompt_len = int(req.tokens.size)
-            slot.generated = []
-            slot.rng = np.random.default_rng(req.sampling.seed)
-        slot.page_keys = []
-        # KV pages are content-addressed by TOKENS alone; per-request extra
-        # inputs (images, frames) also shape the KV, so such requests
-        # neither publish nor consume shared pages
-        slot.cacheable = self.prefix is not None and not req.extra
-        if slot.cacheable:
-            self._match_prefix(i, slot, req)
-
-    def _prefill_step(self, tokens: np.ndarray, extra: dict,
-                      pos: np.ndarray, active: np.ndarray,
-                      n_valid: np.ndarray) -> Array:
-        """One padded prefill chunk through the jitted step (shared by
-        scheduler admissions and the lockstep prefill()): tokens [B, chunk]
-        zero-padded, per-row pos/active/n_valid masks. Returns last-valid
-        logits [B, 1, V_padded] and bumps the prefill counters."""
-        batch = {"tokens": jnp.asarray(tokens)}
-        batch.update(extra)
-        logits, self.caches = self._step(
-            self.params, batch, self.caches, jnp.asarray(pos),
-            jnp.asarray(active), jnp.asarray(n_valid), self._bt_device(),
-            n=self.n, binary=self.scfg.binary)
-        self.stats["prefill_chunks"] += 1
-        self.stats["prefill_tokens"] += int(n_valid.sum())
-        return logits
-
-    def _prefill_chunk(self, i: int) -> None:
-        """Run one padded prefill chunk for slot i in place: only slot i is
-        `active`, its `n_valid` marks the real tokens of the chunk, and the
-        masked cache write lands exactly at rows [prefill_pos, prefill_pos
-        + n_valid) of its rows of the shared cache."""
-        slot = self.slots[i]
-        req = slot.request
-        s = int(req.tokens.size)
-        lo = slot.prefill_pos
-        hi = min(lo + self.chunk, s)
-        nv = hi - lo
-        if not self._ensure_pages(i, hi):
-            return                      # slot itself preempted for pages
-        b = self.scfg.batch_slots
-        tokens = np.zeros((b, self.chunk), np.int32)
-        tokens[i, :nv] = req.tokens[lo:hi]
-        pos = np.array([sl.length for sl in self.slots], np.int32)
-        active = np.zeros((b,), bool)
-        active[i] = True
-        n_valid = np.zeros((b,), np.int32)
-        n_valid[i] = nv
-        logits = self._prefill_step(
-            tokens, _chunk_extra(req.extra, s, lo, hi, self.chunk,
-                                 batch=b, row=i),
-            pos, active, n_valid)
-        slot.prefill_pos = hi
-        slot.length = hi
-        self._register_full_pages(i, slot)
-        if hi < s:
-            return                      # admission continues next step
-        if req.max_new_tokens == 0:
-            self._finish(i)
-            return
-        tok = _sample_token(np.asarray(logits[i, 0, :self.cfg.vocab_size]),
-                            req.sampling, slot.rng)
-        self._push_token(i, slot, tok)
-
-    def _decode_once(self, decoding: list[int]) -> None:
-        """One batched ragged decode step for the given slots; prefilling
-        and free slots ride along with cache updates masked out."""
-        if self.scfg.paged:
-            # oldest slots claim pages first, so pool pressure lands on
-            # the youngest (and an ensure can only preempt younger slots
-            # or the requester itself)
-            for i in sorted(decoding,
-                            key=lambda j: self.slots[j].request.request_id):
-                if self.slots[i].decoding:
-                    self._ensure_pages(i, self.slots[i].length + 1)
-            decoding = [i for i in decoding if self.slots[i].decoding]
-            if not decoding:
-                return
-        tokens = np.array([s.next_token if s.decoding else 0
-                           for s in self.slots], np.int32)
-        pos = np.array([s.length for s in self.slots], np.int32)
-        active = np.array([s.decoding for s in self.slots])
-        logits, self.caches = self._step(
-            self.params, {"tokens": jnp.asarray(tokens)[:, None]},
-            self.caches, jnp.asarray(pos), jnp.asarray(active), None,
-            self._bt_device(), n=self.n, binary=self.scfg.binary)
-        logits = np.asarray(logits[:, 0, :self.cfg.vocab_size])
-        self.stats["decode_steps"] += 1
-        for i in decoding:
-            slot = self.slots[i]
-            slot.length += 1
-            self._register_full_pages(i, slot)   # decode filled a page?
-            tok = _sample_token(logits[i], slot.request.sampling, slot.rng)
-            self._push_token(i, slot, tok)
-
-    def _push_token(self, i: int, slot: _Slot, tok: int) -> None:
-        slot.generated.append(tok)
-        slot.next_token = tok
-        self.stats["tokens_generated"] += 1
-        req = slot.request
-        if (len(slot.generated) >= req.max_new_tokens
-                or (req.eos_token is not None and tok == req.eos_token)):
-            self._finish(i)
-
-    def _finish(self, i: int) -> None:
-        slot = self.slots[i]
-        self._finished.append(FinishedRequest(
-            request_id=slot.request.request_id,
-            prompt_len=slot.prompt_len,
-            tokens=np.asarray(slot.generated, np.int32)))
-        # free the slot AND reset its serving state: a stale `length` would
-        # false-trip the lockstep decode() guard and feed garbage positions
-        # for the inactive row in step(). Paged: drop the slot's page refs
-        # the moment the request finishes — unregistered pages return to
-        # the pool, prefix-registered ones downgrade to the reclaimable
-        # LRU (that downgrade-not-free is what keeps a finished request's
-        # prompt pages matchable by its successors).
-        if self.scfg.paged:
-            self._free_slot_pages(i)
-        slot.request = None
-        slot.length = 0
-        slot.prefill_pos = 0
-        slot.next_token = 0
-        slot.page_keys = []
-        slot.cacheable = False
-
-    def _drain_finished(self) -> list[FinishedRequest]:
-        out, self._finished = self._finished, []
-        return out
+        don't double-count); watermarks restart at current occupancy."""
+        self.scheduler.reset_stats()
 
     # ------------------------------------------------------------------
     # low-level lockstep API (uniform batches, hand-driven)
     # ------------------------------------------------------------------
-    def prefill(self, tokens: np.ndarray, extra: dict | None = None) -> Array:
+    def prefill(self, tokens: np.ndarray, extra: dict | None = None):
         """Uniform-length batched prefill of ALL slots at once.
 
         tokens: [batch_slots, S]. Resets every slot (any resident requests
@@ -753,36 +209,16 @@ class Engine:
         tokens = np.asarray(tokens, np.int32)
         b, s = tokens.shape
         assert b == self.scfg.batch_slots, (b, self.scfg.batch_slots)
-        if self.scfg.paged:
-            n_pages = self.allocator.n_pages
-            self.allocator = BlockAllocator(n_pages, self.page)
-            if self.prefix is not None:
-                # the pool (and its contents) was just reset: every index
-                # entry points at dead content
-                self.prefix = PrefixCache(self.allocator)
-            self.block_tables[:] = -1
-            self.caches = M.init_caches(self.cfg, b, self.scfg.max_len,
-                                        binary=self.scfg.binary, paged=True,
-                                        n_pages=n_pages,
-                                        page_size=self.page)
-            for i in range(b):  # lockstep never preempts: all-or-error
-                self._ensure_pages(i, s, preempt=False)
-        else:
-            self.caches = M.init_caches(self.cfg, b, self.scfg.max_len,
-                                        binary=self.scfg.binary)
         # dropping residents must drop ALL their scheduler state — stale
         # `generated`/`next_token`/`rng` leaked into the next occupant's
-        # bookkeeping, and a preempted resident's _resume entry would
-        # outlive the request it belonged to
-        self._resume.clear()
-        for slot in self.slots:
-            slot.request = None
-            slot.next_token = 0
-            slot.generated = []
-            slot.rng = None
-            slot.prompt_len = 0
-            slot.page_keys = []
-            slot.cacheable = False
+        # bookkeeping, and a preempted resident's resume/swap entry would
+        # outlive the request it belonged to; the runner likewise rebuilds
+        # its pools from zeros and drops swapped page contents
+        self.scheduler.reset_for_lockstep()
+        self.runner.reset_caches()
+        if self.scfg.paged:
+            for i in range(b):  # lockstep never preempts: all-or-error
+                self.scheduler.lockstep_alloc(i, s)
         logits = None
         lo = 0
         while lo < s:
@@ -790,17 +226,17 @@ class Engine:
             nv = hi - lo
             padded = np.zeros((b, self.chunk), np.int32)
             padded[:, :nv] = tokens[:, lo:hi]
-            logits = self._prefill_step(
+            logits = self.runner.prefill_step(
                 padded, _chunk_extra(extra, s, lo, hi, self.chunk),
                 np.full((b,), lo, np.int32), np.ones((b,), bool),
-                np.full((b,), nv, np.int32))
+                np.full((b,), nv, np.int32), self.block_tables)
             lo = hi
         for slot in self.slots:
             slot.length = s
             slot.prefill_pos = s
         return logits[:, -1, :self.cfg.vocab_size]  # logits_mode="last": S==1
 
-    def decode(self, tokens: np.ndarray) -> Array:
+    def decode(self, tokens: np.ndarray):
         """One ragged decode step for every slot. tokens: [batch_slots] int.
         Slots may sit at different positions (per-slot `pos` vector)."""
         pos = np.array([s.length for s in self.slots], np.int32)
@@ -809,12 +245,10 @@ class Engine:
         b = self.scfg.batch_slots
         if self.scfg.paged:
             for i in range(b):  # lockstep never preempts: all-or-error
-                self._ensure_pages(i, int(pos[i]) + 1, preempt=False)
-        batch = {"tokens": jnp.asarray(np.asarray(tokens, np.int32))[:, None]}
-        logits, self.caches = self._step(
-            self.params, batch, self.caches, jnp.asarray(pos),
-            jnp.ones((b,), bool), None, self._bt_device(),
-            n=self.n, binary=self.scfg.binary)
+                self.scheduler.lockstep_alloc(i, int(pos[i]) + 1)
+        logits = self.runner.decode_step(np.asarray(tokens, np.int32), pos,
+                                         np.ones((b,), bool),
+                                         self.block_tables)
         for slot in self.slots:
             slot.length += 1
         return logits[:, 0, :self.cfg.vocab_size]
@@ -822,7 +256,7 @@ class Engine:
     @property
     def lengths(self) -> np.ndarray:
         """Per-slot valid cache lengths, int32 (kernel dtype)."""
-        return np.array([s.length for s in self.slots], np.int32)
+        return self.scheduler.lengths
 
     # ------------------------------------------------------------------
     def generate(self, prompts, steps: int,

@@ -282,6 +282,109 @@ class PrefixCache:
         return True
 
 
+# ---------------------------------------------------------------------------
+# host-side swap pool (page-aligned swap-out preemption)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SwapStats:
+    capacity: int
+    page_size: int
+    in_use: int
+    peak_in_use: int
+    reserve_count: int
+    release_count: int
+
+
+class SwapPool:
+    """Bounded accounting for pages swapped out to host memory.
+
+    Swap-out preemption gathers a victim's *device* pages into host RAM at
+    page granularity and frees them, so re-admission restores the exact KV
+    content instead of re-prefilling (recompute preemption throws away
+    every computed token of the victim). This class is the *capacity
+    ledger* only — the scheduler reserves/releases space per request at
+    plan time, while the runner stores the actual gathered arrays keyed by
+    the same request id. Keeping data out of here is what keeps the
+    scheduler device-free and the plan the only policy→execution channel.
+
+    Accounting invariants (property-tested alongside the allocator):
+
+      * ``in_use == sum(pages held per swapped request)``;
+      * ``0 <= in_use <= capacity`` — ``reserve`` past capacity raises,
+        so the engine checks ``can_reserve`` first and falls back to
+        recompute preemption when the pool is full;
+      * a request id holds at most one reservation at a time;
+      * combined with the device pool: a live request's pages are either
+        device-resident (counted in ``BlockAllocator.in_use``) or in this
+        pool — never both, and swapped pages never alias the prefix
+        cache's index (restored pages are private copies).
+    """
+
+    def __init__(self, capacity: int, page_size: int):
+        if capacity < 1:
+            raise ValueError(f"swap capacity must be >= 1, got {capacity}")
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.capacity = capacity
+        self.page_size = page_size
+        self._held: dict[int, int] = {}       # request_id -> pages held
+        self.peak_in_use = 0
+        self.reserve_count = 0
+        self.release_count = 0
+
+    @property
+    def in_use(self) -> int:
+        return sum(self._held.values())
+
+    @property
+    def n_free(self) -> int:
+        return self.capacity - self.in_use
+
+    def __len__(self) -> int:
+        return len(self._held)
+
+    def holds(self, request_id: int) -> bool:
+        return request_id in self._held
+
+    def held_pages(self, request_id: int) -> int:
+        return self._held.get(request_id, 0)
+
+    def can_reserve(self, n_pages: int) -> bool:
+        return 1 <= n_pages <= self.n_free
+
+    def reserve(self, request_id: int, n_pages: int) -> None:
+        """Claim swap space for a victim's pages (scheduler, plan time)."""
+        if request_id in self._held:
+            raise ValueError(f"request {request_id} already swapped")
+        if not 1 <= n_pages <= self.n_free:
+            raise ValueError(
+                f"cannot reserve {n_pages} swap pages "
+                f"({self.n_free} of {self.capacity} free)")
+        self._held[request_id] = n_pages
+        self.reserve_count += 1
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+
+    def release(self, request_id: int) -> int:
+        """Free a swapped request's reservation (swap-in admission or a
+        lockstep reset); returns the page count released."""
+        if request_id not in self._held:
+            raise ValueError(f"request {request_id} holds no swap pages")
+        self.release_count += 1
+        return self._held.pop(request_id)
+
+    def clear(self) -> None:
+        self._held.clear()
+
+    def stats(self) -> SwapStats:
+        return SwapStats(self.capacity, self.page_size, self.in_use,
+                         self.peak_in_use, self.reserve_count,
+                         self.release_count)
+
+    def reset_watermark(self) -> None:
+        self.peak_in_use = self.in_use
+
+
 def pages_needed(n_tokens: int, page_size: int) -> int:
     """Pages required to hold ``n_tokens`` (ceil division)."""
     return -(-n_tokens // page_size)

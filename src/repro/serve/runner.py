@@ -1,0 +1,290 @@
+"""Serving execution layer: the ModelRunner.
+
+The runner is the *data plane* of the serving stack: it owns the jitted
+serve step, the KV cache pools, sampling execution, and the host-side
+contents of swapped-out pages — and nothing else. It is completely
+stateless about requests: every step it executes exactly the frozen
+:class:`~repro.serve.scheduler.SchedulePlan` the Scheduler handed it
+(positions, active rows, chunk ranges, block-table snapshot, reclaim and
+swap actions are all decided at plan time) and returns the per-slot
+sampled tokens. All bookkeeping driven by those tokens — stop conditions,
+page registration, slot frees — happens back in `Scheduler.commit`.
+
+Execution order within one plan (the order that makes page recycling
+safe):
+
+  1. swap-in scatters — restore swapped requests' page contents into
+     their freshly allocated device pages (plan-time allocation precedes
+     every reclaim, so these pages can never be claimed by a same-plan
+     swap-out victim);
+  2. swap-out gathers — copy each victim's pages to host BEFORE any
+     planned write can recycle them;
+  3. prefill chunks, in plan order, sampling each completed prompt's
+     first token from the chunk's last-valid logits;
+  4. one batched ragged decode over the plan's decode set (minus slots
+     whose just-sampled first token hit eos — the one stop condition
+     only execution can observe).
+
+The swap transfers are eager one-off gathers/scatters per eviction (one
+indexed take / indexed update per cache leaf) — they never touch the
+jitted step, so the one-prefill-trace + one-decode-trace pin holds.
+"""
+from __future__ import annotations
+
+import collections
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.serve.paged import pages_needed
+from repro.serve.scheduler import SamplingParams, SchedulePlan, ServeConfig
+
+Array = jax.Array
+
+
+def _sample_token(logits: np.ndarray, sp: SamplingParams, rng) -> int:
+    if sp.temperature <= 0.0:
+        return int(np.argmax(logits))
+    l = logits.astype(np.float64) / sp.temperature
+    if 0 < sp.top_k < l.size:
+        # exactly top_k survive; ties at the k-th value break by lowest
+        # index (a plain `l >= kth` keeps every tied logit, sampling from
+        # outside the requested top-k). O(V) partition — no full-vocab
+        # sort on the per-token host path.
+        kth = np.partition(l, -sp.top_k)[-sp.top_k]
+        above = l > kth
+        ties = np.flatnonzero(l == kth)[:sp.top_k - int(above.sum())]
+        masked = np.full_like(l, -np.inf)
+        masked[above] = l[above]
+        masked[ties] = kth
+        l = masked
+    l -= l.max()
+    p = np.exp(l)
+    p /= p.sum()
+    return int(rng.choice(l.size, p=p))
+
+
+def _chunk_extra(extra: dict | None, s: int, lo: int, hi: int, chunk: int,
+                 *, batch: int | None = None, row: int | None = None) -> dict:
+    """Route extra model inputs into the padded [lo, hi) prefill chunk.
+
+    `image_embeds` fills the (static, persisted) cross cache — first chunk
+    only. Sequence-aligned arrays (axis 1 == prompt length, e.g. `frames`)
+    are sliced to the chunk and zero-padded to `chunk` so every chunk
+    shape shares one trace. Anything else rides with the first chunk.
+    With `row`/`batch` set (in-slot admission), batch-1 request arrays are
+    scattered into row `row` of a zeros [batch, ...] array — rows of other
+    slots are masked out of cache updates anyway.
+    """
+    out: dict[str, Any] = {}
+    for key, val in (extra or {}).items():
+        arr = jnp.asarray(val)
+        if key != "image_embeds" and arr.ndim >= 2 and arr.shape[1] == s:
+            arr = arr[:, lo:hi]
+            if hi - lo < chunk:
+                widths = [(0, 0)] * arr.ndim
+                widths[1] = (0, chunk - (hi - lo))
+                arr = jnp.pad(arr, widths)
+        elif lo != 0:
+            continue
+        if row is not None:
+            full = jnp.zeros((batch,) + arr.shape[1:], arr.dtype)
+            arr = full.at[row].set(arr[0])
+        out[key] = arr
+    return out
+
+
+class ModelRunner:
+    """Device-state owner and plan executor for one serving engine."""
+
+    def __init__(self, cfg: ModelConfig, params: dict, scfg: ServeConfig,
+                 stats: dict):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        self.stats = stats
+        # usually the Scheduler's (pre-seeded) dict; seed the counters
+        # this side increments so a standalone runner works with any dict
+        for key in ("prefill_chunks", "prefill_tokens", "decode_steps",
+                    "swap_out_bytes", "swap_in_bytes"):
+            self.stats.setdefault(key, 0)
+        self.n = scfg.topn if scfg.topn is not None else cfg.had.topn(scfg.max_len)
+        self.chunk = max(1, min(scfg.prefill_chunk, scfg.max_len))
+        self.page = scfg.page_size
+        if scfg.paged:
+            self.n_pages = (scfg.n_pages if scfg.n_pages is not None
+                            else scfg.batch_slots
+                            * pages_needed(scfg.max_len, self.page))
+        else:
+            self.n_pages = 0
+        self.caches = self._init_caches()
+        # swapped-out page contents, request_id -> {cache key -> {leaf
+        # name -> np [n_groups, k_pages, ...]}} (accounting lives in the
+        # scheduler's SwapPool; this is the data half)
+        self._swap_store: dict[int, dict] = {}
+
+        @functools.partial(jax.jit, static_argnames=("n", "binary"))
+        def _step(params, batch, caches, pos, active, n_valid, block_tables,
+                  *, n, binary):
+            return M.serve_step(params, batch, caches, cfg=cfg, pos=pos,
+                                n=n, binary=binary, logits_mode="last",
+                                active=active, n_valid=n_valid,
+                                block_tables=block_tables)
+        self._step = _step
+
+    def _init_caches(self) -> dict:
+        scfg = self.scfg
+        if scfg.paged:
+            return M.init_caches(self.cfg, scfg.batch_slots, scfg.max_len,
+                                 binary=scfg.binary, paged=True,
+                                 n_pages=self.n_pages, page_size=self.page)
+        return M.init_caches(self.cfg, scfg.batch_slots, scfg.max_len,
+                             binary=scfg.binary)
+
+    def reset_caches(self) -> None:
+        """Rebuild the cache pools from zeros (lockstep prefill contract)
+        and drop swapped page contents — the pages they would restore into
+        no longer exist."""
+        self.caches = self._init_caches()
+        self._swap_store.clear()
+
+    # ------------------------------------------------------------------
+    # low-level steps (shared by plan execution and the lockstep API)
+    # ------------------------------------------------------------------
+    def prefill_step(self, tokens: np.ndarray, extra: dict,
+                     pos: np.ndarray, active: np.ndarray,
+                     n_valid: np.ndarray,
+                     block_tables: np.ndarray | None) -> Array:
+        """One padded prefill chunk through the jitted step: tokens
+        [B, chunk] zero-padded, per-row pos/active/n_valid masks. Returns
+        last-valid logits [B, 1, V_padded] and bumps the prefill
+        counters."""
+        batch = {"tokens": jnp.asarray(tokens)}
+        batch.update(extra)
+        bt = None if block_tables is None else jnp.asarray(block_tables)
+        logits, self.caches = self._step(
+            self.params, batch, self.caches, jnp.asarray(pos),
+            jnp.asarray(active), jnp.asarray(n_valid), bt,
+            n=self.n, binary=self.scfg.binary)
+        self.stats["prefill_chunks"] += 1
+        self.stats["prefill_tokens"] += int(np.asarray(n_valid).sum())
+        return logits
+
+    def decode_step(self, tokens: np.ndarray, pos: np.ndarray,
+                    active: np.ndarray,
+                    block_tables: np.ndarray | None) -> Array:
+        """One batched ragged decode step; returns logits [B, 1, V_padded]."""
+        bt = None if block_tables is None else jnp.asarray(block_tables)
+        logits, self.caches = self._step(
+            self.params,
+            {"tokens": jnp.asarray(np.asarray(tokens, np.int32))[:, None]},
+            self.caches, jnp.asarray(pos), jnp.asarray(active), None, bt,
+            n=self.n, binary=self.scfg.binary)
+        return logits
+
+    # ------------------------------------------------------------------
+    # plan execution
+    # ------------------------------------------------------------------
+    def execute(self, plan: SchedulePlan) -> dict[int, list[int]]:
+        """Run one SchedulePlan verbatim; returns per-slot sampled tokens
+        in emission order (a slot completing prefill and decoding in the
+        same step yields two)."""
+        results: dict[int, list[int]] = collections.defaultdict(list)
+        for swap_in in plan.swap_ins:               # 1. restores
+            self._swap_in_pages(swap_in.request_id, swap_in.pages)
+        for rc in plan.reclaims:                    # 2. gathers
+            if rc.kind == "swap-out":
+                self._swap_out_pages(rc.request_id, rc.pages)
+        b = self.scfg.batch_slots
+        vocab = self.cfg.vocab_size
+        sampled: dict[int, int] = {}
+        eos_hit: set[int] = set()
+        for ch in plan.prefill:                     # 3. prefill chunks
+            req = ch.request
+            s = int(req.tokens.size)
+            nv = ch.hi - ch.lo
+            tokens = np.zeros((b, self.chunk), np.int32)
+            tokens[ch.slot, :nv] = req.tokens[ch.lo:ch.hi]
+            active = np.zeros((b,), bool)
+            active[ch.slot] = True
+            n_valid = np.zeros((b,), np.int32)
+            n_valid[ch.slot] = nv
+            logits = self.prefill_step(
+                tokens,
+                _chunk_extra(req.extra, s, ch.lo, ch.hi, self.chunk,
+                             batch=b, row=ch.slot),
+                np.asarray(ch.pos, np.int32), active, n_valid,
+                plan.block_tables)
+            if ch.samples:
+                tok = _sample_token(np.asarray(logits[ch.slot, 0, :vocab]),
+                                    req.sampling, ch.rng)
+                sampled[ch.slot] = tok
+                results[ch.slot].append(tok)
+                if ch.eos_token is not None and tok == ch.eos_token:
+                    eos_hit.add(ch.slot)
+        entries = [e for e in plan.decode if e.slot not in eos_hit]
+        if entries:                                 # 4. batched decode
+            tokens = np.zeros((b,), np.int32)
+            active = np.zeros((b,), bool)
+            for e in entries:
+                tokens[e.slot] = (sampled[e.slot] if e.token is None
+                                  else e.token)
+                active[e.slot] = True
+            logits = self.decode_step(
+                tokens, np.asarray(plan.decode_pos, np.int32), active,
+                plan.block_tables)
+            self.stats["decode_steps"] += 1
+            rows = np.asarray(logits[:, 0, :vocab])
+            for e in entries:
+                tok = _sample_token(rows[e.slot], e.sampling, e.rng)
+                results[e.slot].append(tok)
+        return dict(results)
+
+    # ------------------------------------------------------------------
+    # page swap transfers (the data half of swap-out preemption)
+    # ------------------------------------------------------------------
+    def _pool_keys(self):
+        for i, ch in enumerate(self.cfg.layer_pattern):
+            if ch == "A":
+                yield f"pos{i}"
+
+    def _swap_out_pages(self, request_id: int, pages: tuple) -> None:
+        """Gather a victim's device pages (every paged leaf: packed k_bits
+        + v, or the fp k/v twins) to host memory — one indexed take per
+        leaf, page granularity — before the freed pages can be recycled
+        by this plan's writes."""
+        idx = jnp.asarray(np.asarray(pages, np.int32))
+        payload: dict[str, dict[str, np.ndarray]] = {}
+        nbytes = 0
+        for key in self._pool_keys():
+            taken = {}
+            for name, leaf in self.caches[key].items():
+                arr = np.asarray(leaf[:, idx])      # [n_groups, k, ...]
+                taken[name] = arr
+                nbytes += arr.nbytes
+            payload[key] = taken
+        self._swap_store[request_id] = payload
+        self.stats["swap_out_bytes"] += nbytes
+
+    def _swap_in_pages(self, request_id: int, pages: tuple) -> None:
+        """Scatter a swapped request's stored page contents into its
+        freshly allocated device pages — the exact inverse of the
+        swap-out gather, restoring the KV verbatim (bit-identical resume,
+        zero re-prefill)."""
+        payload = self._swap_store.pop(request_id)
+        idx = jnp.asarray(np.asarray(pages, np.int32))
+        nbytes = 0
+        caches = dict(self.caches)
+        for key, stored in payload.items():
+            layer = dict(caches[key])
+            for name, arr in stored.items():
+                layer[name] = layer[name].at[:, idx].set(jnp.asarray(arr))
+                nbytes += arr.nbytes
+            caches[key] = layer
+        self.caches = caches
+        self.stats["swap_in_bytes"] += nbytes

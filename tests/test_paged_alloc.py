@@ -11,7 +11,8 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.serve import BlockAllocator, PrefixCache, chain_hash, pages_needed
+from repro.serve import (BlockAllocator, PrefixCache, SwapPool, chain_hash,
+                         pages_needed)
 
 
 def test_alloc_free_roundtrip():
@@ -279,6 +280,87 @@ def test_prefix_cache_evict_one_forgets_key():
     assert pc.match([key]) == []                  # key is gone
     assert not pc.evict_one()                     # LRU empty
     assert a.n_free == 2
+
+
+# ---------------------------------------------------------------------------
+# SwapPool: bounded host-side swap accounting
+# ---------------------------------------------------------------------------
+
+def test_swap_pool_reserve_release_roundtrip():
+    sw = SwapPool(4, page_size=8)
+    sw.reserve(0, 3)
+    assert sw.in_use == 3 and sw.n_free == 1 and sw.holds(0)
+    assert sw.held_pages(0) == 3 and len(sw) == 1
+    assert sw.can_reserve(1) and not sw.can_reserve(2)
+    sw.reserve(7, 1)
+    assert sw.in_use == 4 and sw.peak_in_use == 4
+    assert sw.release(0) == 3
+    assert sw.in_use == 1 and not sw.holds(0)
+    assert sw.release(7) == 1 and sw.in_use == 0
+    assert sw.peak_in_use == 4                    # watermark survives
+    sw.reset_watermark()
+    assert sw.peak_in_use == 0
+
+
+def test_swap_pool_rejects_bad_transitions():
+    sw = SwapPool(2, page_size=4)
+    with pytest.raises(ValueError):
+        sw.reserve(0, 3)                          # past capacity
+    with pytest.raises(ValueError):
+        sw.reserve(0, 0)                          # nothing to swap
+    sw.reserve(0, 2)
+    with pytest.raises(ValueError):
+        sw.reserve(0, 1)                          # double reservation
+    with pytest.raises(ValueError):
+        sw.reserve(1, 1)                          # full
+    with pytest.raises(ValueError):
+        sw.release(9)                             # never reserved
+    with pytest.raises(ValueError):
+        SwapPool(0, 4)
+    with pytest.raises(ValueError):
+        SwapPool(4, 0)
+
+
+def test_swap_pool_clear_and_stats():
+    sw = SwapPool(8, page_size=16)
+    sw.reserve(1, 2)
+    sw.reserve(2, 3)
+    s = sw.stats()
+    assert (s.capacity, s.page_size, s.in_use) == (8, 16, 5)
+    assert s.reserve_count == 2 and s.release_count == 0
+    sw.clear()                                    # lockstep reset path
+    assert sw.in_use == 0 and len(sw) == 0 and sw.can_reserve(8)
+
+
+@given(st.integers(1, 8), st.lists(st.tuples(st.integers(0, 5),
+                                             st.integers(0, 9)),
+                                   min_size=1, max_size=100))
+@settings(max_examples=30, deadline=None)
+def test_swap_pool_invariants_property(capacity, ops):
+    """Random reserve/release soup: in_use == sum(held), never exceeds
+    capacity, reservations are exclusive per request id."""
+    sw = SwapPool(capacity, page_size=4)
+    held: dict[int, int] = {}
+    for rid, n in ops:
+        if rid in held:
+            assert sw.release(rid) == held.pop(rid)
+        elif 1 <= n <= capacity - sum(held.values()):
+            assert sw.can_reserve(n)
+            sw.reserve(rid, n)
+            held[rid] = n
+        else:
+            assert not sw.can_reserve(n)          # 0 or past capacity
+            with pytest.raises(ValueError):
+                sw.reserve(rid, n)
+        assert sw.in_use == sum(held.values())
+        assert 0 <= sw.in_use <= capacity
+        assert sw.n_free == capacity - sw.in_use
+        for r, k in held.items():
+            assert sw.holds(r) and sw.held_pages(r) == k
+        assert sw.peak_in_use >= sw.in_use
+    for rid in list(held):
+        sw.release(rid)
+    assert sw.in_use == 0
 
 
 def test_prefix_cache_reset_stats():

@@ -320,6 +320,25 @@ def test_finished_chain_evicts_leaf_before_root(params):
     np.testing.assert_array_equal(got, _cold(CFG, params, p, 2, True))
 
 
+def test_page_completed_by_same_step_decode_registers_true_key(params):
+    """Plan-time frontier advance edge: when a prompt of S ≡ page-1 (mod
+    page) completes prefill and decodes in the same step, the page the
+    decode token completes must be keyed over its FULL content (commit
+    registers prefill pages at the chunk frontier, then the decode pass
+    re-registers after the token lands) — a successor sharing the
+    [prompt, first-token] prefix must match all of it."""
+    rng = np.random.default_rng(99)
+    p = rng.integers(0, 64, 2 * PAGE - 1)         # S+1 on a page boundary
+    eng = Engine(CFG, params, _scfg(1, True, chunk=16, **PFX))
+    r1 = eng.submit(p, max_new_tokens=4)
+    first = eng.run()[r1]
+    p2 = np.concatenate([p, first[:1], rng.integers(0, 64, 3)])
+    r2 = eng.submit(p2, max_new_tokens=4)
+    got = eng.run()[r2]
+    assert eng.stats["cached_tokens"] == 2 * PAGE  # both pages matched
+    np.testing.assert_array_equal(got, _cold(CFG, params, p2, 4, True))
+
+
 def test_lockstep_prefill_resets_prefix_index(params):
     """Lockstep prefill() rebuilds pool + caches from zeros: stale index
     entries would alias dead content and must be dropped with it."""

@@ -1,0 +1,356 @@
+"""Device-free SchedulePlan tests (serve/scheduler.py).
+
+The point of the scheduler/runner split: every serving policy — admission
+order, prefill budgeting, page allocation, reclaim ordering (lru-evict ->
+swap-out -> recompute-preempt), victim selection — is decided by
+`Scheduler.schedule()` on host metadata alone and exposed in the frozen
+plan it returns. Nothing here constructs params, caches, or any jax
+device array; the "runner" is faked by feeding `commit()` synthetic
+sampled tokens.
+"""
+import inspect
+
+import numpy as np
+import pytest
+
+from repro.serve import scheduler as S
+from repro.serve.scheduler import Scheduler, ServeConfig
+
+
+def _scfg(slots=2, max_len=48, chunk=8, **kw):
+    return ServeConfig(max_len=max_len, batch_slots=slots, binary=True,
+                       topn=6, prefill_chunk=chunk, **kw)
+
+
+def _fake_results(plan, start=7):
+    """Synthetic runner: one token per sampling prefill completion, one
+    per decode entry, in execution order."""
+    results: dict[int, list[int]] = {}
+    tok = start
+    for ch in plan.prefill:
+        if ch.samples:
+            results.setdefault(ch.slot, []).append(tok)
+            tok += 1
+    for e in plan.decode:
+        results.setdefault(e.slot, []).append(tok)
+        tok += 1
+    return results
+
+
+def _tick(sched):
+    plan = sched.schedule()
+    finished = sched.commit(plan, _fake_results(plan))
+    return plan, finished
+
+
+def _drive(sched, max_steps=200):
+    plans, finished = [], []
+    for _ in range(max_steps):
+        if not sched.queue and all(s.request is None for s in sched.slots):
+            break
+        plan, fin = _tick(sched)
+        plans.append(plan)
+        finished.extend(fin)
+    else:
+        raise AssertionError("scheduler did not drain")
+    return plans, finished
+
+
+# ---------------------------------------------------------------------------
+# the module is policy-only: no jax anywhere near a plan
+# ---------------------------------------------------------------------------
+
+def test_scheduler_module_is_device_free():
+    src = inspect.getsource(S)
+    assert "import jax" not in src, "scheduler must stay device-free"
+    sched = Scheduler(_scfg(paged=True, page_size=8))
+    sched.submit(np.arange(9, dtype=np.int32), max_new_tokens=3)
+    plan, _ = _tick(sched)
+    assert type(plan.block_tables) is np.ndarray
+    assert plan.prefill and plan.prefill[-1].hi == 9
+
+
+# ---------------------------------------------------------------------------
+# admission policy
+# ---------------------------------------------------------------------------
+
+def test_plan_admissions_follow_policy():
+    rng = np.random.default_rng(0)
+    long_p, short_p = rng.integers(0, 64, 20), rng.integers(0, 64, 4)
+    fcfs = Scheduler(_scfg(slots=2))
+    a = fcfs.submit(long_p, max_new_tokens=2)
+    b = fcfs.submit(short_p, max_new_tokens=2)
+    plan = fcfs.schedule()
+    assert [adm.request.request_id for adm in plan.admissions] == [a, b]
+    assert all(adm.resume == "fresh" for adm in plan.admissions)
+    sp = Scheduler(_scfg(slots=1, policy="shortest-prompt"))
+    sp.submit(long_p, max_new_tokens=2)
+    b2 = sp.submit(short_p, max_new_tokens=2)
+    plan = sp.schedule()
+    assert [adm.request.request_id for adm in plan.admissions] == [b2]
+
+
+# ---------------------------------------------------------------------------
+# prefill budget
+# ---------------------------------------------------------------------------
+
+def test_idle_batch_plans_whole_prompt_and_same_step_decode():
+    """No decoding resident -> the budget lifts: a 33-token prompt plans
+    5 contiguous chunks at chunk=8 plus the same-step decode handoff
+    (the last chunk samples, the decode entry's token is None)."""
+    sched = Scheduler(_scfg(slots=2))
+    sched.submit(np.arange(33, dtype=np.int32), max_new_tokens=3)
+    plan = sched.schedule()
+    assert [(c.lo, c.hi) for c in plan.prefill] == [
+        (0, 8), (8, 16), (16, 24), (24, 32), (32, 33)]
+    assert all(c.slot == 0 for c in plan.prefill)
+    assert plan.prefill[-1].samples and not plan.prefill[0].samples
+    assert [e.slot for e in plan.decode] == [0]
+    assert plan.decode[0].token is None          # prefill->decode handoff
+    assert plan.decode_pos[0] == 33
+
+
+def test_busy_batch_plans_one_chunk_per_step():
+    """A decoding resident caps the budget at one chunk (the ITL bound
+    interleaved prefill exists for), and decodes in the same plan."""
+    sched = Scheduler(_scfg(slots=2))
+    sched.submit(np.arange(5, dtype=np.int32), max_new_tokens=8)
+    _tick(sched)                                 # resident reaches decode
+    assert sched.slots[0].decoding
+    sched.submit(np.arange(33, dtype=np.int32), max_new_tokens=2)
+    plan = sched.schedule()
+    assert [(c.lo, c.hi) for c in plan.prefill] == [(0, 8)]
+    assert plan.prefill[0].slot == 1
+    assert [e.slot for e in plan.decode] == [0]
+    assert plan.decode[0].token == sched.slots[0].next_token
+
+
+def test_single_token_request_skips_decode():
+    """max_new_tokens=1 finishes on the prefill completion's sample — the
+    plan must not schedule a decode step for it."""
+    sched = Scheduler(_scfg(slots=1))
+    sched.submit(np.arange(6, dtype=np.int32), max_new_tokens=1)
+    plan = sched.schedule()
+    assert plan.prefill[-1].samples and not plan.decode
+    finished = sched.commit(plan, _fake_results(plan))
+    assert [f.request_id for f in finished] == [0]
+
+
+# ---------------------------------------------------------------------------
+# reclaim actions: lru-evict -> swap-out -> recompute-preempt
+# ---------------------------------------------------------------------------
+
+PAGED = dict(paged=True, page_size=4)
+
+
+def _prefilled(sched, i, n_tokens, max_new):
+    """Admit a request into slot i and fake its prefill to completion
+    (pages allocated, frontier advanced) — decode-ready without a model."""
+    rid = sched.submit(np.arange(n_tokens, dtype=np.int32),
+                       max_new_tokens=max_new)
+    sched._admit(i, sched._pop_next())
+    slot = sched.slots[i]
+    assert sched._ensure_pages(i, n_tokens)
+    slot.prefill_pos = slot.length = n_tokens
+    slot.generated = [1]
+    slot.next_token = 1
+    return rid
+
+
+def test_lru_pages_reclaim_before_any_preemption():
+    """Pool pressure with cached-but-unreferenced pages available must
+    plan only lru-evict reclaims — no resident is victimized."""
+    sched = Scheduler(_scfg(slots=2, max_len=16, chunk=16, n_pages=4,
+                            prefix_cache=True, swap_pages=4, **PAGED))
+    sched.submit(np.arange(9, dtype=np.int32), max_new_tokens=1)
+    _drive(sched)                                # finished: 2 pages -> LRU
+    assert sched.allocator.n_lru == 2
+    sched.submit(np.arange(9, dtype=np.int32) + 30, max_new_tokens=1)
+    plan = sched.schedule()
+    kinds = [r.kind for r in plan.reclaims]
+    assert kinds and set(kinds) == {"lru-evict"}, kinds
+
+
+def test_swap_out_preferred_over_recompute():
+    """An older resident's page demand evicts the youngest; with swap
+    space available the plan tags the eviction swap-out and records the
+    victim's device pages in logical order."""
+    sched = Scheduler(_scfg(slots=2, max_len=24, n_pages=6, swap_pages=4,
+                            **PAGED))
+    _prefilled(sched, 0, 7, 12)                  # id 0: 2 pages, grows
+    _prefilled(sched, 1, 7, 8)                   # id 1: 2 pages, grows
+    plans, _ = [], None
+    swap_plan = None
+    for _ in range(12):
+        plan, _ = _tick(sched)
+        if any(r.kind == "swap-out" for r in plan.reclaims):
+            swap_plan = plan
+            break
+    assert swap_plan is not None, "pool pressure never forced a swap"
+    rc = [r for r in swap_plan.reclaims if r.kind == "swap-out"][0]
+    assert rc.slot == 1 and rc.request_id == 1   # youngest pays
+    assert rc.pages and all(p >= 0 for p in rc.pages)
+    assert sched.swap.holds(1)
+    assert sched.stats["swap_outs"] == 1
+    # the victim's request is back at the queue head, tokens UNCHANGED
+    # (swap resume never folds generated tokens into the prompt)
+    assert sched.queue[0].request_id == 1
+    assert sched.queue[0].tokens.size == 7
+
+
+def test_swap_pool_full_falls_back_to_recompute():
+    """Same pressure with a swap pool too small for the victim's pages:
+    the plan tags the eviction recompute-preempt and the generated
+    tokens fold into the prompt for replay."""
+    sched = Scheduler(_scfg(slots=2, max_len=24, n_pages=6, swap_pages=1,
+                            **PAGED))
+    _prefilled(sched, 0, 7, 12)
+    _prefilled(sched, 1, 7, 8)
+    kinds = []
+    for _ in range(12):
+        plan, _ = _tick(sched)
+        kinds += [r.kind for r in plan.reclaims]
+        if "recompute-preempt" in kinds:
+            break
+    assert "recompute-preempt" in kinds and "swap-out" not in kinds
+    assert 1 in sched._resume
+    # replay folded generated tokens into the prompt
+    assert sched.queue[0].request_id == 1
+    assert sched.queue[0].tokens.size > 7
+    assert sched.stats["swap_outs"] == 0
+
+
+def test_swapped_request_readmits_head_of_line_with_pages_restored():
+    """A swapped request re-admits only when its full page set is free
+    (head-of-line, no cascading evictions); the plan's SwapIn restores
+    its preserved length and the resumed slot decodes immediately — no
+    prefill chunk is ever re-planned for it."""
+    sched = Scheduler(_scfg(slots=2, max_len=24, n_pages=6, swap_pages=4,
+                            **PAGED))
+    _prefilled(sched, 0, 7, 12)
+    _prefilled(sched, 1, 7, 8)
+    for _ in range(12):
+        plan, _ = _tick(sched)
+        if any(r.kind == "swap-out" for r in plan.reclaims):
+            break
+    meta = sched._swap_meta[1]
+    blocked = 0
+    while True:
+        plan, _ = _tick(sched)
+        if plan.swap_ins:
+            break
+        assert not any(a.request.request_id == 1 for a in plan.admissions)
+        blocked += 1
+        assert blocked < 30, "swap-in never became possible"
+    si = plan.swap_ins[0]
+    assert si.request_id == 1 and si.length == meta["length"]
+    assert len(si.pages) == meta["n_pages"]
+    adm = [a for a in plan.admissions if a.request.request_id == 1]
+    assert adm and adm[0].resume == "swap"
+    # resumed mid-decode: no prefill chunk, straight into the decode set
+    assert not any(c.request.request_id == 1 for c in plan.prefill)
+    slot = si.slot
+    assert any(e.slot == slot for e in plan.decode)
+    assert sched.stats["swap_ins"] == 1
+    assert sched.stats["swapped_tokens"] == meta["length"]
+    assert sched.stats["replayed_tokens"] == 0
+    assert not sched.swap.holds(1) and sched.swap.in_use == 0
+
+
+def test_double_preemption_folds_replay_exactly_once():
+    """The slot (not the popped resume entry) carries the ORIGINAL prompt
+    length, so a second recompute eviction must not re-fold already-
+    replayed generated tokens into the prompt."""
+    sched = Scheduler(_scfg(slots=1, max_len=48, n_pages=12, **PAGED))
+    rid = sched.submit(np.arange(9, dtype=np.int32), max_new_tokens=12)
+    sched._admit(0, sched._pop_next())
+    slot = sched.slots[0]
+    sched._ensure_pages(0, 9)
+    slot.prefill_pos = slot.length = 9
+    slot.generated = [1, 2]
+    sched._preempt(0)
+    req = sched.queue[0]
+    assert req.request_id == rid and req.tokens.size == 9 + 2
+    sched._admit(0, sched._pop_next())           # replay restores generated
+    assert slot.generated == [1, 2] and slot.prompt_len == 9
+    sched._ensure_pages(0, 11)
+    slot.prefill_pos = slot.length = 11
+    slot.generated = [1, 2, 3]                   # one more token emitted
+    sched._preempt(0)
+    assert req.tokens.size == 9 + 3              # folded once, not twice
+    np.testing.assert_array_equal(req.tokens[9:], [1, 2, 3])
+
+
+# ---------------------------------------------------------------------------
+# victim policy: youngest vs longest-idle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy,victim", [("youngest", 1),
+                                           ("longest-idle", 0)])
+def test_victim_policy_pinned_on_plan(policy, victim):
+    """Under page pressure, "youngest" evicts the highest request id while
+    "longest-idle" evicts the slot with the most steps since its last
+    token — pinned purely on the emitted plan."""
+    sched = Scheduler(_scfg(slots=2, max_len=16, chunk=16, n_pages=4,
+                            victim_policy=policy, **PAGED))
+    _prefilled(sched, 0, 8, 8)                   # id 0: 2 pages, decoding
+    _prefilled(sched, 1, 8, 8)                   # id 1: 2 pages (younger)
+    sched.slots[0].idle = 5                      # id 0 starved longest
+    sched.slots[1].idle = 0
+    # both residents cross a page boundary this decode; slot 0 (oldest)
+    # claims first and the pool is dry -> a victim must pay
+    plan = sched.schedule()
+    evictions = [r for r in plan.reclaims if r.kind != "lru-evict"]
+    assert evictions and evictions[0].slot == victim
+
+
+def test_idle_counter_tracks_steps_since_last_token():
+    """Commit resets the idle counter for slots that emitted and bumps it
+    for residents that did not (a prefilling slot accrues idle while its
+    chunks flow)."""
+    sched = Scheduler(_scfg(slots=2))
+    sched.submit(np.arange(4, dtype=np.int32), max_new_tokens=6)
+    _tick(sched)
+    assert sched.slots[0].idle == 0              # emitted this step
+    sched.submit(np.arange(30, dtype=np.int32), max_new_tokens=2)
+    _tick(sched)                                 # chunk 1 of the admission
+    _tick(sched)                                 # chunk 2
+    assert sched.slots[0].idle == 0              # decoding every step
+    assert sched.slots[1].idle == 2              # prefilling: no tokens yet
+    assert Scheduler(_scfg()).scfg.victim_policy == "youngest"
+    with pytest.raises(ValueError, match="victim_policy"):
+        Scheduler(_scfg(victim_policy="oldest"))
+
+
+# ---------------------------------------------------------------------------
+# incremental page counts (the O(max_blocks)-scan fix)
+# ---------------------------------------------------------------------------
+
+def test_slot_page_lists_match_block_table_scan():
+    """The scheduler tracks each slot's page count incrementally; it must
+    agree with an explicit block-table row scan at every step of a
+    preemption-heavy workload."""
+    sched = Scheduler(_scfg(slots=3, max_len=48, n_pages=6, swap_pages=4,
+                            page_size=8, paged=True))
+    rng = np.random.default_rng(3)
+    for n, g in ((13, 12), (9, 12), (11, 12)):
+        sched.submit(rng.integers(0, 64, n), max_new_tokens=g)
+    for _ in range(200):
+        if not sched.queue and all(s.request is None for s in sched.slots):
+            break
+        plan, _ = _tick(sched)
+        for i, slot in enumerate(sched.slots):
+            row = sched.block_tables[i]
+            assert len(slot.pages) == int((row >= 0).sum())
+            assert list(slot.pages) == [int(p) for p in row[row >= 0]]
+    assert sched.stats["preemptions"] > 0        # the sweep saw pressure
+    assert sched.allocator.in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# config validation
+# ---------------------------------------------------------------------------
+
+def test_swap_requires_paged():
+    with pytest.raises(ValueError, match="paged"):
+        Scheduler(_scfg(swap_pages=4))

@@ -473,6 +473,124 @@ def test_paged_lockstep_prefill_decode(params):
 
 
 # ---------------------------------------------------------------------------
+# page-aligned swap-out preemption
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("binary", [True, False])
+def test_swap_preemption_bit_identical_with_zero_reprefill(params, binary):
+    """Acceptance pin: an overcommitted pool with swap space serves every
+    request bit-identically to the unpreempted dense baseline, swapped
+    victims re-prefill ZERO tokens, and both pools drain clean."""
+    rng = np.random.default_rng(33)
+    prompts = [rng.integers(0, 64, n) for n in (13, 5, 9)]
+    dense = Engine(CFG, params, _scfg(3, binary))
+    ids_d = [dense.submit(p, max_new_tokens=5) for p in prompts]
+    want = dense.run()
+    eng = Engine(CFG, params, _scfg(3, binary, paged=True, page_size=8,
+                                    n_pages=3, swap_pages=8))
+    ids = [eng.submit(p, max_new_tokens=5) for p in prompts]
+    got = eng.run()
+    assert eng.stats["swap_outs"] > 0, "pool never forced a swap: test void"
+    assert eng.stats["swap_ins"] == eng.stats["swap_outs"]
+    assert eng.stats["replayed_tokens"] == 0     # zero re-prefill
+    assert eng.stats["swapped_tokens"] > 0
+    for a, b in zip(ids_d, ids):
+        np.testing.assert_array_equal(got[b], want[a])
+    assert eng.allocator.in_use == 0             # all device pages returned
+    assert eng.swap.in_use == 0                  # all swap space released
+
+
+def test_swap_preemption_roundtrip_kernel_path():
+    kparams = M.init_params(jax.random.PRNGKey(10), KCFG)
+    rng = np.random.default_rng(34)
+    prompts = [rng.integers(0, 64, n) for n in (13, 5, 9)]
+    eng = Engine(KCFG, kparams, _scfg(3, True, paged=True, page_size=8,
+                                      n_pages=3, swap_pages=8))
+    ids = [eng.submit(p, max_new_tokens=5) for p in prompts]
+    got = eng.run()
+    assert eng.stats["swap_outs"] > 0
+    assert eng.stats["replayed_tokens"] == 0
+    want = _sequential(KCFG, kparams, prompts, 5, True)
+    for rid, w in zip(ids, want):
+        np.testing.assert_array_equal(got[rid], w)
+
+
+def test_swap_matches_recompute_preemption_outputs(params):
+    """Swap-out is a pure mechanism change: the same overcommitted
+    workload yields identical tokens with swap on (zero re-prefill) and
+    off (recompute replay) — while doing strictly less prefill work."""
+    rng = np.random.default_rng(35)
+    prompts = [rng.integers(0, 64, n) for n in (13, 9, 11)]
+    outs, ptoks = {}, {}
+    for swap in (0, 8):
+        eng = Engine(CFG, params, _scfg(3, True, paged=True, page_size=8,
+                                        n_pages=4, swap_pages=swap))
+        ids = [eng.submit(p, max_new_tokens=12) for p in prompts]
+        got = eng.run()
+        assert eng.stats["preemptions"] >= 2, eng.stats
+        if swap:
+            assert eng.stats["swap_outs"] > 0
+        else:
+            assert eng.stats["replayed_tokens"] > 0
+        outs[swap] = [got[r] for r in ids]
+        ptoks[swap] = eng.stats["prefill_tokens"]
+    for a, b in zip(outs[0], outs[8]):
+        np.testing.assert_array_equal(a, b)
+    assert ptoks[8] < ptoks[0]                   # swapped work not redone
+
+
+def test_swap_composes_with_prefix_cache(params):
+    """Swap x prefix-cache interplay: shared prefixes + pool pressure +
+    swap-outs still serve cold-identical tokens, and swapped-in pages
+    never alias the index (every indexed page is allocator-cached; the
+    restored private copies are not)."""
+    rng = np.random.default_rng(36)
+    shared = rng.integers(0, 64, 2 * 8)
+    prompts = [np.concatenate([shared, rng.integers(0, 64, 5 + i)])
+               for i in range(3)]
+    eng = Engine(CFG, params, _scfg(3, True, paged=True, page_size=8,
+                                    n_pages=4, prefix_cache=True,
+                                    swap_pages=8))
+    ids = [eng.submit(p, max_new_tokens=8) for p in prompts]
+    got = eng.run()
+    assert eng.stats["preemptions"] > 0, "pool never pressured: test void"
+    for rid, p in zip(ids, prompts):
+        e1 = Engine(CFG, params, _scfg(1, True))
+        sid = e1.submit(p, max_new_tokens=8)
+        np.testing.assert_array_equal(got[rid], e1.run()[sid])
+    # index consistency: every surviving entry maps to a cached page
+    for page in eng.prefix._page_of.values():
+        assert eng.allocator.is_cached(page)
+    assert eng.allocator.in_use == 0 and eng.swap.in_use == 0
+
+
+def test_swap_keeps_one_prefill_one_decode_trace(params):
+    """Swap transfers are eager gathers/scatters outside the jitted step:
+    a swap-heavy run keeps exactly one prefill-chunk trace plus one
+    decode trace."""
+    eng = Engine(CFG, params, _scfg(3, True, paged=True, page_size=8,
+                                    n_pages=3, swap_pages=8))
+    rng = np.random.default_rng(37)
+    for n in (13, 5, 9):
+        eng.submit(rng.integers(0, 64, n), max_new_tokens=5)
+    eng.run()
+    assert eng.stats["swap_outs"] > 0
+    assert eng._step._cache_size() == 2, eng._step._cache_size()
+
+
+def test_swap_rejected_for_stateful_layers_and_dense_cache(params):
+    """SSM / cross-attention per-slot state is dense (not paged) and dies
+    with the slot's next occupant — swap must be rejected for those
+    models, and for non-paged caches where there are no pages to swap."""
+    with pytest.raises(ValueError, match="paged"):
+        Engine(CFG, params, _scfg(1, True, swap_pages=4))
+    hparams = M.init_params(jax.random.PRNGKey(13), HCFG)
+    with pytest.raises(ValueError, match="SSM"):
+        Engine(HCFG, hparams, _scfg(1, True, paged=True, page_size=8,
+                                    swap_pages=4))
+
+
+# ---------------------------------------------------------------------------
 # scheduler policies + idle multi-chunk prefill
 # ---------------------------------------------------------------------------
 
