@@ -8,7 +8,11 @@ from __future__ import annotations
 
 import time
 
+import jax.numpy as jnp
+import numpy as np
+
 from benchmarks import common as C
+from repro.core import topn as T
 from repro.data import patch_task
 
 N_PATCHES = 25
@@ -40,9 +44,26 @@ def run(print_fn=print, *, steps_teacher=400, steps_per_stage=15,
     # claim: plateau at moderate N, cliff at very small N
     plateau = accs[8] >= accs[25] - 0.08
     cliff = accs[1] < accs[8]
+    parity = _sort_bisect_parity()
+    print_fn(f"  sort-vs-bisect threshold kept-set parity: {parity}")
     return [f"fig3_topn,{dt * 1e6 / len(LADDER):.1f},"
             f"acc_full={accs[25]:.3f};acc_N8={accs[8]:.3f};"
-            f"acc_N1={accs[1]:.3f};plateau={plateau};cliff={cliff}"]
+            f"acc_N1={accs[1]:.3f};plateau={plateau};cliff={cliff};"
+            f"sort_bisect_parity={parity}"]
+
+
+def _sort_bisect_parity() -> bool:
+    """Both threshold algorithms must keep the exact same set — the
+    whole-curve accuracy above is method-independent only if this holds
+    (the bisect invariant count(x >= lo) >= n keeps ties identically)."""
+    rng = np.random.default_rng(3)
+    ok = True
+    for n in LADDER:
+        s = jnp.asarray(rng.normal(size=(16, N_PATCHES)).astype(np.float32))
+        m_sort = np.asarray(T.topn_mask(s, n, method="sort"))
+        m_bis = np.asarray(T.topn_mask(s, n, method="bisect"))
+        ok &= bool((m_sort == m_bis).all())
+    return ok
 
 
 if __name__ == "__main__":

@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.core import attention as A
 from repro.core import hamming
+from repro.kernels import ops
 from repro.launch.roofline import HBM_BW, PEAK_FLOPS
 
 
@@ -37,6 +38,72 @@ def decode_projection(ctx: int, *, d=128, hk=8, g=8, n=None) -> dict:
     had_t = had_bytes / HBM_BW
     return {"ctx": ctx, "n": n, "dense_us": dense_t * 1e6,
             "had_us": had_t * 1e6, "speedup": dense_t / had_t}
+
+
+def page_sparse_projection(ctx: int, *, d=128, hk=8, page=64,
+                           topn_pages: int | None = None) -> dict:
+    """Analytic v5e bytes for one paged decode token, one layer.
+
+    Dense paged decode walks every resident page: packed K bit-planes +
+    bf16 V for the whole context. Two-phase page-sparse decode re-reads
+    the packed K twice (phase-1 scoring touches every page's k_bits,
+    phase-2 re-reads the selected pages') but fetches V only for the
+    top-N pages — and V dominates (d*2 bytes/token vs d/8 packed), so
+    traffic drops toward O(topn_pages * page) as context grows."""
+    n = max(int(0.117 * ctx), 16)
+    if topn_pages is None:
+        topn_pages = max(-(-n // page), 1)      # pages covering top-N tokens
+    w = hamming.packed_words(d)
+    dense_bytes = (ctx * w * 4 + ctx * d * 2) * hk
+    sel_tok = min(topn_pages * page, ctx)
+    sparse_bytes = (ctx * w * 4 + sel_tok * (w * 4 + d * 2)) * hk
+    return {"ctx": ctx, "pages": topn_pages,
+            "dense_us": dense_bytes / HBM_BW * 1e6,
+            "sparse_us": sparse_bytes / HBM_BW * 1e6,
+            "speedup": dense_bytes / sparse_bytes}
+
+
+def _paged_sparse_case(print_fn) -> list[str]:
+    """CPU wall-clock of ops.paged_decode_attention dense vs two-phase
+    page-sparse (interpret mode: correctness-grade timing, but the same
+    jitted entry points the serving engine calls)."""
+    b, hk, g, d, page, nb = 1, 4, 2, 64, 16, 16
+    h, w = hk * g, hamming.packed_words(d)
+    ctx = nb * page
+    rng = np.random.default_rng(1)
+    qb = jnp.asarray(rng.integers(0, 2**32, size=(b, h, w), dtype=np.uint64)
+                     .astype(np.uint32))
+    n_pages = nb + 2   # leave slack ids so tables exercise the gather
+    k_pool = jnp.asarray(rng.integers(0, 2**32, size=(n_pages, hk, w, page),
+                                      dtype=np.uint64).astype(np.uint32))
+    v_pool = jnp.asarray(rng.normal(size=(n_pages, hk, page, d))
+                         .astype(np.float32))
+    bt = jnp.arange(1, nb + 1, dtype=jnp.int32)[None]
+    lengths = jnp.asarray([ctx], jnp.int32)
+    csv = []
+
+    def _call(ptn):
+        return ops.paged_decode_attention(
+            qb, k_pool, v_pool, bt, d=d, nsel=32, scale=d ** -0.5,
+            lengths=lengths, page_topn=ptn)
+
+    t_dense = _time(lambda: _call(None))
+    t_sparse = _time(lambda: _call(4))
+    print_fn(f"paged decode kernel, ctx={ctx} ({nb} pages): dense "
+             f"{t_dense:.0f}us  page-sparse(top4) {t_sparse:.0f}us "
+             f"(CPU interpret; ratio {t_dense / t_sparse:.2f})")
+    csv.append(f"kernel_paged_sparse,{t_sparse:.1f},dense_us={t_dense:.1f}")
+
+    print_fn("v5e paged-decode projection (per layer, bytes-bound):")
+    print_fn(f"{'ctx':>8} {'pages':>6} {'dense_us':>9} {'sparse_us':>9} "
+             f"{'x':>6}")
+    for ctx_p in (32_768, 131_072, 524_288):
+        p = page_sparse_projection(ctx_p)
+        print_fn(f"{p['ctx']:>8} {p['pages']:>6} {p['dense_us']:>9.1f} "
+                 f"{p['sparse_us']:>9.1f} {p['speedup']:>6.2f}")
+        csv.append(f"kernel_paged_sparse_v5e_{ctx_p},{p['sparse_us']:.1f},"
+                   f"speedup={p['speedup']:.2f}")
+    return csv
 
 
 def run(print_fn=print) -> list[str]:
@@ -68,6 +135,7 @@ def run(print_fn=print) -> list[str]:
                  f"{p['had_us']:>8.1f} {p['speedup']:>6.2f}")
         csv.append(f"kernel_decode_v5e_{ctx},{p['had_us']:.1f},"
                    f"speedup={p['speedup']:.2f}")
+    csv += _paged_sparse_case(print_fn)
     return csv
 
 

@@ -130,14 +130,16 @@ def _drive(eng: Engine, prompts: list[np.ndarray], *, stagger: int = 0
 
 def _engine(params, cfg, *, slots: int, binary: bool, paged: bool = False,
             page_size: int = 16, n_pages: int | None = None,
-            prefix_cache: bool = False, swap_pages: int = 0) -> Engine:
+            prefix_cache: bool = False, swap_pages: int = 0,
+            page_topn: int | None = None) -> Engine:
     return Engine(cfg, params, ServeConfig(max_len=MAX_LEN, batch_slots=slots,
                                            binary=binary,
                                            prefill_chunk=CHUNK, paged=paged,
                                            page_size=page_size,
                                            n_pages=n_pages,
                                            prefix_cache=prefix_cache,
-                                           swap_pages=swap_pages))
+                                           swap_pages=swap_pages,
+                                           page_topn=page_topn))
 
 
 def _pcts(xs: list[float]) -> tuple[float, float, float]:
@@ -181,7 +183,7 @@ def _serve_case(params, cfg, *, slots: int, skew: str, binary: bool,
 def run(print_fn=print, slot_counts=(1, 2, 4), n_req: int = 4,
         stagger: int = 2, paged: bool = False,
         page_size: int = 16, prefix_cache: bool = False,
-        swap_pages: int = 0) -> list[str]:
+        swap_pages: int = 0, page_topn: int | None = None) -> list[str]:
     csv = []
     cfg = causal_cfg(d=64, layers=2, heads=4)
     params = M.init_params(jax.random.PRNGKey(0), cfg)
@@ -241,6 +243,62 @@ def run(print_fn=print, slot_counts=(1, 2, 4), n_req: int = 4,
         csv += _swap_case(print_fn, params, cfg, slots=slot_counts[-1],
                           n_req=n_req, stagger=stagger,
                           page_size=page_size, swap_pages=swap_pages)
+    if page_topn:
+        csv += _page_sparse_case(print_fn, params, cfg,
+                                 slots=slot_counts[-1], n_req=n_req,
+                                 page_size=page_size, page_topn=page_topn)
+    return csv
+
+
+def _page_sparse_case(print_fn, params, cfg, *, slots: int, n_req: int,
+                      page_size: int, page_topn: int) -> list[str]:
+    """Two-phase top-N page-sparse decode vs dense paged decode: the same
+    workload runs with every resident page attended and with only the
+    `page_topn` best-scoring pages (plus the frontier page) per decode
+    step. Reports the host-side decode traffic counters
+    (``decode_pages_touched`` / ``decode_hbm_bytes`` — phase-1 scoring
+    reads every resident page's k_bits, phase-2 attends only the selected
+    pages' K+V) and the generation quality delta (fraction of dense-run
+    tokens reproduced). Exact-parity at page_topn >= resident pages is
+    pinned in tests/test_serve_ragged.py; here the harness asserts the
+    sparse pass touches strictly fewer decode pages than dense."""
+    rng = np.random.default_rng(17)
+    prompts = _prompts(max(n_req, 2), "mixed", rng)
+    csv, toks, traffic = [], {}, {}
+    for ptn in (None, page_topn):
+        tag = "dense" if ptn is None else f"topn{ptn}"
+        eng = _engine(params, cfg, slots=slots, binary=True, paged=True,
+                      page_size=page_size, page_topn=ptn)
+        _drive(eng, prompts, stagger=0)              # warm-up compile pass
+        eng.reset_stats()
+        gen = {}
+        for p in prompts:
+            gen[eng.submit(p, max_new_tokens=GEN)] = None
+        while eng.queue or any(s.request is not None for s in eng.slots):
+            for fr in eng.step():
+                gen[fr.request_id] = list(fr.tokens)
+        st = eng.stats
+        toks[tag] = gen
+        traffic[tag] = (st["decode_pages_touched"], st["decode_hbm_bytes"])
+        name = f"serve_pagesparse_{tag}_s{slots}"
+        csv.append(f"{name}_pages,{st['decode_pages_touched']},"
+                   f"{st['decode_hbm_bytes']}")
+        csv.append(_kvpool_row(name, eng))
+    dense, sparse = toks["dense"], toks[f"topn{page_topn}"]
+    total = sum(len(v) for v in dense.values())
+    match = sum(a == b for rid in dense
+                for a, b in zip(dense[rid], sparse[rid]))
+    quality = match / max(total, 1)
+    dp, db = traffic["dense"]
+    sp, sb = traffic[f"topn{page_topn}"]
+    csv.append(f"serve_pagesparse_topn{page_topn}_quality,{quality:.3f},frac")
+    print_fn(f"  page-sparse slots={slots} topn={page_topn}: decode pages "
+             f"{sp} vs {dp} dense ({100 * sp / max(dp, 1):.0f}%), est HBM "
+             f"{sb} vs {db} B, token match {100 * quality:.1f}%")
+    assert sp < dp, (
+        "page-sparse decode failed to touch fewer pages", traffic)
+    assert sb < db, (
+        "page-sparse decode failed to cut estimated HBM bytes", traffic)
     return csv
 
 
@@ -415,13 +473,21 @@ if __name__ == "__main__":
                          "this many pages (implies --paged; adds "
                          "swapped/re-prefilled token + swap-bytes CSV "
                          "columns)")
+    ap.add_argument("--page-topn", type=int, default=0,
+                    help="run the two-phase page-sparse decode case: score "
+                         "every resident page, attend only the top-N pages "
+                         "plus the frontier (implies --paged; adds decode "
+                         "pages-touched / est-HBM-bytes + quality CSV "
+                         "columns)")
     args = ap.parse_args()
-    paged = args.paged or args.prefix_cache or bool(args.swap_pages)
+    paged = (args.paged or args.prefix_cache or bool(args.swap_pages)
+             or bool(args.page_topn))
     if args.smoke:
         lines = run(slot_counts=(2,), n_req=2, paged=paged,
                     page_size=args.page_size,
                     prefix_cache=args.prefix_cache,
-                    swap_pages=args.swap_pages)
+                    swap_pages=args.swap_pages,
+                    page_topn=args.page_topn or None)
         assert any("_ttft_p99," in l for l in lines), lines
         assert any("_stats," in l for l in lines), lines
         if paged:
@@ -438,7 +504,14 @@ if __name__ == "__main__":
                        for l in lines), lines
             assert any(l.startswith("serve_swapout_off_") and "_ttft_p50," in l
                        for l in lines), lines
+        if args.page_topn:
+            assert any(l.startswith("serve_pagesparse_dense_") and "_pages,"
+                       in l for l in lines), lines
+            assert any(l.startswith(f"serve_pagesparse_topn{args.page_topn}_")
+                       and "_pages," in l for l in lines), lines
+            assert any("_quality," in l for l in lines), lines
         print("smoke ok")
     else:
         run(paged=paged, page_size=args.page_size,
-            prefix_cache=args.prefix_cache, swap_pages=args.swap_pages)
+            prefix_cache=args.prefix_cache, swap_pages=args.swap_pages,
+            page_topn=args.page_topn or None)

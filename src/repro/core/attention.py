@@ -100,13 +100,15 @@ def standard_attention(q: Array, k: Array, v: Array, *, scale: float,
 def had_topn_attention(q: Array, k: Array, v: Array, *, n: int, scale: float,
                        causal: bool = True, q_offset: Array | int = 0,
                        kv_valid: Array | None = None,
-                       return_logits: bool = False):
+                       return_logits: bool = False,
+                       method: str | None = None):
     """HAD student attention, Eq. 5-8 (dense compute, top-N mask).
 
     q/k are the (possibly tanh-softened or STE-binarized) Q/K. The top-N
     mask is computed on the *unscaled* logits (Eq. 6), then softmax applies
     the 1/sqrt(d_k) scale within the mask (Eq. 7). Returns out
     (and optionally the scaled pre-mask logits for the Eq. 9 KL).
+    method: top-N threshold algorithm ("sort"/"bisect", see core.topn).
     """
     hk = k.shape[1]
     qg = _group(q, hk)
@@ -115,7 +117,7 @@ def had_topn_attention(q: Array, k: Array, v: Array, *, n: int, scale: float,
     mask = _key_mask(q.shape[2], k.shape[2], causal=causal, q_offset=q_offset,
                      kv_valid=kv_valid, batch=q.shape[0])
     valid = None if mask is None else jnp.broadcast_to(mask, raw.shape)
-    keep = topn.topn_mask(raw, n, valid=valid)
+    keep = topn.topn_mask(raw, n, valid=valid, method=method)
     a = topn.sparse_softmax(raw, keep, scale=scale).astype(ATTN_DTYPE)
     out = jnp.einsum("bhgqk,bhkd->bhgqd", a, v.astype(ATTN_DTYPE))
     out = _ungroup(out).astype(v.dtype)
@@ -138,7 +140,8 @@ def distill_pair_attention(qt: Array, kt: Array, vt: Array,
                            qs: Array, ks: Array, vs: Array, *, n: int,
                            scale: float, causal: bool = True,
                            kv_valid: Array | None = None,
-                           q_block: int = 512) -> DistillAttnOut:
+                           q_block: int = 512,
+                           method: str | None = None) -> DistillAttnOut:
     """Fused teacher + student attention with Eq. 9 KL accumulation.
 
     Scans over query blocks; each block materializes the full [bq, Sk]
@@ -173,7 +176,7 @@ def distill_pair_attention(qt: Array, kt: Array, vt: Array,
                                     at.astype(ATTN_DTYPE),
                                     vt.astype(ATTN_DTYPE)))
         # student: top-N masked softmax (mask from raw logits, Eq. 6)
-        keep = topn.topn_mask(raw_s, n, valid=valid)
+        keep = topn.topn_mask(raw_s, n, valid=valid, method=method)
         as_ = topn.sparse_softmax(raw_s, keep, scale=scale)
         out_s = _ungroup(jnp.einsum("bhgqk,bhkd->bhgqd",
                                     as_.astype(ATTN_DTYPE),

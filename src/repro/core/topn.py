@@ -33,14 +33,29 @@ NEG_INF = -1e30
 #     masked count (compare+sum), which XLA fuses and partitions freely; no
 #     O(k log k) sort, no sort-merge HBM traffic. Keeps >= n elements by
 #     invariant (count(x >= lo) >= n at every step). §Perf hillclimb A.
-THRESHOLD_METHOD = "sort"
+# The method is an explicit `method=` argument on topn_threshold_exact /
+# topn_mask ("sort" by default) — there is deliberately NO module-global
+# switch: a mutable global leaked state across tests and call sites.
+THRESHOLD_METHODS = ("sort", "bisect")
+_DEFAULT_THRESHOLD_METHOD = "sort"
 
 
 def set_threshold_method(method: str) -> str:
-    global THRESHOLD_METHOD
-    assert method in ("sort", "bisect"), method
-    prev = THRESHOLD_METHOD
-    THRESHOLD_METHOD = method
+    """DEPRECATED process-global default override; returns the previous
+    default. Pass ``method=`` to topn_threshold_exact / topn_mask (or
+    thread it from your caller) instead — explicit arguments don't leak
+    across tests. Kept as a shim for old drivers; it only affects calls
+    that omit ``method=``.
+    """
+    import warnings
+    global _DEFAULT_THRESHOLD_METHOD
+    assert method in THRESHOLD_METHODS, method
+    warnings.warn(
+        "set_threshold_method is deprecated: pass method= to "
+        "topn_threshold_exact / topn_mask instead",
+        DeprecationWarning, stacklevel=2)
+    prev = _DEFAULT_THRESHOLD_METHOD
+    _DEFAULT_THRESHOLD_METHOD = method
     return prev
 
 
@@ -70,6 +85,8 @@ def topn_threshold_exact(scores: Array, n: int, *, valid: Array | None = None,
     scores: [..., m, k] float; valid: broadcastable bool mask of usable keys.
     Returns thresholds [..., m] such that (scores >= t) keeps >= min(n, row)
     elements. Rows with fewer than n valid keys get threshold -inf.
+    method: "sort" (default) or "bisect"; None falls back to the process
+    default (only ever not "sort" via the deprecated set_threshold_method).
     """
     if valid is not None:
         scores = jnp.where(valid, scores, NEG_INF)
@@ -79,7 +96,8 @@ def topn_threshold_exact(scores: Array, n: int, *, valid: Array | None = None,
     # through the kept logits, not the threshold); also keeps autodiff off
     # sort's JVP.
     scores = jax.lax.stop_gradient(scores)
-    method = THRESHOLD_METHOD if method is None else method
+    method = _DEFAULT_THRESHOLD_METHOD if method is None else method
+    assert method in THRESHOLD_METHODS, method
     if method == "bisect":
         return _bisect_threshold(scores, n_eff, valid=valid)
     # jnp.sort (ascending, take k-n) rather than lax.top_k: identical value,
@@ -90,9 +108,10 @@ def topn_threshold_exact(scores: Array, n: int, *, valid: Array | None = None,
     return thresh
 
 
-def topn_mask(scores: Array, n: int, *, valid: Array | None = None) -> Array:
+def topn_mask(scores: Array, n: int, *, valid: Array | None = None,
+              method: str | None = None) -> Array:
     """Boolean mask keeping (at least) the top-n valid scores per row."""
-    t = topn_threshold_exact(scores, n, valid=valid)
+    t = topn_threshold_exact(scores, n, valid=valid, method=method)
     mask = scores >= t[..., None]
     if valid is not None:
         mask = jnp.logical_and(mask, valid)

@@ -7,19 +7,28 @@ page pools with no batch axis:
   k_pool: [n_pages, Hk, W, page]  uint32 bit-planes
   v_pool: [n_pages, Hk, page, Dv]
 
-and each (batch, kv-head) row walks its slot's row of the block table
-instead of a contiguous cache. The block table is a *scalar-prefetch*
-operand (PrefetchScalarGridSpec): the K/V BlockSpec index maps read
-``block_tables[b, i]`` to pick the physical page DMA'd for sequence block
-i — the "block-table prefetch inner loop". Pages are fetched in logical
-order, so the accumulation order (and thus the floating-point result) is
-bit-identical to the contiguous kernel with block_t == page.
+and each (batch, kv-head) row walks its OWN row of a block table instead
+of a contiguous cache. The block table is a *scalar-prefetch* operand
+(PrefetchScalarGridSpec): the K/V BlockSpec index maps read
+``block_tables[bh, i]`` to pick the physical page DMA'd for sequence
+block i — the "block-table prefetch inner loop".
 
-Grid: (B*Hk, 2, max_blocks) — sequential on TPU; VMEM scratch carries the
+The table is per (batch, kv-head) ROW — not per slot — so the caller can
+hand each row a *compacted* table of selected pages (top-N page-sparse
+decode, phase 2) while the dense path simply broadcasts the slot's table
+over its kv heads. Because compaction breaks the ``i*page + off`` logical
+position arithmetic, per-token validity comes from ``counts[bh, i]`` —
+the number of valid tokens in row bh's i-th listed block — instead of a
+per-row total length. Blocks are listed in ascending logical order, so
+the accumulation order (and thus the floating-point result) is
+bit-identical to the contiguous kernel with block_t == page whenever the
+listed blocks cover the context.
+
+Grid: (B*Hk, 2, n_blocks) — sequential on TPU; VMEM scratch carries the
 histogram/threshold/accumulators across passes within each (batch,
-kv-head), exactly as in the contiguous kernel. Garbage pages past a
-slot's valid length are masked by `lengths` (the wrapper clamps
-unallocated -1 entries to page 0 so the index map stays in range).
+kv-head), exactly as in the contiguous kernel. Blocks with count 0
+(garbage / padding entries) contribute nothing (the wrapper clamps their
+page ids so the index map stays in range).
 """
 from __future__ import annotations
 
@@ -35,7 +44,7 @@ from repro.kernels.binary_decode_attention import _scores, _threshold
 Array = jax.Array
 
 
-def _paged_decode_kernel(bt_ref, len_ref, nsel_ref, scale_ref,
+def _paged_decode_kernel(bt_ref, cnt_ref, nsel_ref, scale_ref,
                          q_ref, k_ref, v_ref, o_ref,
                          hist_ref, thr_ref, num_ref, den_ref, blkmax_ref, *,
                          d: int, page: int, block_skip: bool):
@@ -49,8 +58,8 @@ def _paged_decode_kernel(bt_ref, len_ref, nsel_ref, scale_ref,
     def scores_valid():
         k = k_ref[0, 0]         # [W, page] — page picked by the index map
         s = _scores(q, k, d)    # [G, page] int32
-        pos = i * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        return s, pos < len_ref[bh]
+        off = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        return s, off < cnt_ref[bh, i]
 
     @pl.when((ph == 0) & (i == 0))
     def _init_hist():
@@ -99,7 +108,7 @@ def _paged_decode_kernel(bt_ref, len_ref, nsel_ref, scale_ref,
 
 def paged_decode_attention(q_bits: Array, k_pool: Array, v_pool: Array,
                            block_tables: Array, *, d: int, nsel: Array,
-                           scale: Array, lengths: Array,
+                           scale: Array, counts: Array,
                            n_kv_heads: int, interpret: bool = True,
                            block_skip: bool = True) -> Array:
     """Fused HAD decode attention over paged K/V pools.
@@ -108,12 +117,14 @@ def paged_decode_attention(q_bits: Array, k_pool: Array, v_pool: Array,
       q_bits: [B*Hk, G, W] uint32 — new-token query bits per KV head.
       k_pool: [n_pages, Hk, W, page] uint32 — paged K bit-planes.
       v_pool: [n_pages, Hk, page, Dv] — paged V.
-      block_tables: [B, max_blocks] int32 physical page ids (>= 0;
-        entries past a slot's valid length may alias any page — masked).
+      block_tables: [B*Hk, n_blocks] int32 physical page ids PER ROW
+        (>= 0; entries with count 0 may alias any page — masked). Rows
+        list their blocks in ascending logical order; a compacted table
+        (page-sparse phase 2) lists only the selected pages.
       d: head dimension (bits).
       nsel: [1] int32 top-N; scale: [1] float32 logit scale.
-      lengths: [B*Hk] int32 valid cache length per row.
-      n_kv_heads: Hk (maps grid row -> (batch, kv head)).
+      counts: [B*Hk, n_blocks] int32 valid tokens per listed block.
+      n_kv_heads: Hk (maps grid row -> kv head for the pool index).
 
     Returns: [B*Hk, G, Dv] float32 attention outputs.
     """
@@ -122,23 +133,24 @@ def paged_decode_attention(q_bits: Array, k_pool: Array, v_pool: Array,
     n_pages_v, hk2, page2, dv = v_pool.shape
     assert w == w2 and page == page2 and hk == hk2 == n_kv_heads
     assert n_pages_k == n_pages_v
-    b, nb = block_tables.shape
-    assert b * hk == bhk, (b, hk, bhk)
+    bhk2, nb = block_tables.shape
+    assert bhk2 == bhk and counts.shape == (bhk, nb), \
+        (block_tables.shape, counts.shape, bhk)
     kernel = functools.partial(_paged_decode_kernel, d=d, page=page,
                                block_skip=block_skip)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,          # block_tables feeds the index maps
         grid=(bhk, 2, nb),
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),  # lengths [B*Hk]
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # counts [B*Hk, nb]
             pl.BlockSpec(memory_space=pltpu.SMEM),  # nsel [1]
             pl.BlockSpec(memory_space=pltpu.SMEM),  # scale [1]
             pl.BlockSpec((1, g, w), lambda bh, ph, i, bt: (bh, 0, 0)),
             pl.BlockSpec((1, 1, w, page),
-                         lambda bh, ph, i, bt: (bt[bh // n_kv_heads, i],
+                         lambda bh, ph, i, bt: (bt[bh, i],
                                                 bh % n_kv_heads, 0, 0)),
             pl.BlockSpec((1, 1, page, dv),
-                         lambda bh, ph, i, bt: (bt[bh // n_kv_heads, i],
+                         lambda bh, ph, i, bt: (bt[bh, i],
                                                 bh % n_kv_heads, 0, 0)),
         ],
         out_specs=pl.BlockSpec((1, g, dv), lambda bh, ph, i, bt: (bh, 0, 0)),
@@ -155,4 +167,4 @@ def paged_decode_attention(q_bits: Array, k_pool: Array, v_pool: Array,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((bhk, g, dv), jnp.float32),
         interpret=interpret,
-    )(block_tables, lengths, nsel, scale, q_bits, k_pool, v_pool)
+    )(block_tables, counts, nsel, scale, q_bits, k_pool, v_pool)

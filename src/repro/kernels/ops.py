@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.core import hamming
 from repro.kernels import binary_decode_attention as _dec
+from repro.kernels import binary_page_score as _pscore
 from repro.kernels import binary_paged_decode_attention as _pdec
 from repro.kernels import binary_prefill_attention as _pre
 from repro.kernels import hamming_score as _hs
@@ -108,35 +109,101 @@ def decode_attention(q_bits: Array, k_bits: Array, v: Array, *, d: int,
     return out.reshape(b, h, dv)
 
 
-@functools.partial(jax.jit, static_argnames=("d", "interpret"))
+def _row_tables(block_tables: Array, lengths: Array, hk: int,
+                page: int) -> tuple[Array, Array, Array]:
+    """Per-slot [B, nb] table + [B] lengths -> per-(slot, kv-head) ROW
+    tables [B*Hk, nb] (clamped in range), per-block valid counts
+    [B*Hk, nb], and per-row lengths [B*Hk]."""
+    bt = jnp.maximum(jnp.asarray(block_tables, jnp.int32), 0)
+    b, nb = bt.shape
+    bt_rows = jnp.repeat(bt, hk, axis=0)
+    len_f = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32)[:, None],
+                             (b, hk)).reshape(-1)
+    counts = jnp.clip(len_f[:, None] -
+                      jnp.arange(nb, dtype=jnp.int32)[None] * page, 0, page)
+    return bt_rows, counts.astype(jnp.int32), len_f
+
+
+def select_pages(scores: Array, block_tables: Array, lengths: Array, *,
+                 page: int, n_sel: int) -> tuple[Array, Array, Array]:
+    """Phase-1 -> phase-2 handoff: keep each row's top-n_sel pages, with
+    the frontier (tail) page ALWAYS among them.
+
+    scores: [R, nb] per-page scores (higher = keep); block_tables:
+    [R, nb] int32 physical ids; lengths: [R] int32 valid context
+    lengths. n_sel is STATIC (clamped to nb). Returns compacted
+    (tables [R, n_sel], counts [R, n_sel], logical [R, n_sel]) with
+    blocks in ascending logical order, so phase 2 accumulates in the
+    same order as the dense walk.
+
+    Invariants: the frontier block (holding token lengths-1) is always
+    selected (its score is forced to +BIG — the just-written token is
+    never dropped); invalid blocks (past the frontier) are forced to
+    -BIG, and any that still get picked (fewer resident blocks than
+    n_sel) keep count 0 and a clamped in-range page id — compacted
+    tables never contain the -1 / out-of-bounds drop sentinel.
+    """
+    r, nb = scores.shape
+    n_sel = min(n_sel, nb)
+    blocks = jnp.arange(nb, dtype=jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    frontier = jnp.maximum(lengths - 1, 0) // page
+    big = jnp.int32(jnp.iinfo(jnp.int32).max // 4)
+    s = jnp.where(blocks[None] * page < lengths[:, None],
+                  scores.astype(jnp.int32), -big)
+    s = jnp.where(blocks[None] == frontier[:, None], big, s)
+    _, idx = jax.lax.top_k(s, n_sel)        # ties -> lowest logical block
+    idx = jnp.sort(idx, axis=1)             # ascending logical order
+    counts = jnp.clip(lengths[:, None] - idx * page, 0, page)
+    tables = jnp.maximum(jnp.take_along_axis(
+        jnp.asarray(block_tables, jnp.int32), idx, axis=1), 0)
+    return tables, counts.astype(jnp.int32), idx
+
+
+@functools.partial(jax.jit, static_argnames=("d", "page_topn", "interpret"))
 def paged_decode_attention(q_bits: Array, k_pool: Array, v_pool: Array,
                            block_tables: Array, *, d: int,
                            nsel: Array | int, scale: Array | float,
-                           lengths: Array,
+                           lengths: Array, page_topn: int | None = None,
                            interpret: bool | None = None) -> Array:
     """HAD decode attention for one new token against PAGED K/V pools.
 
     q_bits: [B, H, W] uint32; k_pool: [n_pages, Hk, W, page] bit-planes;
     v_pool: [n_pages, Hk, page, Dv]; block_tables: [B, max_blocks] int32
     (-1/garbage entries past each row's valid length are clamped — they
-    are masked by `lengths`); lengths: [B] int32 valid cache lengths.
-    Returns [B, H, Dv] f32. Block tables and lengths are traced: new
-    contents never recompile.
+    are masked by per-block counts); lengths: [B] int32 valid cache
+    lengths. Returns [B, H, Dv] f32. Block tables and lengths are
+    traced: new contents never recompile.
+
+    page_topn (STATIC) switches on two-phase page-sparse decode:
+    phase 1 scores every resident page per (slot, kv-head) with the
+    popcount upper-bound kernel, phase 2 runs the decode kernel over a
+    COMPACTED per-row block table of the top-page_topn pages (frontier
+    always included), so V gathers drop from O(context) to
+    O(page_topn * page). At page_topn >= max_blocks the dense walk runs
+    unchanged; at page_topn >= resident pages the result is
+    bit-identical to dense (all resident pages selected, same order).
     """
     interpret = default_interpret() if interpret is None else interpret
     b, h, w = q_bits.shape
-    _, hk, w2, _ = k_pool.shape
+    _, hk, w2, page = k_pool.shape
     assert w == w2
     g = h // hk
     dv = v_pool.shape[-1]
+    nb = block_tables.shape[1]
     qf = q_bits.reshape(b, hk, g, w).reshape(b * hk, g, w)
-    len_f = jnp.broadcast_to(lengths[:, None], (b, hk)).reshape(-1)
+    bt_rows, counts, len_f = _row_tables(block_tables, lengths, hk, page)
+    if page_topn is not None and page_topn < nb:
+        scores = _pscore.paged_page_scores(qf, k_pool, bt_rows, counts,
+                                           d=d, n_kv_heads=hk,
+                                           interpret=interpret)
+        bt_rows, counts, _ = select_pages(scores, bt_rows, len_f,
+                                          page=page, n_sel=page_topn)
     out = _pdec.paged_decode_attention(
-        qf, k_pool, v_pool,
-        jnp.maximum(jnp.asarray(block_tables, jnp.int32), 0),
+        qf, k_pool, v_pool, bt_rows,
         d=d, nsel=jnp.asarray([nsel], dtype=jnp.int32).reshape(1),
         scale=jnp.asarray([scale], dtype=jnp.float32).reshape(1),
-        lengths=len_f.astype(jnp.int32), n_kv_heads=hk,
+        counts=counts, n_kv_heads=hk,
         interpret=interpret)
     return out.reshape(b, h, dv)
 

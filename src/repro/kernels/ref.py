@@ -78,6 +78,100 @@ def paged_decode_attention_ref(q_bits: Array, k_pool: Array, v_pool: Array,
     return out.reshape(b, hk, g, -1)
 
 
+def page_scores_ref(q_bits: Array, k_pool: Array, block_tables: Array, *,
+                    d: int, lengths: Array) -> Array:
+    """Oracle for binary_page_score.paged_page_scores.
+
+    Unpacks the page bit-planes to +-1 vectors and computes the popcount
+    upper bound directly: bit j of some valid key in the page can match
+    q_j iff (q_j=+1 and some key has +1 there) or (q_j=-1 and some key
+    has -1 there); ub = 2 * sum_j matchable_j - d, maxed over the group.
+
+    q_bits: [B, Hk, G, W]; k_pool: [n_pages, Hk, W, page] bit-planes;
+    block_tables: [B, nb] int32; lengths: [B] int32.
+    Returns [B, Hk, nb] int32.
+    """
+    b, hk, g, w = q_bits.shape
+    nb = block_tables.shape[1]
+    page = k_pool.shape[-1]
+    bt = jnp.maximum(block_tables, 0)
+    kg = k_pool[bt]                               # [B, nb, Hk, W, page]
+    kg = jnp.moveaxis(kg, 1, 2)                   # [B, Hk, nb, W, page]
+    k_rows = jnp.swapaxes(kg, -1, -2)             # [B, Hk, nb, page, W]
+    k_pm1 = hamming.unpack_bits(k_rows, d)        # [B, Hk, nb, page, d]
+    q_pm1 = hamming.unpack_bits(q_bits, d)        # [B, Hk, G, d]
+    pos = (jnp.arange(nb, dtype=jnp.int32)[:, None] * page +
+           jnp.arange(page, dtype=jnp.int32)[None])
+    valid = pos[None] < jnp.asarray(lengths, jnp.int32)[:, None, None]
+    nv = jnp.sum(valid.astype(jnp.int32), axis=-1)            # [B, nb]
+    kbit = jnp.logical_and(k_pm1 > 0, valid[:, None, :, :, None])
+    cnt = jnp.sum(kbit.astype(jnp.int32), axis=3)             # [B,Hk,nb,d]
+    match = jnp.where(q_pm1[:, :, :, None, :] > 0,
+                      cnt[:, :, None] > 0,
+                      cnt[:, :, None] < nv[:, None, None, :, None])
+    ub = 2 * jnp.sum(match.astype(jnp.int32), axis=-1) - d    # [B,Hk,G,nb]
+    return jnp.max(ub, axis=2)
+
+
+def paged_sparse_decode_attention_ref(q_bits: Array, k_pool: Array,
+                                      v_pool: Array, block_tables: Array, *,
+                                      d: int, nsel: int, scale: float,
+                                      lengths: Array,
+                                      page_topn: int) -> Array:
+    """Oracle for two-phase page-sparse paged decode (ops page_topn= path).
+
+    Phase 1: page_scores_ref per (slot, kv-head). Selection: top-page_topn
+    pages per row with the frontier page forced in and invalid pages
+    forced out. Phase 2: the dense paged oracle with dropped pages'
+    tokens masked invalid — the same kept set the compacted-table kernel
+    attends, expressed as a mask instead of a gather.
+
+    Shapes as paged_decode_attention_ref, plus page_topn (static).
+    Returns [B, Hk, G, Dv] float32.
+    """
+    b, hk, g, _ = q_bits.shape
+    nb = block_tables.shape[1]
+    page = k_pool.shape[-1]
+    lengths = jnp.asarray(lengths, jnp.int32)
+    scores = page_scores_ref(q_bits, k_pool, block_tables, d=d,
+                             lengths=lengths)               # [B, Hk, nb]
+    blocks = jnp.arange(nb, dtype=jnp.int32)
+    frontier = jnp.maximum(lengths - 1, 0) // page
+    big = jnp.int32(jnp.iinfo(jnp.int32).max // 4)
+    s = jnp.where((blocks[None] * page < lengths[:, None])[:, None],
+                  scores, -big)
+    s = jnp.where((blocks[None] == frontier[:, None])[:, None], big, s)
+    _, idx = jax.lax.top_k(s, min(page_topn, nb))           # [B, Hk, n_sel]
+    keep_blk = jnp.zeros((b, hk, nb), bool).at[
+        jnp.arange(b)[:, None, None], jnp.arange(hk)[None, :, None],
+        idx].set(True)
+    keep_tok = jnp.repeat(keep_blk, page, axis=-1)          # [B, Hk, T]
+
+    bt = jnp.maximum(block_tables, 0)
+    kg = k_pool[bt]                               # [B, NB, Hk, W, page]
+    kg = jnp.moveaxis(kg, 1, 3)                   # [B, Hk, W, NB, page]
+    k_rows = jnp.swapaxes(
+        kg.reshape(kg.shape[:3] + (-1,)), -1, -2)  # [B, Hk, T, W] row-major
+    vg = v_pool[bt]                               # [B, NB, Hk, page, Dv]
+    vg = jnp.moveaxis(vg, 1, 2)                   # [B, Hk, NB, page, Dv]
+    v_rows = vg.reshape(vg.shape[:2] + (-1, vg.shape[-1]))
+    t = k_rows.shape[2]
+    lens_f = jnp.broadcast_to(lengths[:, None], (b, hk)).reshape(-1)
+
+    def one(qb, kb, vv, ln, keep):
+        scores_t = hamming.binary_scores(qb, kb, d)        # [G, T]
+        valid = jnp.logical_and(jnp.arange(t) < ln, keep)[None, :]
+        valid = jnp.broadcast_to(valid, scores_t.shape)
+        return _masked_topn_softmax_av(scores_t, vv, d=d, nsel=nsel,
+                                       scale=scale, valid=valid)
+
+    out = jax.vmap(one)(q_bits.reshape(b * hk, g, -1),
+                        k_rows.reshape(b * hk, t, -1),
+                        v_rows.reshape(b * hk, t, -1), lens_f,
+                        keep_tok.reshape(b * hk, t))
+    return out.reshape(b, hk, g, -1)
+
+
 def prefill_attention_ref(q_bits: Array, k_bits: Array, v: Array, *, d: int,
                           nsel: int, scale: float, kv_length: int,
                           q_offset: int, group_size: int,

@@ -119,7 +119,8 @@ def default_grad_accum(shape: M.ShapeSpec, mesh) -> int:
 
 
 def lower_train(cfg: ModelConfig, shape: M.ShapeSpec, mesh, *,
-                grad_accum: int | None = None):
+                grad_accum: int | None = None,
+                threshold_method: str | None = None):
     opt_cfg = adam.AdamWConfig(
         state_dtype="bfloat16" if cfg.trainable == "attention" or
         M.param_count(cfg) > 5e10 else "float32")
@@ -133,7 +134,8 @@ def lower_train(cfg: ModelConfig, shape: M.ShapeSpec, mesh, *,
         dcfg = DistillConfig()
         state, st_sh = abstract_train_state(cfg, opt_cfg, mesh, fsdp)
         step_fn = TS.build_distill_step(cfg, dcfg, opt_cfg, step_cfg,
-                                        topn=cfg.had.topn(shape.seq_len))
+                                        topn=cfg.had.topn(shape.seq_len),
+                                        threshold_method=threshold_method)
     else:
         state, st_sh = abstract_pretrain_state(cfg, opt_cfg, mesh)
         step_fn = TS.build_pretrain_step(cfg, opt_cfg, lambda s: 1e-5,
@@ -174,6 +176,9 @@ def lower_serve(cfg: ModelConfig, shape: M.ShapeSpec, mesh):
 
 
 _Q_BLOCK_OVERRIDE = None
+# CLI-scoped top-N threshold algorithm, threaded explicitly into the step
+# builders (core.topn no longer has a mutable process-global).
+_THRESHOLD_METHOD = None
 
 
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
@@ -193,7 +198,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     t0 = time.time()
     try:
         if shape.kind == "train":
-            lowered, extra = lower_train(cfg, shape, mesh)
+            lowered, extra = lower_train(cfg, shape, mesh,
+                                         threshold_method=_THRESHOLD_METHOD)
         else:
             lowered, extra = lower_serve(cfg, shape, mesh)
         t_lower = time.time() - t0
@@ -267,11 +273,9 @@ def main():
     if args.carry == "dp":
         from repro.models import transformer as _T
         _T.set_carry_pattern("b..")
-    global _Q_BLOCK_OVERRIDE
+    global _Q_BLOCK_OVERRIDE, _THRESHOLD_METHOD
     _Q_BLOCK_OVERRIDE = args.q_block
-    if args.threshold != "sort":
-        from repro.core import topn
-        topn.set_threshold_method(args.threshold)
+    _THRESHOLD_METHOD = args.threshold
     if args.attn_dtype == "bf16":
         from repro.core import attention as _A
         _A.set_attn_compute_dtype(jnp.bfloat16)

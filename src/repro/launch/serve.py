@@ -59,6 +59,13 @@ def main():
                          "--paged): evicted residents' KV pages move to a "
                          "host pool of this many pages and are restored "
                          "verbatim on re-admission — no re-prefill")
+    ap.add_argument("--page-topn", type=int, default=0,
+                    help="two-phase page-sparse decode (implies --paged): "
+                         "score every resident page from its packed k_bits, "
+                         "attend only the top-N pages plus the frontier. "
+                         "N >= resident pages is bit-identical to dense; "
+                         "small N trades accuracy for O(N*page) decode "
+                         "HBM traffic")
     ap.add_argument("--victim-policy", choices=("youngest", "longest-idle"),
                     default="youngest",
                     help="which resident pays for pool pressure: the "
@@ -79,7 +86,8 @@ def main():
     prompts = [rng.integers(0, cfg.vocab_size, size=int(s)) for s in lens]
     max_len = int(max(lens)) + args.gen
     binary = not args.baseline and cfg.had.enabled and cfg.has_attention
-    paged = args.paged or args.prefix_cache or bool(args.swap_pages)
+    paged = (args.paged or args.prefix_cache or bool(args.swap_pages)
+             or bool(args.page_topn))
     eng = Engine(cfg, params, ServeConfig(max_len=max_len,
                                           batch_slots=args.slots,
                                           prefill_chunk=args.prefill_chunk,
@@ -89,7 +97,8 @@ def main():
                                           policy=args.policy,
                                           prefix_cache=args.prefix_cache,
                                           swap_pages=args.swap_pages,
-                                          victim_policy=args.victim_policy))
+                                          victim_policy=args.victim_policy,
+                                          page_topn=args.page_topn or None))
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, seed=args.seed)
 
@@ -128,6 +137,11 @@ def main():
         print(f"kv pool: peak {a.peak_in_use}/{a.n_pages} pages "
               f"x {a.page_size} tok, {eng.stats['preemptions']} preemptions, "
               f"max {eng.stats['max_residents']} concurrent residents")
+        mode = (f"top-{args.page_topn} page-sparse" if args.page_topn
+                else "dense")
+        print(f"decode traffic ({mode}): "
+              f"{eng.stats['decode_pages_touched']} pages attended, "
+              f"~{eng.stats['decode_hbm_bytes']} B KV read")
     if args.prefix_cache:
         pc = eng.prefix
         print(f"prefix cache: {eng.stats['cached_tokens']} prompt tok "

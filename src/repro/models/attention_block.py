@@ -25,6 +25,7 @@ from repro.core import attention as A
 from repro.core import binarize as BZ
 from repro.core import hamming
 from repro.distributed.constraints import constrain
+from repro.kernels import binary_page_score as pscore
 from repro.kernels import ops as kops
 from repro.models import common
 from repro.models.config import ModelConfig
@@ -98,10 +99,11 @@ def attn_forward(p: dict, x: Array, *, cfg: ModelConfig, mode: str,
         return _out(p, y, cfg), AttnAux(zero, zero)
 
     n = att["n"]
+    method = att.get("threshold_method")  # top-N threshold algo (core.topn)
     if mode == "fp_topn":
         # full-precision Q/K with top-N sparsification only (paper fig. 3)
         y = A.had_topn_attention(q, k, v, n=n, scale=scale, causal=causal,
-                                 kv_valid=kv_valid)
+                                 kv_valid=kv_valid, method=method)
         return _out(p, y, cfg), AttnAux(zero, zero)
 
     if mode == "had_train":
@@ -110,14 +112,14 @@ def attn_forward(p: dict, x: Array, *, cfg: ModelConfig, mode: str,
         qb = BZ.binarize_scheduled(q, step=step, sched=sched, sigma=p["sigma_q"])
         kb = BZ.binarize_scheduled(k, step=step, sched=sched, sigma=p["sigma_k"])
         y = A.had_topn_attention(qb, kb, v, n=n, scale=scale, causal=causal,
-                                 kv_valid=kv_valid)
+                                 kv_valid=kv_valid, method=method)
         return _out(p, y, cfg), AttnAux(zero, zero)
 
     if mode == "had_eval":
         qb = BZ.binarize_inference(q, sigma=p["sigma_q"])
         kb = BZ.binarize_inference(k, sigma=p["sigma_k"])
         y = A.had_topn_attention(qb, kb, v, n=n, scale=scale, causal=causal,
-                                 kv_valid=kv_valid)
+                                 kv_valid=kv_valid, method=method)
         return _out(p, y, cfg), AttnAux(zero, zero)
 
     if mode in ("sab_train", "sab_eval"):
@@ -176,7 +178,8 @@ def attn_forward_distill(pt: dict, ps: dict, xt: Array, xs: Array, *,
     kv_valid = att.get("kv_valid_cross") if cross else att.get("kv_valid")
     res = A.distill_pair_attention(qt, kt, vt, qs, ks, vs, n=att["n"],
                                    scale=scale, causal=causal,
-                                   kv_valid=kv_valid, q_block=cfg.q_block)
+                                   kv_valid=kv_valid, q_block=cfg.q_block,
+                                   method=att.get("threshold_method"))
     yt = _out(pt, res.teacher_out, cfg)
     ys = _out(ps, res.student_out, cfg)
     return yt, ys, AttnAux(res.kl_sum, res.row_count)
@@ -374,12 +377,41 @@ def _update_std_cache_paged(cache: dict, k: Array, v: Array, pos: Array,
     return cache
 
 
+def _page_topn_keep(page_scores: Array, kv_len: Array, *, page: int,
+                    n_sel: int) -> Array:
+    """Top-N page selection as a per-slot token mask (jnp serving paths).
+
+    page_scores: [B, nb] per-page scores (any dtype, higher = keep);
+    kv_len: [B] int32 valid context lengths. Returns [B, nb*page] bool
+    keeping the tokens of each slot's top-n_sel pages — with the
+    frontier (tail) page always among them and pages past the frontier
+    never ranked in. The non-kernel paths apply this as a kv_valid
+    restriction on the already-gathered contiguous layout (identical
+    shapes, identical accumulation order), so at n_sel >= resident
+    pages the mask is all-True over the valid region and the result is
+    bit-identical to the dense paged path; the kernel path instead
+    compacts the block table (ops.select_pages) for the real HBM win.
+    """
+    b, nb = page_scores.shape
+    blocks = jnp.arange(nb, dtype=jnp.int32)
+    kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (b,))
+    frontier = jnp.maximum(kv_len - 1, 0) // page
+    s = jnp.where(blocks[None] * page < kv_len[:, None],
+                  page_scores.astype(jnp.float32), -jnp.inf)
+    s = jnp.where(blocks[None] == frontier[:, None], jnp.inf, s)
+    _, idx = jax.lax.top_k(s, min(n_sel, nb))
+    keep = jnp.zeros((b, nb), bool).at[
+        jnp.arange(b)[:, None], idx].set(True)
+    return jnp.repeat(keep, page, axis=1)
+
+
 def attn_serve(p: dict, x: Array, *, cfg: ModelConfig, cache: dict,
                pos: Array, n: int, binary: bool,
                cross: bool = False,
                n_valid: Array | None = None,
                block_tables: Array | None = None,
-               active: Array | None = None) -> tuple[Array, dict]:
+               active: Array | None = None,
+               page_topn: int | None = None) -> tuple[Array, dict]:
     """Prefill (S>1) or decode (S=1) step against a KV cache.
 
     x: [B, S, D]; pos: scalar int32 (uniform batch) or [B] int32 vector of
@@ -403,6 +435,16 @@ def attn_serve(p: dict, x: Array, *, cfg: ModelConfig, cache: dict,
     Pallas kernel, and the prefill/reference paths gather pages into the
     contiguous layout per step. Tables are traced arguments: their
     contents never trigger recompilation.
+
+    page_topn (STATIC int, optional, paged decode only): two-phase
+    page-sparse decode — phase 1 scores each resident page, phase 2
+    attends only each row's top-page_topn pages plus the frontier page.
+    The kernel path scores per (slot, kv-head) with the popcount
+    upper-bound kernel and compacts the block table; the jnp paths
+    score per slot (max over kv heads) and restrict kv_valid instead.
+    At page_topn >= resident pages every path is bit-identical to its
+    dense twin. Ignored for prefill chunks (s > 1) and cross layers, so
+    threading it unconditionally preserves the one-prefill-trace pin.
     """
     b, s, _ = x.shape
     dh = cfg.dh
@@ -450,7 +492,8 @@ def attn_serve(p: dict, x: Array, *, cfg: ModelConfig, cache: dict,
                     qb[:, :, 0], cache["k_bits"], cache["v"], bt_raw, d=dh,
                     nsel=n, scale=scale,
                     lengths=jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32),
-                                             (b,)))
+                                             (b,)),
+                    page_topn=page_topn)
             else:
                 y = kops.decode_attention(
                     qb[:, :, 0], cache["k_bits"], cache["v"], d=dh,
@@ -478,6 +521,18 @@ def attn_serve(p: dict, x: Array, *, cfg: ModelConfig, cache: dict,
                     jnp.arange(t_max)[None, :] < jnp.reshape(kv_len,
                                                              (-1, 1)),
                     (b, t_max))
+                if paged and s == 1 and page_topn is not None:
+                    hk = cfg.n_kv_heads
+                    page = cache["v"].shape[2]
+                    kv_len_b = jnp.broadcast_to(
+                        jnp.asarray(kv_len, jnp.int32), (b,))
+                    sc = pscore.page_score_bounds(
+                        qb[:, :, 0].reshape(b, hk, h // hk, -1), k_bits_bp,
+                        kv_len_b, d=dh, page=page)      # [B, Hk, nb]
+                    kv_valid = jnp.logical_and(
+                        kv_valid, _page_topn_keep(jnp.max(sc, axis=1),
+                                                  kv_len_b, page=page,
+                                                  n_sel=page_topn))
                 y = A.had_infer_attention(qb, kb_rows, v_rows, d=dh, n=n,
                                           scale=scale,
                                           causal=cfg.causal and not cross,
@@ -498,6 +553,21 @@ def attn_serve(p: dict, x: Array, *, cfg: ModelConfig, cache: dict,
         kv_valid = jnp.broadcast_to(
             jnp.arange(t_max)[None, :] < jnp.reshape(kv_len, (-1, 1)),
             (b, t_max))
+        if paged and s == 1 and page_topn is not None:
+            # fp has no bit-planes: score pages by their max QK logit
+            # over the grouped heads (exact, not an upper bound)
+            hk = cfg.n_kv_heads
+            page = cache["v"].shape[2]
+            kv_len_b = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (b,))
+            qg = q[:, :, 0].reshape(b, hk, h // hk, dh)
+            logits = jnp.einsum("bkgd,bktd->bkgt", qg.astype(jnp.float32),
+                                k_rows.astype(jnp.float32))
+            logits = jnp.where(kv_valid[:, None, None], logits, -jnp.inf)
+            sc = jnp.max(logits.reshape(b, hk, h // hk, t_max // page, page),
+                         axis=(1, 2, 4))                    # [B, nb]
+            kv_valid = jnp.logical_and(
+                kv_valid, _page_topn_keep(sc, kv_len_b, page=page,
+                                          n_sel=page_topn))
         y = A.standard_attention(q, k_rows, v_rows, scale=scale_t,
                                  causal=cfg.causal and not cross,
                                  q_offset=pos, kv_valid=kv_valid)

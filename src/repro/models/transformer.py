@@ -350,7 +350,8 @@ def serve_step(params: dict, batch: dict, caches: dict, *, cfg: ModelConfig,
                logits_mode: str = "all",
                active: Array | None = None,
                n_valid: Array | None = None,
-               block_tables: Array | None = None) -> tuple[Array, dict]:
+               block_tables: Array | None = None,
+               page_topn: int | None = None) -> tuple[Array, dict]:
     """Prefill (tokens [B, S>1]) or decode (tokens [B, 1]) against caches.
 
     Returns (logits [B, S, V], updated caches). `pos` is the index of the
@@ -380,6 +381,12 @@ def serve_step(params: dict, batch: dict, caches: dict, *, cfg: ModelConfig,
     never force a recompile. Pool leaves have no batch axis, so the
     per-slot `active` select below cannot apply to them; the page-scatter
     inside attn_serve drops inactive rows' writes instead.
+
+    `page_topn` (STATIC int, optional): top-N page-sparse paged decode —
+    each attention layer attends only its rows' best page_topn pages
+    (plus the frontier page). Only affects paged decode steps (S == 1),
+    so threading it unconditionally keeps the prefill-chunk trace
+    unchanged.
     """
     x = constrain(_embed_inputs(params, batch, cfg), "b..")
     img = _image_context(params, batch, cfg)
@@ -427,7 +434,8 @@ def serve_step(params: dict, batch: dict, caches: dict, *, cfg: ModelConfig,
                                         pos=pos, n=n, binary=binary,
                                         n_valid=n_valid,
                                         block_tables=block_tables,
-                                        active=active)
+                                        active=active,
+                                        page_topn=page_topn)
             x = x + mix
             if cfg.d_ff > 0:
                 h2 = common.rmsnorm(p_i["norm2"], x, eps=cfg.norm_eps)

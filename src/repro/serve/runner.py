@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import hamming
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.serve.paged import pages_needed
@@ -111,7 +112,8 @@ class ModelRunner:
         # usually the Scheduler's (pre-seeded) dict; seed the counters
         # this side increments so a standalone runner works with any dict
         for key in ("prefill_chunks", "prefill_tokens", "decode_steps",
-                    "swap_out_bytes", "swap_in_bytes"):
+                    "swap_out_bytes", "swap_in_bytes",
+                    "decode_pages_touched", "decode_hbm_bytes"):
             self.stats.setdefault(key, 0)
         self.n = scfg.topn if scfg.topn is not None else cfg.had.topn(scfg.max_len)
         self.chunk = max(1, min(scfg.prefill_chunk, scfg.max_len))
@@ -120,6 +122,15 @@ class ModelRunner:
             self.n_pages = (scfg.n_pages if scfg.n_pages is not None
                             else scfg.batch_slots
                             * pages_needed(scfg.max_len, self.page))
+            # decode HBM traffic model (host-side, per attention
+            # layer-instance x kv-head): bytes of one page of K (packed
+            # bit-planes on the binary path, fp otherwise) and of V
+            elem = jnp.empty((0,), cfg.dtype).dtype.itemsize
+            self._page_v_bytes = self.page * cfg.dh * elem
+            self._page_k_bytes = (hamming.packed_words(cfg.dh) * 4 * self.page
+                                  if scfg.binary else self._page_v_bytes)
+            self._attn_rows = (cfg.layer_pattern.count("A") * cfg.n_groups
+                               * cfg.n_kv_heads)
         else:
             self.n_pages = 0
         self.caches = self._init_caches()
@@ -128,13 +139,15 @@ class ModelRunner:
         # scheduler's SwapPool; this is the data half)
         self._swap_store: dict[int, dict] = {}
 
-        @functools.partial(jax.jit, static_argnames=("n", "binary"))
+        @functools.partial(jax.jit, static_argnames=("n", "binary",
+                                                     "page_topn"))
         def _step(params, batch, caches, pos, active, n_valid, block_tables,
-                  *, n, binary):
+                  *, n, binary, page_topn):
             return M.serve_step(params, batch, caches, cfg=cfg, pos=pos,
                                 n=n, binary=binary, logits_mode="last",
                                 active=active, n_valid=n_valid,
-                                block_tables=block_tables)
+                                block_tables=block_tables,
+                                page_topn=page_topn)
         self._step = _step
 
     def _init_caches(self) -> dict:
@@ -170,7 +183,8 @@ class ModelRunner:
         logits, self.caches = self._step(
             self.params, batch, self.caches, jnp.asarray(pos),
             jnp.asarray(active), jnp.asarray(n_valid), bt,
-            n=self.n, binary=self.scfg.binary)
+            n=self.n, binary=self.scfg.binary,
+            page_topn=self.scfg.page_topn)
         self.stats["prefill_chunks"] += 1
         self.stats["prefill_tokens"] += int(np.asarray(n_valid).sum())
         return logits
@@ -184,8 +198,38 @@ class ModelRunner:
             self.params,
             {"tokens": jnp.asarray(np.asarray(tokens, np.int32))[:, None]},
             self.caches, jnp.asarray(pos), jnp.asarray(active), None, bt,
-            n=self.n, binary=self.scfg.binary)
+            n=self.n, binary=self.scfg.binary,
+            page_topn=self.scfg.page_topn)
+        if self.scfg.paged:
+            self._count_decode_traffic(pos, active)
         return logits
+
+    def _count_decode_traffic(self, pos: np.ndarray,
+                              active: np.ndarray) -> None:
+        """Host-side pages-touched / HBM-byte accounting for one paged
+        decode step (pure arithmetic on the plan's positions — no device
+        round-trip, so the trace pin is untouched).
+
+        `decode_pages_touched` counts pages whose V is read, summed over
+        active slots (per layer-instance and kv-head the count is
+        identical, so it is NOT multiplied out — it is the per-slot
+        page-sparsity signal). `decode_hbm_bytes` is the estimated total
+        K+V traffic across all attention layer instances and kv heads:
+        dense reads every resident page's K and V; page-sparse phase 1
+        reads every resident page's k_bits and phase 2 reads only the
+        min(page_topn, resident) selected pages' k_bits + V.
+        """
+        res = (np.asarray(pos, np.int64)[np.asarray(active, bool)]
+               + self.page) // self.page          # ceil((pos+1)/page)
+        ptn = self.scfg.page_topn
+        sel = res if ptn is None else np.minimum(res, ptn)
+        self.stats["decode_pages_touched"] += int(sel.sum())
+        kb, vb = self._page_k_bytes, self._page_v_bytes
+        if ptn is None:
+            step_bytes = int((res * (kb + vb)).sum())
+        else:
+            step_bytes = int((res * kb + sel * (kb + vb)).sum())
+        self.stats["decode_hbm_bytes"] += step_bytes * self._attn_rows
 
     # ------------------------------------------------------------------
     # plan execution

@@ -109,6 +109,16 @@ class ServeConfig:
     # it last emitted a token (ties to youngest) — a fairness policy that
     # protects actively-streaming residents.
     victim_policy: str = "youngest"
+    # Top-N page-sparse decode (requires paged): each decode step scores
+    # every resident page per (slot, kv-head) from the stored k_bits
+    # bit-planes (popcount upper bound on any key's Hamming score) and
+    # attends only the best `page_topn` pages — the frontier page always
+    # among them — through a compacted block table, so per-step V reads
+    # are O(page_topn * page_size) instead of O(context). STATIC: baked
+    # into the (single) decode trace. None disables; values at or above
+    # a slot's resident page count are bit-identical to dense paged
+    # decode. Prefill chunks are unaffected.
+    page_topn: int | None = None
 
 
 @dataclasses.dataclass
@@ -274,6 +284,14 @@ class Scheduler:
         if scfg.swap_pages and not scfg.paged:
             raise ValueError("swap_pages requires paged=True (pages are "
                              "the unit of swapping)")
+        if scfg.page_topn is not None:
+            if not scfg.paged:
+                raise ValueError("page_topn requires paged=True (pages are "
+                                 "the unit of selection)")
+            if scfg.page_topn < 1:
+                raise ValueError(f"page_topn must be >= 1, got "
+                                 f"{scfg.page_topn} (the frontier page is "
+                                 f"always attended)")
         self.scfg = scfg
         self.chunk = max(1, min(scfg.prefill_chunk, scfg.max_len))
         if scfg.paged:

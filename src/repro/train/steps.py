@@ -87,7 +87,8 @@ def init_pretrain_state(key, cfg: ModelConfig, opt_cfg: adam.AdamWConfig,
 def build_pretrain_step(cfg: ModelConfig, opt_cfg: adam.AdamWConfig,
                         lr_fn: Callable, step_cfg: StepConfig = StepConfig(),
                         *, had_train: bool = False,
-                        dcfg: DistillConfig | None = None) -> Callable:
+                        dcfg: DistillConfig | None = None,
+                        threshold_method: str | None = None) -> Callable:
     """Next-token CE training step. had_train=True trains *with* the HAD
     attention in the loop (binarization-aware pretraining — paper §5
     'train-time optimizations' future-work direction)."""
@@ -95,7 +96,8 @@ def build_pretrain_step(cfg: ModelConfig, opt_cfg: adam.AdamWConfig,
     def loss_fn(params, batch, step):
         if had_train and cfg.has_attention:
             att = {"n": cfg.had.topn(batch["labels"].shape[1]),
-                   "sched": dcfg.schedule, "step": step}
+                   "sched": dcfg.schedule, "step": step,
+                   "threshold_method": threshold_method}
             out = M.forward(params, batch, cfg=cfg, mode="had_train", att=att)
         else:
             out = M.forward(params, batch, cfg=cfg, mode="std")
@@ -143,14 +145,18 @@ def init_distill_state(key, cfg: ModelConfig, opt_cfg: adam.AdamWConfig,
 def build_distill_step(cfg: ModelConfig, dcfg: DistillConfig,
                        opt_cfg: adam.AdamWConfig,
                        step_cfg: StepConfig = StepConfig(),
-                       *, topn: int | None = None) -> Callable:
+                       *, topn: int | None = None,
+                       threshold_method: str | None = None) -> Callable:
     """The paper's training step: teacher+student fused forward, Eq. 11
-    combined loss (Eq. 19 in stage 4), Adam on the student subset."""
+    combined loss (Eq. 19 in stage 4), Adam on the student subset.
+    threshold_method: top-N threshold algorithm ("sort"/"bisect"),
+    threaded explicitly down to core.topn (no module-global)."""
 
     def loss_fn(student, teacher, batch, step):
         seq = next(iter(batch.values())).shape[1]
         n = topn if topn is not None else cfg.had.topn(seq)
-        att = {"n": n, "sched": dcfg.schedule, "step": step}
+        att = {"n": n, "sched": dcfg.schedule, "step": step,
+               "threshold_method": threshold_method}
         out = M.forward_distill(teacher, student, batch, cfg=cfg, att=att)
         if step_cfg.output_positions == "last":
             lt, ls = out.teacher_logits[:, -1], out.student_logits[:, -1]

@@ -387,3 +387,164 @@ def test_decode_block_skip_matches_no_skip():
     out_full = D.decode_attention(q, kb, v, block_skip=False, **args)
     np.testing.assert_allclose(np.asarray(out_skip), np.asarray(out_full),
                                rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# two-phase page-sparse decode (binary_page_score + compacted-table kernel)
+# ---------------------------------------------------------------------------
+
+def _make_pool(b, h, hk, nb, page, d, dv, n_pages, seed=0,
+               vdtype=jnp.float32):
+    """Contiguous K/V scattered into a shuffled page pool (as _paged_case),
+    returned with the contiguous originals for oracle calls."""
+    t = nb * page
+    rng = np.random.default_rng(seed + 2)
+    qb = _bits((b, h, d), seed)
+    kb = _bits((b, hk, t, d), seed + 1)
+    v = jnp.asarray(rng.normal(size=(b, hk, t, dv)).astype(np.float32),
+                    dtype=vdtype)
+    w = kb.shape[-1]
+    perm = rng.permutation(n_pages)[: b * nb]
+    bt = perm.reshape(b, nb).astype(np.int32)
+    k_pool = np.zeros((n_pages, hk, w, page), np.uint32)
+    v_pool = np.zeros((n_pages, hk, page, dv),
+                      np.asarray(jnp.zeros((), vdtype)).dtype)
+    for bi in range(b):
+        for j in range(nb):
+            pg = bt[bi, j]
+            k_pool[pg] = np.swapaxes(
+                np.asarray(kb)[bi, :, j * page:(j + 1) * page], -1, -2)
+            v_pool[pg] = np.asarray(v)[bi, :, j * page:(j + 1) * page]
+    return (qb, kb, v, jnp.asarray(k_pool), jnp.asarray(v_pool),
+            jnp.asarray(bt))
+
+
+@pytest.mark.parametrize("d", [32, 64, 112])
+@pytest.mark.parametrize("hk", [1, 2])
+def test_page_score_kernel_matches_ref(d, hk):
+    b, g, nb, page = 2, 2, 5, 8
+    h = hk * g
+    qb, kb, _, k_pool, _, bt = _make_pool(b, h, hk, nb, page, d, 8,
+                                          n_pages=b * nb + 2, seed=d)
+    lengths = jnp.asarray([nb * page, 3 * page - 5], jnp.int32)
+    bt_rows, counts, _ = ops._row_tables(bt, lengths, hk, page)
+    qf = qb.reshape(b, hk, g, -1).reshape(b * hk, g, -1)
+    from repro.kernels import binary_page_score as PS
+    got = PS.paged_page_scores(qf, k_pool, bt_rows, counts, d=d,
+                               n_kv_heads=hk, interpret=True)
+    want = ref.page_scores_ref(qb.reshape(b, hk, g, -1), k_pool, bt,
+                               d=d, lengths=lengths)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(want).reshape(b * hk, nb))
+    # pure-jnp twin on the gathered bit-plane layout agrees too
+    k_bp = ops.to_bitplanes(kb)
+    bounds = PS.page_score_bounds(qb.reshape(b, hk, g, -1), k_bp, lengths,
+                                  d=d, page=page)
+    np.testing.assert_array_equal(np.asarray(bounds),
+                                  np.asarray(want))
+
+
+@given(st.integers(1, 2), st.integers(1, 2), st.integers(1, 3),
+       st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_page_score_is_upper_bound(b, hk, g, seed):
+    """The phase-1 score must dominate every valid key's exact score in
+    its page — otherwise selection could drop a page holding a top-N key
+    that dense attention would keep."""
+    d, nb, page = 32, 4, 8
+    h = hk * g
+    qb, kb, _, k_pool, _, bt = _make_pool(b, h, hk, nb, page, d, 4,
+                                          n_pages=b * nb + 1, seed=seed)
+    lens = np.random.default_rng(seed).integers(1, nb * page + 1, b)
+    lengths = jnp.asarray(lens, jnp.int32)
+    want = np.asarray(ref.page_scores_ref(qb.reshape(b, hk, g, -1), k_pool,
+                                          bt, d=d, lengths=lengths))
+    exact = np.asarray(ref.hamming_score_ref(
+        qb.reshape(b, hk, g, -1), kb, d))       # [B, Hk, G, T]
+    for bi in range(b):
+        for kh in range(hk):
+            for j in range(nb):
+                lo, hi = j * page, min((j + 1) * page, int(lens[bi]))
+                if lo >= int(lens[bi]):
+                    continue
+                page_max = exact[bi, kh, :, lo:hi].max()
+                assert want[bi, kh, j] >= page_max
+
+
+@pytest.mark.parametrize("page_topn", [6, 8, 11])   # == nb, > nb
+def test_paged_sparse_full_selection_bit_identical(page_topn):
+    """page_topn >= max_blocks: selection keeps everything -> the sparse
+    path must be BIT-identical to the dense paged walk."""
+    b, h, hk, nb, page, d, dv = 2, 4, 2, 6, 8, 64, 16
+    qb, _, _, k_pool, v_pool, bt = _make_pool(b, h, hk, nb, page, d, dv,
+                                              n_pages=b * nb + 3, seed=3)
+    lengths = jnp.asarray([nb * page, 30], jnp.int32)
+    kw = dict(d=d, nsel=10, scale=d ** -0.5, lengths=lengths,
+              interpret=True)
+    dense = ops.paged_decode_attention(qb, k_pool, v_pool, bt, **kw)
+    sparse = ops.paged_decode_attention(qb, k_pool, v_pool, bt,
+                                        page_topn=page_topn, **kw)
+    np.testing.assert_array_equal(np.asarray(dense), np.asarray(sparse))
+
+
+def test_paged_sparse_resident_coverage_bit_identical():
+    """resident pages <= page_topn < max_blocks: the compacted table holds
+    every RESIDENT page, and block-skip makes zero-count fill blocks
+    no-ops in both walks -> still bit-identical to dense."""
+    b, h, hk, nb, page, d, dv = 3, 2, 1, 6, 8, 32, 8
+    qb, _, _, k_pool, v_pool, bt = _make_pool(b, h, hk, nb, page, d, dv,
+                                              n_pages=b * nb + 2, seed=5)
+    # at most 3 resident pages per row; page_topn in [3, nb)
+    lengths = jnp.asarray([3 * page, 2 * page - 3, 1], jnp.int32)
+    kw = dict(d=d, nsel=6, scale=d ** -0.5, lengths=lengths, interpret=True)
+    dense = ops.paged_decode_attention(qb, k_pool, v_pool, bt, **kw)
+    for ptn in (3, 4, 5):
+        sparse = ops.paged_decode_attention(qb, k_pool, v_pool, bt,
+                                            page_topn=ptn, **kw)
+        np.testing.assert_array_equal(np.asarray(dense), np.asarray(sparse))
+
+
+@pytest.mark.parametrize("page_topn", [1, 2, 3])
+def test_paged_sparse_aggressive_matches_ref(page_topn):
+    """Aggressive N < resident pages: the compacted-table kernel must
+    agree with the mask-formulated sparse oracle (same kept set)."""
+    b, h, hk, nb, page, d, dv = 2, 4, 2, 6, 8, 64, 16
+    qb, _, _, k_pool, v_pool, bt = _make_pool(b, h, hk, nb, page, d, dv,
+                                              n_pages=b * nb + 1, seed=17)
+    lengths = jnp.asarray([nb * page, 5 * page - 2], jnp.int32)
+    got = ops.paged_decode_attention(qb, k_pool, v_pool, bt, d=d, nsel=10,
+                                     scale=d ** -0.5, lengths=lengths,
+                                     page_topn=page_topn, interpret=True)
+    want = ref.paged_sparse_decode_attention_ref(
+        qb.reshape(b, hk, h // hk, -1), k_pool, v_pool, bt, d=d, nsel=10,
+        scale=d ** -0.5, lengths=lengths,
+        page_topn=page_topn).reshape(b, h, dv)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=1e-6)
+
+
+@given(st.integers(1, 4), st.integers(0, 500))
+@settings(max_examples=15, deadline=None)
+def test_select_pages_invariants(n_sel, seed):
+    """Selection must always include the frontier page, never emit an
+    out-of-range physical id, and keep logical order ascending."""
+    r, nb, page, n_pages = 4, 6, 8, 40
+    rng = np.random.default_rng(seed)
+    scores = jnp.asarray(rng.integers(-64, 65, size=(r, nb)), jnp.int32)
+    bt = jnp.asarray(rng.integers(0, n_pages, size=(r, nb)), jnp.int32)
+    bt = bt.at[:, -2:].set(-1)                  # unallocated tail sentinels
+    lengths = jnp.asarray(rng.integers(1, (nb - 2) * page + 1, size=r),
+                          jnp.int32)
+    tables, counts, logical = ops.select_pages(scores, bt, lengths,
+                                               page=page, n_sel=n_sel)
+    tables, counts, logical = (np.asarray(tables), np.asarray(counts),
+                               np.asarray(logical))
+    frontier = (np.maximum(np.asarray(lengths) - 1, 0)) // page
+    for i in range(r):
+        assert frontier[i] in logical[i], "frontier page dropped"
+        assert (tables[i] >= 0).all(), "drop sentinel leaked into table"
+        assert (tables[i] < n_pages).all()
+        assert (np.diff(logical[i]) >= 0).all(), "logical order not kept"
+        # count bookkeeping matches the logical block positions
+        want_cnt = np.clip(int(lengths[i]) - logical[i] * page, 0, page)
+        np.testing.assert_array_equal(counts[i], want_cnt)

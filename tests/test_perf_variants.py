@@ -36,13 +36,27 @@ def test_bisect_integer_lattice_scores():
     s = jnp.asarray((rng.integers(0, d + 1, size=(4, 100)) * 2 - d)
                     .astype(np.float32))
     for n in (1, 5, 30, 99):
-        m_sort = np.asarray(T.topn_mask(s, n))
-        prev = T.set_threshold_method("bisect")
-        try:
-            m_bis = np.asarray(T.topn_mask(s, n))
-        finally:
-            T.set_threshold_method(prev)
+        m_sort = np.asarray(T.topn_mask(s, n, method="sort"))
+        m_bis = np.asarray(T.topn_mask(s, n, method="bisect"))
         np.testing.assert_array_equal(m_bis, m_sort)
+
+
+def test_set_threshold_method_shim_deprecated_but_functional():
+    """The old global setter must warn, yet still swap the default so
+    legacy drivers keep working until removal."""
+    s = jnp.asarray([[3.0, 1.0, 2.0, 0.0]])
+    with pytest.warns(DeprecationWarning):
+        prev = T.set_threshold_method("bisect")
+    try:
+        assert prev == "sort"
+        assert T._DEFAULT_THRESHOLD_METHOD == "bisect"
+        m_default = np.asarray(T.topn_mask(s, 2))         # uses the new default
+        m_explicit = np.asarray(T.topn_mask(s, 2, method="bisect"))
+        np.testing.assert_array_equal(m_default, m_explicit)
+    finally:
+        with pytest.warns(DeprecationWarning):
+            T.set_threshold_method(prev)
+    assert T._DEFAULT_THRESHOLD_METHOD == "sort"
 
 
 def test_fsdp_policy_thresholds():

@@ -888,3 +888,131 @@ def test_lockstep_prefill_decode(params):
     logits2 = eng.decode(tok)
     assert np.isfinite(np.asarray(logits2)).all()
     np.testing.assert_array_equal(eng.lengths, [9, 9])
+
+
+# ---------------------------------------------------------------------------
+# two-phase top-N page-sparse decode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("binary", [True, False])
+@pytest.mark.parametrize("page_topn", [3, 6])   # >= resident pages; == nb
+def test_page_sparse_full_coverage_bit_identical(params, binary, page_topn):
+    """Acceptance pin: page_topn >= resident pages selects every resident
+    page in logical order, so sparse decode is BIT-identical to the dense
+    paged walk — binary and fp paths. Prompts cap at 18 tokens ->
+    <= 3 resident pages of 8, so page_topn=3 already covers (and 6 ==
+    max_blocks covers trivially)."""
+    rng = np.random.default_rng(50)
+    prompts = [rng.integers(0, 64, n) for n in (13, 5, 9)]
+    dense = Engine(CFG, params, _scfg(3, binary, **PAGED))
+    ids_d = [dense.submit(p, max_new_tokens=5) for p in prompts]
+    want = dense.run()
+    sparse = Engine(CFG, params, _scfg(3, binary, **PAGED,
+                                       page_topn=page_topn))
+    ids_s = [sparse.submit(p, max_new_tokens=5) for p in prompts]
+    got = sparse.run()
+    for a, b in zip(ids_d, ids_s):
+        np.testing.assert_array_equal(got[b], want[a])
+
+
+def test_page_sparse_full_coverage_kernel_path():
+    """Same pin through the Pallas kernels: phase-1 page-score kernel +
+    compacted-table decode kernel vs the dense paged kernel."""
+    kparams = M.init_params(jax.random.PRNGKey(10), KCFG)
+    rng = np.random.default_rng(51)
+    prompts = [rng.integers(0, 64, n) for n in (12, 7)]
+    dense = Engine(KCFG, kparams, _scfg(2, True, **PAGED))
+    ids_d = [dense.submit(p, max_new_tokens=4) for p in prompts]
+    want = dense.run()
+    sparse = Engine(KCFG, kparams, _scfg(2, True, **PAGED, page_topn=3))
+    ids_s = [sparse.submit(p, max_new_tokens=4) for p in prompts]
+    got = sparse.run()
+    for a, b in zip(ids_d, ids_s):
+        np.testing.assert_array_equal(got[b], want[a])
+
+
+def test_page_sparse_composes_with_prefix_cache(params):
+    """Warm prefix-cache residents (pages mapped from the index, not
+    prefilled) must score and select identically: the warm sparse pass
+    stays pinned to the cold dense baseline."""
+    rng = np.random.default_rng(52)
+    shared = rng.integers(0, 64, 2 * 8)
+    prompts = [np.concatenate([shared, rng.integers(0, 64, 4 + i)])
+               for i in range(3)]
+    dense = Engine(CFG, params, _scfg(3, True, **PAGED))
+    ids_d = [dense.submit(p, max_new_tokens=5) for p in prompts]
+    want = dense.run()
+    eng = Engine(CFG, params, _scfg(3, True, **PAGED, prefix_cache=True,
+                                    page_topn=4))
+    # cold wave populates the index; repeat wave serves prefix-warm
+    ids_cold = [eng.submit(p, max_new_tokens=5) for p in prompts]
+    got_cold = eng.run()
+    eng.reset_stats()
+    ids_warm = [eng.submit(p, max_new_tokens=5) for p in prompts]
+    got_warm = eng.run()
+    assert eng.stats["cached_tokens"] > 0, "repeat wave never hit the index"
+    for d_, c, w_ in zip(ids_d, ids_cold, ids_warm):
+        np.testing.assert_array_equal(got_cold[c], want[d_])
+        np.testing.assert_array_equal(got_warm[w_], want[d_])
+
+
+def test_page_sparse_composes_with_swap_restore(params):
+    """Swap-restored residents (pages moved to host and back) must be
+    indistinguishable to the scoring pass: overcommitted pool + swap +
+    full-coverage page_topn stays bit-identical to the unpreempted dense
+    baseline."""
+    rng = np.random.default_rng(53)
+    prompts = [rng.integers(0, 64, n) for n in (13, 5, 9)]
+    dense = Engine(CFG, params, _scfg(3, True))
+    ids_d = [dense.submit(p, max_new_tokens=5) for p in prompts]
+    want = dense.run()
+    eng = Engine(CFG, params, _scfg(3, True, paged=True, page_size=8,
+                                    n_pages=3, swap_pages=8, page_topn=3))
+    ids = [eng.submit(p, max_new_tokens=5) for p in prompts]
+    got = eng.run()
+    assert eng.stats["swap_outs"] > 0, "pool never forced a swap: test void"
+    for a, b in zip(ids_d, ids):
+        np.testing.assert_array_equal(got[b], want[a])
+    assert eng.allocator.in_use == 0 and eng.swap.in_use == 0
+
+
+def test_page_sparse_keeps_one_prefill_one_decode_trace(params):
+    """The compile-count pin survives page-sparse decode: selection and
+    table compaction are traced ops inside the ONE decode trace
+    (page_topn is static; prefill is untouched)."""
+    eng = Engine(CFG, params, _scfg(1, True, **PAGED, page_topn=2))
+    rng = np.random.default_rng(54)
+    for n in (5, 8, 13, 21, 3):
+        eng.submit(rng.integers(0, 64, n), max_new_tokens=3)
+    eng.run()
+    assert eng._step._cache_size() == 2, eng._step._cache_size()
+
+
+def test_page_sparse_aggressive_touches_fewer_pages(params):
+    """Aggressive page_topn: the decode-traffic counters must show
+    strictly fewer pages attended (and fewer estimated KV bytes) than the
+    dense walk over the same workload — the O(N*page) claim."""
+    rng = np.random.default_rng(55)
+    prompts = [rng.integers(0, 64, n) for n in (30, 25, 28)]
+    stats = {}
+    for ptn in (None, 1):
+        eng = Engine(CFG, params, _scfg(3, True, **PAGED, page_topn=ptn))
+        for p in prompts:
+            eng.submit(p, max_new_tokens=8)
+        eng.run()
+        stats[ptn] = dict(eng.stats)
+    assert stats[1]["decode_pages_touched"] < \
+        stats[None]["decode_pages_touched"], stats
+    assert stats[1]["decode_hbm_bytes"] < stats[None]["decode_hbm_bytes"], \
+        stats
+    # same number of decode steps -> the reduction is per-step sparsity,
+    # not a shorter run
+    assert stats[1]["decode_steps"] == stats[None]["decode_steps"]
+
+
+def test_page_sparse_config_validation(params):
+    """page_topn requires the paged cache and a positive N."""
+    with pytest.raises(ValueError, match="paged"):
+        Engine(CFG, params, _scfg(1, True, page_topn=2))
+    with pytest.raises(ValueError, match="page_topn"):
+        Engine(CFG, params, _scfg(1, True, **PAGED, page_topn=0))
