@@ -42,6 +42,17 @@ plus the preemption-cost columns
 victims restore their pages verbatim instead of replaying their prompt +
 generation, so the harness asserts the swap pass re-prefills strictly
 fewer tokens.
+
+With ``--hybrid`` the shared-system-prompt workload additionally runs on
+a reduced ``mamba2-130m`` (pure-SSM) model served through the pooled
+recurrent state: cold vs prefix-cached passes emit the state-pool columns
+(``serve_hybrid_{off,on}_s<N>_statepool,<in_use>,<peak_held>,<ckpts>``,
+``..._on_s<N>_state,<state_restores>,<state_ckpt_bytes>`` and
+``..._on_s<N>_cached,<cached_tokens>,<hit_rate>``); the harness asserts
+the warm pass restores recurrent-state checkpoints and does strictly
+less prefill work than cold. With ``--swap-pages`` it also runs an
+overcommitted hybrid pass whose victims carry their state entry through
+the host swap pool (``serve_hybrid_swap_s<N>,<swap_outs>,<bytes>``).
 """
 from __future__ import annotations
 
@@ -183,7 +194,8 @@ def _serve_case(params, cfg, *, slots: int, skew: str, binary: bool,
 def run(print_fn=print, slot_counts=(1, 2, 4), n_req: int = 4,
         stagger: int = 2, paged: bool = False,
         page_size: int = 16, prefix_cache: bool = False,
-        swap_pages: int = 0, page_topn: int | None = None) -> list[str]:
+        swap_pages: int = 0, page_topn: int | None = None,
+        hybrid: bool = False) -> list[str]:
     csv = []
     cfg = causal_cfg(d=64, layers=2, heads=4)
     params = M.init_params(jax.random.PRNGKey(0), cfg)
@@ -247,6 +259,104 @@ def run(print_fn=print, slot_counts=(1, 2, 4), n_req: int = 4,
         csv += _page_sparse_case(print_fn, params, cfg,
                                  slots=slot_counts[-1], n_req=n_req,
                                  page_size=page_size, page_topn=page_topn)
+    if hybrid:
+        csv += _hybrid_case(print_fn, slots=slot_counts[-1], n_req=n_req,
+                            stagger=stagger, page_size=page_size,
+                            swap_pages=swap_pages)
+    return csv
+
+
+def _hybrid_case(print_fn, *, slots: int, n_req: int, stagger: int,
+                 page_size: int, swap_pages: int) -> list[str]:
+    """Stateful-model serving through the pooled recurrent state: the
+    shared-system-prompt workload on a reduced mamba2-130m (pure-SSM)
+    model, cold vs prefix-cached. A warm admission restores the state
+    checkpoint captured at the matched page-aligned boundary, so the
+    cached pass skips the shared prefix's prefill chunks AND its SSM
+    recurrence (bit-identical outputs are pinned in
+    tests/test_prefix_cache.py; the harness asserts the prefill-work
+    reduction and the restore count). With swap space an overcommitted
+    pass additionally swaps victims' state entries through the host
+    pool alongside their KV pages."""
+    from repro.configs import get_config
+    from repro.serve import pages_needed
+    cfg = get_config("mamba2-130m").reduced()
+    params = M.init_params(jax.random.PRNGKey(2), cfg)
+    rng = np.random.default_rng(23)
+    sys_prompt = rng.integers(0, cfg.vocab_size, size=2 * PROMPT_MEAN)
+    suffix = min(page_size, MAX_LEN - 2 * PROMPT_MEAN - GEN)
+    assert suffix >= 1, "shared prompt leaves no room for a unique suffix"
+    n_lat = max(n_req, slots + 2)
+    prompts = [np.concatenate([sys_prompt,
+                               rng.integers(0, cfg.vocab_size, size=suffix)])
+               for _ in range(n_lat)]
+    csv, ptoks = [], {}
+    for cached in (False, True):
+        tag = "on" if cached else "off"
+        eng = _engine(params, cfg, slots=slots, binary=True, paged=True,
+                      page_size=page_size, prefix_cache=cached)
+        _drive(eng, prompts, stagger=stagger)        # warm-up + index fill
+        eng.reset_stats()
+        r = _drive(eng, prompts, stagger=stagger)
+        st = eng.stats
+        name = f"serve_hybrid_{tag}_s{slots}"
+        t50, _, _ = _pcts(r["ttft"])
+        csv.append(f"{name}_ttft_p50,{t50:.2f},ms")
+        csv.append(f"{name}_prefill_tokens,{st['prefill_tokens']},tok")
+        csv.append(_kvpool_row(name, eng))
+        sp = eng.statepool
+        assert sp is not None and sp.n_held == 0, (
+            f"{sp.n_held} state entries leaked after the workload drained")
+        csv.append(f"{name}_statepool,{sp.n_held},{sp.peak_held},{sp.n_ckpt}")
+        ptoks[tag] = st["prefill_tokens"]
+        if cached:
+            seen = st["cached_tokens"] + st["prefill_tokens"]
+            rate = st["cached_tokens"] / max(seen, 1)
+            csv.append(f"{name}_cached,{st['cached_tokens']},{rate:.3f}")
+            csv.append(f"{name}_state,{st['state_restores']},"
+                       f"{st['state_ckpt_bytes']}")
+            assert st["state_restores"] > 0, (
+                "warm hybrid pass never restored a state checkpoint",
+                dict(st))
+            print_fn(f"  hybrid   slots={slots} shared-prompt cached: TTFT "
+                     f"p50 {t50:.1f} ms, prefill {st['prefill_tokens']} tok, "
+                     f"{st['cached_tokens']} cached ({100 * rate:.0f}%), "
+                     f"{st['state_restores']} state restores, "
+                     f"{st['state_ckpt_bytes']} ckpt B "
+                     f"(pool peak {sp.peak_held} held / {sp.n_ckpt} ckpts)")
+        else:
+            print_fn(f"  hybrid   slots={slots} shared-prompt cold:   TTFT "
+                     f"p50 {t50:.1f} ms, prefill {st['prefill_tokens']} tok")
+    assert ptoks["on"] < ptoks["off"], (
+        "warm hybrid pass failed to reduce prefill work", ptoks)
+    if swap_pages:
+        dense_pages = slots * pages_needed(MAX_LEN, page_size)
+        n_pages = max(pages_needed(MAX_LEN, page_size),
+                      int(dense_pages * 0.4))
+        # mixed-length prompts short enough for residents to CO-reside
+        # until decode growth forces the eviction — a decode-phase victim
+        # is what swap-out exists for (the long shared prompt above can't
+        # fit two residents in the overcommitted pool at all, so every
+        # eviction there would be an admission-time self-preempt)
+        lens = rng.integers(PROMPT_MEAN // 2, 2 * PROMPT_MEAN,
+                            size=max(n_req, slots + 2))
+        sw_prompts = [rng.integers(0, cfg.vocab_size, size=int(s))
+                      for s in lens]
+        eng = _engine(params, cfg, slots=slots, binary=True, paged=True,
+                      page_size=page_size, n_pages=n_pages,
+                      swap_pages=swap_pages)
+        _drive(eng, sw_prompts, stagger=stagger)
+        eng.reset_stats()
+        _drive(eng, sw_prompts, stagger=stagger)
+        st = eng.stats
+        assert st["swap_outs"] > 0, (
+            "hybrid overcommit never forced a swap-out", dict(st))
+        assert eng.statepool.n_held == 0, "state entries leaked over swap"
+        csv.append(f"serve_hybrid_swap_s{slots},{st['swap_outs']},"
+                   f"{st['swap_out_bytes']}")
+        print_fn(f"  hybrid   slots={slots} overcommit+swap: "
+                 f"{st['swap_outs']} state+KV swap-outs, "
+                 f"{st['swap_out_bytes']} B out")
     return csv
 
 
@@ -479,6 +589,13 @@ if __name__ == "__main__":
                          "plus the frontier (implies --paged; adds decode "
                          "pages-touched / est-HBM-bytes + quality CSV "
                          "columns)")
+    ap.add_argument("--hybrid", action="store_true",
+                    help="run the shared-system-prompt case on a reduced "
+                         "mamba2-130m served through the pooled recurrent "
+                         "state, cold vs prefix-cached (adds state-pool / "
+                         "checkpoint-bytes / cached-token CSV columns; with "
+                         "--swap-pages also an overcommitted state-swap "
+                         "pass)")
     args = ap.parse_args()
     paged = (args.paged or args.prefix_cache or bool(args.swap_pages)
              or bool(args.page_topn))
@@ -487,7 +604,8 @@ if __name__ == "__main__":
                     page_size=args.page_size,
                     prefix_cache=args.prefix_cache,
                     swap_pages=args.swap_pages,
-                    page_topn=args.page_topn or None)
+                    page_topn=args.page_topn or None,
+                    hybrid=args.hybrid)
         assert any("_ttft_p99," in l for l in lines), lines
         assert any("_stats," in l for l in lines), lines
         if paged:
@@ -510,8 +628,20 @@ if __name__ == "__main__":
             assert any(l.startswith(f"serve_pagesparse_topn{args.page_topn}_")
                        and "_pages," in l for l in lines), lines
             assert any("_quality," in l for l in lines), lines
+        if args.hybrid:
+            assert any(l.startswith("serve_hybrid_on_") and "_statepool,"
+                       in l for l in lines), lines
+            assert any(l.startswith("serve_hybrid_on_") and "_state,"
+                       in l for l in lines), lines
+            assert any(l.startswith("serve_hybrid_on_") and "_cached,"
+                       in l for l in lines), lines
+            assert any(l.startswith("serve_hybrid_off_") and
+                       "_prefill_tokens," in l for l in lines), lines
+            if args.swap_pages:
+                assert any(l.startswith("serve_hybrid_swap_")
+                           for l in lines), lines
         print("smoke ok")
     else:
         run(paged=paged, page_size=args.page_size,
             prefix_cache=args.prefix_cache, swap_pages=args.swap_pages,
-            page_topn=args.page_topn or None)
+            page_topn=args.page_topn or None, hybrid=args.hybrid)

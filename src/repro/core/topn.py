@@ -36,27 +36,8 @@ NEG_INF = -1e30
 # The method is an explicit `method=` argument on topn_threshold_exact /
 # topn_mask ("sort" by default) — there is deliberately NO module-global
 # switch: a mutable global leaked state across tests and call sites.
+# (The deprecated set_threshold_method shim was removed after one cycle.)
 THRESHOLD_METHODS = ("sort", "bisect")
-_DEFAULT_THRESHOLD_METHOD = "sort"
-
-
-def set_threshold_method(method: str) -> str:
-    """DEPRECATED process-global default override; returns the previous
-    default. Pass ``method=`` to topn_threshold_exact / topn_mask (or
-    thread it from your caller) instead — explicit arguments don't leak
-    across tests. Kept as a shim for old drivers; it only affects calls
-    that omit ``method=``.
-    """
-    import warnings
-    global _DEFAULT_THRESHOLD_METHOD
-    assert method in THRESHOLD_METHODS, method
-    warnings.warn(
-        "set_threshold_method is deprecated: pass method= to "
-        "topn_threshold_exact / topn_mask instead",
-        DeprecationWarning, stacklevel=2)
-    prev = _DEFAULT_THRESHOLD_METHOD
-    _DEFAULT_THRESHOLD_METHOD = method
-    return prev
 
 
 def _bisect_threshold(scores: Array, n_eff: int, *,
@@ -85,8 +66,7 @@ def topn_threshold_exact(scores: Array, n: int, *, valid: Array | None = None,
     scores: [..., m, k] float; valid: broadcastable bool mask of usable keys.
     Returns thresholds [..., m] such that (scores >= t) keeps >= min(n, row)
     elements. Rows with fewer than n valid keys get threshold -inf.
-    method: "sort" (default) or "bisect"; None falls back to the process
-    default (only ever not "sort" via the deprecated set_threshold_method).
+    method: "sort" (default) or "bisect".
     """
     if valid is not None:
         scores = jnp.where(valid, scores, NEG_INF)
@@ -96,7 +76,7 @@ def topn_threshold_exact(scores: Array, n: int, *, valid: Array | None = None,
     # through the kept logits, not the threshold); also keeps autodiff off
     # sort's JVP.
     scores = jax.lax.stop_gradient(scores)
-    method = _DEFAULT_THRESHOLD_METHOD if method is None else method
+    method = "sort" if method is None else method
     assert method in THRESHOLD_METHODS, method
     if method == "bisect":
         return _bisect_threshold(scores, n_eff, valid=valid)

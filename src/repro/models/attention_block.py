@@ -585,3 +585,22 @@ def fill_cross_cache(p: dict, image_embeds: Array, *, cfg: ModelConfig,
         kb = jnp.swapaxes(hamming.pack_bits(k.astype(jnp.float32)), -1, -2)
         return {"k_bits": kb, "v": v}
     return {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# pooled cross-attention cache entries (serving)
+# ---------------------------------------------------------------------------
+# A cross cache has no sequence growth (it is filled once from the image
+# embeds), so pooled serving stores it like SSM state: init_cache(cfg,
+# n_entries, n_image_tokens) builds the pool and a [B] entry table maps
+# slots to entries.
+
+def cross_cache_read(pool: dict, entries: Array) -> dict:
+    """Gather cross-cache entries into a [B, ...] batch view."""
+    return common.pool_read(pool, entries)
+
+
+def cross_cache_write(pool: dict, new: dict, entries: Array,
+                      ok: Array) -> dict:
+    """Scatter an updated cross-cache batch view back into its entries."""
+    return common.pool_write(pool, new, entries, ok)

@@ -92,3 +92,32 @@ def mlp(params: dict, x: Array, *, act: str) -> Array:
 def unembed(x: Array, w: Array) -> Array:
     """x: [..., D] @ w [D, V] -> logits f32."""
     return (x.astype(jnp.float32) @ w.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# pooled per-slot state (indexed entry reads/writes)
+# ---------------------------------------------------------------------------
+
+def pool_read(pool, entries: Array):
+    """Gather state entries from a pooled tree into a batch view.
+
+    pool: pytree of [n_entries, ...] leaves; entries: [B] int32 entry ids
+    (negative ids read entry 0 — callers mask those rows out on write).
+    Returns a pytree of [B, ...] leaves.
+    """
+    idx = jnp.maximum(entries, 0)
+    return jax.tree.map(lambda leaf: jnp.take(leaf, idx, axis=0), pool)
+
+
+def pool_write(pool, new, entries: Array, ok: Array):
+    """Scatter a batch view back into pooled entries.
+
+    Rows where ``ok`` is False are dropped via an out-of-bounds POSITIVE
+    sentinel (``n_entries``) — jnp ``.at[]`` normalizes -1 to the last
+    entry, which would corrupt a live resident's state.
+    """
+    def one(pool_leaf, new_leaf):
+        idx = jnp.where(ok, entries, pool_leaf.shape[0]).astype(jnp.int32)
+        return pool_leaf.at[idx].set(new_leaf.astype(pool_leaf.dtype),
+                                     mode="drop")
+    return jax.tree.map(one, pool, new)

@@ -210,3 +210,20 @@ def ssm_decode(p: dict, x: Array, *, cfg: ModelConfig,
     y = y.reshape(b, 1, cfg.d_inner).astype(x.dtype)
     y = common.rmsnorm(p["norm"], y, eps=cfg.norm_eps) * jax.nn.silu(z)
     return y @ p["w_out"], {"h": h, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# pooled state entries (serving)
+# ---------------------------------------------------------------------------
+# Pooled layout == dense layout with the batch axis repurposed as state
+# entries: ssm_init_state(cfg, n_entries) builds the pool, and the serve
+# step addresses it through a [B] entry table instead of [B, ...] slicing.
+
+def state_read(pool: dict, entries: Array) -> dict:
+    """Gather {h, conv} entries into a [B, ...] batch view."""
+    return common.pool_read(pool, entries)
+
+
+def state_write(pool: dict, new: dict, entries: Array, ok: Array) -> dict:
+    """Scatter an updated {h, conv} batch view back into its entries."""
+    return common.pool_write(pool, new, entries, ok)

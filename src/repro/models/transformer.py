@@ -315,16 +315,23 @@ def forward_distill(teacher: dict, student: dict, batch: dict, *,
 
 def init_caches(cfg: ModelConfig, batch: int, max_len: int, *,
                 binary: bool, paged: bool = False,
-                n_pages: int | None = None, page_size: int = 16) -> dict:
+                n_pages: int | None = None, page_size: int = 16,
+                state_pages: int | None = None) -> dict:
     """Stacked per-position caches matching the blocks pytree structure.
 
     With ``paged=True`` self-attention layers allocate a shared page pool
     (``[n_pages, ...]``, no batch axis — see serve/paged.py) addressed by
     per-slot block tables instead of a dense ``[batch, max_len]``
-    reservation; cross-attention caches (static, n_image_tokens-sized) and
-    SSM states (O(1) per slot) stay dense.
+    reservation.
+
+    With ``state_pages`` set, SSM states and cross-attention caches
+    likewise become shared entry pools: their layout is the dense layout
+    with the batch axis repurposed as ``state_pages`` entries, addressed
+    by the serve step's ``state_tables`` (see serve/statepool.py).
+    Without it they stay dense ``[batch, ...]`` per-slot state.
     """
     caches: dict[str, Any] = {}
+    state_batch = batch if state_pages is None else state_pages
     for i, ch in enumerate(cfg.layer_pattern):
         if ch == "A":
             if paged:
@@ -335,10 +342,10 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int, *,
                 one = AB.init_cache(cfg, batch, max_len, binary=binary)
         elif ch == "C":
             # filled by prefill from image embeds; sized at n_image_tokens
-            one = AB.init_cache(cfg, batch, max(cfg.n_image_tokens, 1),
-                                binary=binary)
+            one = AB.init_cache(cfg, state_batch,
+                                max(cfg.n_image_tokens, 1), binary=binary)
         else:
-            one = ssm.ssm_init_state(cfg, batch)
+            one = ssm.ssm_init_state(cfg, state_batch)
         caches[f"pos{i}"] = jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (cfg.n_groups,) + x.shape),
             one)
@@ -351,7 +358,8 @@ def serve_step(params: dict, batch: dict, caches: dict, *, cfg: ModelConfig,
                active: Array | None = None,
                n_valid: Array | None = None,
                block_tables: Array | None = None,
-               page_topn: int | None = None) -> tuple[Array, dict]:
+               page_topn: int | None = None,
+               state_tables: Array | None = None) -> tuple[Array, dict]:
     """Prefill (tokens [B, S>1]) or decode (tokens [B, 1]) against caches.
 
     Returns (logits [B, S, V], updated caches). `pos` is the index of the
@@ -387,6 +395,14 @@ def serve_step(params: dict, batch: dict, caches: dict, *, cfg: ModelConfig,
     (plus the frontier page). Only affects paged decode steps (S == 1),
     so threading it unconditionally keeps the prefill-chunk trace
     unchanged.
+
+    `state_tables` ([B] int32, optional): SSM states and cross caches are
+    pooled (init_caches ``state_pages``) and each row reads/writes the
+    entry this table names (-1 = no entry: reads are clamped to entry 0
+    and writes dropped). Like block tables it is traced — entry movement
+    never recompiles. Scatters drop inactive rows, mirroring the paged
+    KV write masking, so the per-slot ``active`` select below bypasses
+    pooled state leaves too.
     """
     x = constrain(_embed_inputs(params, batch, cfg), "b..")
     img = _image_context(params, batch, cfg)
@@ -408,12 +424,26 @@ def serve_step(params: dict, batch: dict, caches: dict, *, cfg: ModelConfig,
             return jnp.where(m, jnp.zeros_like(leaf), leaf)
         return jax.tree.map(one, tree)
 
+    st = None
+    if state_tables is not None:
+        st = jnp.asarray(state_tables, jnp.int32)           # [B]
+        st_ok = st >= 0
+        if active is not None:
+            st_ok = jnp.logical_and(st_ok, active)
+
     def group_fwd(x, gp_cache):
         gp, cache = gp_cache
         new_cache = {}
         for i, ch in enumerate(cfg.layer_pattern):
             p_i, c_i = gp[f"pos{i}"], cache[f"pos{i}"]
+            pooled = st is not None and ch in ("M", "C")
+            c_pool = c_i
+            if pooled:
+                c_i = common.pool_read(c_pool, st)          # entries -> [B,..]
             if fresh is not None and ch in ("M", "C"):
+                # Pooled entries are zeroed eagerly at admission; this
+                # in-trace zero of the gathered view is kept as a second
+                # line of defence (and IS the mechanism for dense state).
                 c_i = _zero_fresh(c_i)
             h = common.rmsnorm(p_i["norm1"], x, eps=cfg.norm_eps)
             if ch == "M":
@@ -422,6 +452,8 @@ def serve_step(params: dict, batch: dict, caches: dict, *, cfg: ModelConfig,
                 else:
                     mix, nc = ssm.ssm_forward(p_i["mixer"], h, cfg=cfg,
                                               state=c_i, n_valid=n_valid)
+                if pooled:
+                    nc = ssm.state_write(c_pool, nc, st, st_ok)
             elif ch == "C":
                 c_i = c_i if img is None else AB.fill_cross_cache(
                     p_i["mixer"], img, cfg=cfg, binary=binary)
@@ -429,6 +461,12 @@ def serve_step(params: dict, batch: dict, caches: dict, *, cfg: ModelConfig,
                                         pos=pos, n=n, binary=binary,
                                         cross=True)
                 nc = c_i
+                if pooled:
+                    # Decode never refills the cross cache (no image
+                    # embeds ride in a decode batch) — skip the scatter
+                    # and return the pool untouched.
+                    nc = (c_pool if decode and img is None
+                          else AB.cross_cache_write(c_pool, nc, st, st_ok))
             else:
                 mix, nc = AB.attn_serve(p_i["mixer"], h, cfg=cfg, cache=c_i,
                                         pos=pos, n=n, binary=binary,
@@ -455,13 +493,16 @@ def serve_step(params: dict, batch: dict, caches: dict, *, cfg: ModelConfig,
         def _sel(new, old):
             m = active.reshape((1, active.shape[0]) + (1,) * (new.ndim - 2))
             return jnp.where(m, new, old)
-        if block_tables is None:
-            new_caches = jax.tree.map(_sel, new_caches, caches)
-        else:
-            new_caches = {
-                key: (val if cfg.layer_pattern[int(key[3:])] == "A"
-                      else jax.tree.map(_sel, val, caches[key]))
-                for key, val in new_caches.items()}
+
+        def _is_pool(key):
+            ch = cfg.layer_pattern[int(key[3:])]
+            return ((ch == "A" and block_tables is not None)
+                    or (ch in ("M", "C") and st is not None))
+
+        new_caches = {
+            key: (val if _is_pool(key)
+                  else jax.tree.map(_sel, val, caches[key]))
+            for key, val in new_caches.items()}
     if logits_mode == "last":
         if n_valid is None:
             x = x[:, -1:]

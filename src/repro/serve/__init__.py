@@ -11,3 +11,6 @@ from repro.serve.runner import ModelRunner
 from repro.serve.scheduler import (DecodeSlot, PlannedAdmission,
                                    PrefillChunk, Reclaim, SchedulePlan,
                                    Scheduler, SwapIn)
+from repro.serve.statepool import StatePool
+from repro.serve.validate import (resolve_state_pages, state_layer_positions,
+                                  validate_serve_features)

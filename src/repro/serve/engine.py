@@ -34,6 +34,12 @@ Serving semantics (unchanged public contract):
   * With `prefix_cache=True` admission maps the longest cached
     page-aligned prompt prefix into the block table and skips its
     prefill entirely.
+  * Models with SSM or cross-attention layers serve all of the above
+    through pooled recurrent/cross state (`serve/statepool.py`): one
+    state entry per resident slot plus checkpoint entries captured at
+    KV-page boundaries during chunked prefill, so prefix hits restore
+    the matched boundary's recurrent state and swap-outs gather/restore
+    the state entry atomically with the KV pages.
   * `run()` loops until the queue and all slots are drained.
 
 The binary path stores the K cache bit-packed (16x smaller than bf16) and
@@ -53,9 +59,13 @@ from repro.serve.paged import BlockAllocator, PrefixCache, SwapPool  # noqa: F40
 from repro.serve.runner import ModelRunner, _chunk_extra, _sample_token
 from repro.serve.scheduler import (FinishedRequest, Request, SamplingParams,
                                    SchedulePlan, Scheduler, ServeConfig)
+from repro.serve.statepool import StatePool
+from repro.serve.validate import (state_layer_positions,
+                                  validate_serve_features)
 
 __all__ = ["Engine", "FinishedRequest", "Request", "SamplingParams",
-           "SchedulePlan", "Scheduler", "ModelRunner", "ServeConfig"]
+           "SchedulePlan", "Scheduler", "ModelRunner", "ServeConfig",
+           "StatePool"]
 
 
 class Engine:
@@ -63,22 +73,12 @@ class Engine:
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
-        if scfg.prefix_cache and any(ch in cfg.layer_pattern for ch in "MC"):
-            raise ValueError(
-                "prefix_cache is unsound for models with SSM or cross-"
-                "attention layers: per-slot SSM state depends on every "
-                "prefix token, and both it and the cross cache are only "
-                "zeroed for a fresh occupant by a position-0 chunk — a "
-                "prefix-matched admission starts past 0 and would inherit "
-                "the previous occupant's state")
-        if scfg.swap_pages and any(ch in cfg.layer_pattern for ch in "MC"):
-            raise ValueError(
-                "swap_pages is unsound for models with SSM or cross-"
-                "attention layers: their per-slot state lives in dense "
-                "(non-paged) arrays that the slot's next occupant "
-                "overwrites, so a swapped-out request could not restore "
-                "it — use recompute preemption (swap_pages=0)")
-        self.scheduler = Scheduler(scfg)
+        # model-pattern x feature coherence lives in ONE shared helper
+        # (serve/validate.py) — the runner re-checks the same rules
+        validate_serve_features(cfg.layer_pattern, scfg)
+        state_layers = (len(state_layer_positions(cfg.layer_pattern))
+                        if scfg.paged else 0)
+        self.scheduler = Scheduler(scfg, state_layers=state_layers)
         self.runner = ModelRunner(cfg, params, scfg,
                                   stats=self.scheduler.stats)
         self.n = self.runner.n
@@ -112,8 +112,16 @@ class Engine:
         return self.scheduler.swap
 
     @property
+    def statepool(self) -> StatePool | None:
+        return self.scheduler.statepool
+
+    @property
     def block_tables(self):
         return self.scheduler.block_tables
+
+    @property
+    def state_tables(self):
+        return self.scheduler.state_tables
 
     @property
     def max_blocks(self) -> int:
@@ -158,12 +166,12 @@ class Engine:
     def submit(self, tokens: np.ndarray | Request, max_new_tokens: int = 16,
                *, eos_token: int | None = None,
                sampling: SamplingParams | None = None,
-               extra: dict | None = None) -> int:
+               extra: dict | None = None, priority: str = "batch") -> int:
         """Enqueue a request; returns its request_id. May be called at any
         time — admission happens at the next `step()` if a slot is free."""
         return self.scheduler.submit(tokens, max_new_tokens,
                                      eos_token=eos_token, sampling=sampling,
-                                     extra=extra)
+                                     extra=extra, priority=priority)
 
     def step(self) -> list[FinishedRequest]:
         """One scheduler step — the whole engine loop is the three-line
@@ -229,7 +237,8 @@ class Engine:
             logits = self.runner.prefill_step(
                 padded, _chunk_extra(extra, s, lo, hi, self.chunk),
                 np.full((b,), lo, np.int32), np.ones((b,), bool),
-                np.full((b,), nv, np.int32), self.block_tables)
+                np.full((b,), nv, np.int32), self.block_tables,
+                self.state_tables)
             lo = hi
         for slot in self.slots:
             slot.length = s
@@ -248,7 +257,8 @@ class Engine:
                 self.scheduler.lockstep_alloc(i, int(pos[i]) + 1)
         logits = self.runner.decode_step(np.asarray(tokens, np.int32), pos,
                                          np.ones((b,), bool),
-                                         self.block_tables)
+                                         self.block_tables,
+                                         self.state_tables)
         for slot in self.slots:
             slot.length += 1
         return logits[:, 0, :self.cfg.vocab_size]

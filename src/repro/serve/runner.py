@@ -13,15 +13,22 @@ page registration, slot frees — happens back in `Scheduler.commit`.
 Execution order within one plan (the order that makes page recycling
 safe):
 
-  1. swap-in scatters — restore swapped requests' page contents into
-     their freshly allocated device pages (plan-time allocation precedes
-     every reclaim, so these pages can never be claimed by a same-plan
-     swap-out victim);
-  2. swap-out gathers — copy each victim's pages to host BEFORE any
-     planned write can recycle them;
-  3. prefill chunks, in plan order, sampling each completed prompt's
-     first token from the chunk's last-valid logits;
-  4. one batched ragged decode over the plan's decode set (minus slots
+  1. swap-in scatters — restore swapped requests' page contents (and,
+     for hybrid models, their pooled state entry) into freshly allocated
+     device pages/entries (plan-time allocation precedes every reclaim,
+     so these can never be claimed by a same-plan swap-out victim);
+  2. swap-out gathers — copy each victim's pages AND state entry to host
+     BEFORE any planned write can recycle them;
+  3. admission state init — zero each fresh/recompute admission's live
+     state entry (so a re-filled slot never inherits the previous
+     occupant's h/conv/cross state), or copy a prefix-matched boundary's
+     checkpoint entry into it ("swap" resumes skip this: their entry is
+     restored by step 1);
+  4. prefill chunks, in plan order, sampling each completed prompt's
+     first token from the chunk's last-valid logits; a chunk with a
+     planned `state_ckpt` is followed by a live-entry -> checkpoint-entry
+     copy (the recurrent state at the chunk's page-aligned frontier);
+  5. one batched ragged decode over the plan's decode set (minus slots
      whose just-sampled first token hit eos — the one stop condition
      only execution can observe).
 
@@ -44,6 +51,8 @@ from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.serve.paged import pages_needed
 from repro.serve.scheduler import SamplingParams, SchedulePlan, ServeConfig
+from repro.serve.validate import (resolve_state_pages, state_layer_positions,
+                                  validate_serve_features)
 
 Array = jax.Array
 
@@ -111,9 +120,11 @@ class ModelRunner:
         self.stats = stats
         # usually the Scheduler's (pre-seeded) dict; seed the counters
         # this side increments so a standalone runner works with any dict
+        validate_serve_features(cfg.layer_pattern, scfg)
         for key in ("prefill_chunks", "prefill_tokens", "decode_steps",
                     "swap_out_bytes", "swap_in_bytes",
-                    "decode_pages_touched", "decode_hbm_bytes"):
+                    "decode_pages_touched", "decode_hbm_bytes",
+                    "state_ckpt_bytes"):
             self.stats.setdefault(key, 0)
         self.n = scfg.topn if scfg.topn is not None else cfg.had.topn(scfg.max_len)
         self.chunk = max(1, min(scfg.prefill_chunk, scfg.max_len))
@@ -133,29 +144,40 @@ class ModelRunner:
                                * cfg.n_kv_heads)
         else:
             self.n_pages = 0
+        # pooled recurrent/cross state: paged engines with SSM ('M') or
+        # cross-attention ('C') layers keep that state in shared entry
+        # pools addressed by the plan's state_tables (serve/statepool.py)
+        self._state_positions = (state_layer_positions(cfg.layer_pattern)
+                                 if scfg.paged else ())
+        self.n_state_pages = (resolve_state_pages(scfg)
+                              if self._state_positions else 0)
         self.caches = self._init_caches()
-        # swapped-out page contents, request_id -> {cache key -> {leaf
-        # name -> np [n_groups, k_pages, ...]}} (accounting lives in the
+        # swapped-out contents, request_id -> {"kv": {cache key -> {leaf
+        # name -> np [n_groups, k_pages, ...]}}, "state": {cache key ->
+        # {leaf name -> np [n_groups, ...]}}} (accounting lives in the
         # scheduler's SwapPool; this is the data half)
         self._swap_store: dict[int, dict] = {}
 
         @functools.partial(jax.jit, static_argnames=("n", "binary",
                                                      "page_topn"))
         def _step(params, batch, caches, pos, active, n_valid, block_tables,
-                  *, n, binary, page_topn):
+                  state_tables, *, n, binary, page_topn):
             return M.serve_step(params, batch, caches, cfg=cfg, pos=pos,
                                 n=n, binary=binary, logits_mode="last",
                                 active=active, n_valid=n_valid,
                                 block_tables=block_tables,
-                                page_topn=page_topn)
+                                page_topn=page_topn,
+                                state_tables=state_tables)
         self._step = _step
 
     def _init_caches(self) -> dict:
         scfg = self.scfg
+        state_pages = self.n_state_pages if self._state_positions else None
         if scfg.paged:
             return M.init_caches(self.cfg, scfg.batch_slots, scfg.max_len,
                                  binary=scfg.binary, paged=True,
-                                 n_pages=self.n_pages, page_size=self.page)
+                                 n_pages=self.n_pages, page_size=self.page,
+                                 state_pages=state_pages)
         return M.init_caches(self.cfg, scfg.batch_slots, scfg.max_len,
                              binary=scfg.binary)
 
@@ -172,7 +194,8 @@ class ModelRunner:
     def prefill_step(self, tokens: np.ndarray, extra: dict,
                      pos: np.ndarray, active: np.ndarray,
                      n_valid: np.ndarray,
-                     block_tables: np.ndarray | None) -> Array:
+                     block_tables: np.ndarray | None,
+                     state_tables: np.ndarray | None = None) -> Array:
         """One padded prefill chunk through the jitted step: tokens
         [B, chunk] zero-padded, per-row pos/active/n_valid masks. Returns
         last-valid logits [B, 1, V_padded] and bumps the prefill
@@ -180,9 +203,10 @@ class ModelRunner:
         batch = {"tokens": jnp.asarray(tokens)}
         batch.update(extra)
         bt = None if block_tables is None else jnp.asarray(block_tables)
+        st = None if state_tables is None else jnp.asarray(state_tables)
         logits, self.caches = self._step(
             self.params, batch, self.caches, jnp.asarray(pos),
-            jnp.asarray(active), jnp.asarray(n_valid), bt,
+            jnp.asarray(active), jnp.asarray(n_valid), bt, st,
             n=self.n, binary=self.scfg.binary,
             page_topn=self.scfg.page_topn)
         self.stats["prefill_chunks"] += 1
@@ -191,13 +215,15 @@ class ModelRunner:
 
     def decode_step(self, tokens: np.ndarray, pos: np.ndarray,
                     active: np.ndarray,
-                    block_tables: np.ndarray | None) -> Array:
+                    block_tables: np.ndarray | None,
+                    state_tables: np.ndarray | None = None) -> Array:
         """One batched ragged decode step; returns logits [B, 1, V_padded]."""
         bt = None if block_tables is None else jnp.asarray(block_tables)
+        st = None if state_tables is None else jnp.asarray(state_tables)
         logits, self.caches = self._step(
             self.params,
             {"tokens": jnp.asarray(np.asarray(tokens, np.int32))[:, None]},
-            self.caches, jnp.asarray(pos), jnp.asarray(active), None, bt,
+            self.caches, jnp.asarray(pos), jnp.asarray(active), None, bt, st,
             n=self.n, binary=self.scfg.binary,
             page_topn=self.scfg.page_topn)
         if self.scfg.paged:
@@ -240,15 +266,24 @@ class ModelRunner:
         same step yields two)."""
         results: dict[int, list[int]] = collections.defaultdict(list)
         for swap_in in plan.swap_ins:               # 1. restores
-            self._swap_in_pages(swap_in.request_id, swap_in.pages)
+            self._swap_in_pages(swap_in.request_id, swap_in.pages,
+                                swap_in.state_page)
         for rc in plan.reclaims:                    # 2. gathers
             if rc.kind == "swap-out":
-                self._swap_out_pages(rc.request_id, rc.pages)
+                self._swap_out_pages(rc.request_id, rc.pages, rc.state_page)
+        for adm in plan.admissions:                 # 3. state entry init
+            if adm.state_page < 0 or adm.resume == "swap":
+                continue
+            if adm.state_restore >= 0:
+                self._state_copy(adm.state_restore, adm.state_page,
+                                 count=False)
+            else:
+                self._state_zero(adm.state_page)
         b = self.scfg.batch_slots
         vocab = self.cfg.vocab_size
         sampled: dict[int, int] = {}
         eos_hit: set[int] = set()
-        for ch in plan.prefill:                     # 3. prefill chunks
+        for ch in plan.prefill:                     # 4. prefill chunks
             req = ch.request
             s = int(req.tokens.size)
             nv = ch.hi - ch.lo
@@ -263,7 +298,12 @@ class ModelRunner:
                 _chunk_extra(req.extra, s, ch.lo, ch.hi, self.chunk,
                              batch=b, row=ch.slot),
                 np.asarray(ch.pos, np.int32), active, n_valid,
-                plan.block_tables)
+                plan.block_tables, plan.state_tables)
+            if ch.state_ckpt >= 0:
+                # checkpoint the recurrent state at this chunk's
+                # page-aligned frontier for later prefix restores
+                self._state_copy(int(plan.state_tables[ch.slot]),
+                                 ch.state_ckpt)
             if ch.samples:
                 tok = _sample_token(np.asarray(logits[ch.slot, 0, :vocab]),
                                     req.sampling, ch.rng)
@@ -272,7 +312,7 @@ class ModelRunner:
                 if ch.eos_token is not None and tok == ch.eos_token:
                     eos_hit.add(ch.slot)
         entries = [e for e in plan.decode if e.slot not in eos_hit]
-        if entries:                                 # 4. batched decode
+        if entries:                                 # 5. batched decode
             tokens = np.zeros((b,), np.int32)
             active = np.zeros((b,), bool)
             for e in entries:
@@ -281,7 +321,7 @@ class ModelRunner:
                 active[e.slot] = True
             logits = self.decode_step(
                 tokens, np.asarray(plan.decode_pos, np.int32), active,
-                plan.block_tables)
+                plan.block_tables, plan.state_tables)
             self.stats["decode_steps"] += 1
             rows = np.asarray(logits[:, 0, :vocab])
             for e in entries:
@@ -297,13 +337,19 @@ class ModelRunner:
             if ch == "A":
                 yield f"pos{i}"
 
-    def _swap_out_pages(self, request_id: int, pages: tuple) -> None:
+    def _state_keys(self):
+        for i in self._state_positions:
+            yield f"pos{i}"
+
+    def _swap_out_pages(self, request_id: int, pages: tuple,
+                        state_page: int = -1) -> None:
         """Gather a victim's device pages (every paged leaf: packed k_bits
-        + v, or the fp k/v twins) to host memory — one indexed take per
-        leaf, page granularity — before the freed pages can be recycled
-        by this plan's writes."""
+        + v, or the fp k/v twins) — plus, for hybrid models, its pooled
+        state entry — to host memory — one indexed take per leaf, page
+        granularity — before the freed pages/entries can be recycled by
+        this plan's writes."""
         idx = jnp.asarray(np.asarray(pages, np.int32))
-        payload: dict[str, dict[str, np.ndarray]] = {}
+        kv: dict[str, dict[str, np.ndarray]] = {}
         nbytes = 0
         for key in self._pool_keys():
             taken = {}
@@ -311,24 +357,71 @@ class ModelRunner:
                 arr = np.asarray(leaf[:, idx])      # [n_groups, k, ...]
                 taken[name] = arr
                 nbytes += arr.nbytes
-            payload[key] = taken
-        self._swap_store[request_id] = payload
+            kv[key] = taken
+        state: dict[str, dict[str, np.ndarray]] = {}
+        if state_page >= 0:
+            for key in self._state_keys():
+                taken = {}
+                for name, leaf in self.caches[key].items():
+                    arr = np.asarray(leaf[:, state_page])  # [n_groups, ...]
+                    taken[name] = arr
+                    nbytes += arr.nbytes
+                state[key] = taken
+        self._swap_store[request_id] = {"kv": kv, "state": state}
         self.stats["swap_out_bytes"] += nbytes
 
-    def _swap_in_pages(self, request_id: int, pages: tuple) -> None:
-        """Scatter a swapped request's stored page contents into its
-        freshly allocated device pages — the exact inverse of the
-        swap-out gather, restoring the KV verbatim (bit-identical resume,
-        zero re-prefill)."""
+    def _swap_in_pages(self, request_id: int, pages: tuple,
+                       state_page: int = -1) -> None:
+        """Scatter a swapped request's stored page contents (and state
+        entry) into its freshly allocated device pages — the exact inverse
+        of the swap-out gather, restoring the KV and recurrent state
+        verbatim (bit-identical resume, zero re-prefill)."""
         payload = self._swap_store.pop(request_id)
         idx = jnp.asarray(np.asarray(pages, np.int32))
         nbytes = 0
         caches = dict(self.caches)
-        for key, stored in payload.items():
+        for key, stored in payload["kv"].items():
             layer = dict(caches[key])
             for name, arr in stored.items():
                 layer[name] = layer[name].at[:, idx].set(jnp.asarray(arr))
                 nbytes += arr.nbytes
             caches[key] = layer
+        for key, stored in payload["state"].items():
+            layer = dict(caches[key])
+            for name, arr in stored.items():
+                layer[name] = layer[name].at[:, state_page].set(
+                    jnp.asarray(arr))
+                nbytes += arr.nbytes
+            caches[key] = layer
         self.caches = caches
         self.stats["swap_in_bytes"] += nbytes
+
+    # ------------------------------------------------------------------
+    # pooled state entry ops (eager, outside the jitted step)
+    # ------------------------------------------------------------------
+    def _state_zero(self, entry: int) -> None:
+        """Zero one pooled state entry across every state-carrying layer
+        (fresh/recompute admissions must never inherit the previous
+        occupant's h/conv/cross state)."""
+        caches = dict(self.caches)
+        for key in self._state_keys():
+            caches[key] = {
+                name: leaf.at[:, entry].set(jnp.zeros((), leaf.dtype))
+                for name, leaf in caches[key].items()}
+        self.caches = caches
+
+    def _state_copy(self, src: int, dst: int, count: bool = True) -> None:
+        """Copy pooled state entry src -> dst (checkpoint capture when
+        `count`, checkpoint restore otherwise — restores are counted by
+        the scheduler, capture bytes by us)."""
+        nbytes = 0
+        caches = dict(self.caches)
+        for key in self._state_keys():
+            layer = {}
+            for name, leaf in caches[key].items():
+                layer[name] = leaf.at[:, dst].set(leaf[:, src])
+                nbytes += (leaf.size // leaf.shape[1]) * leaf.dtype.itemsize
+            caches[key] = layer
+        self.caches = caches
+        if count:
+            self.stats["state_ckpt_bytes"] += nbytes

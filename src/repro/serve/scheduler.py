@@ -49,6 +49,8 @@ import numpy as np
 
 from repro.serve.paged import (BlockAllocator, PrefixCache, SwapPool,
                                chain_hash, pages_needed)
+from repro.serve.statepool import StatePool
+from repro.serve.validate import resolve_state_pages
 
 
 @dataclasses.dataclass
@@ -82,10 +84,9 @@ class ServeConfig:
     # prefilled again (shared-system-prompt TTFT becomes O(suffix)). A
     # finished request's pages are downgraded to an LRU instead of freed;
     # pool pressure reclaims LRU pages BEFORE preempting any resident.
-    # Unsound for models with SSM or cross-attention layers (per-slot
-    # recurrent/cross state is only zeroed for a fresh occupant at
-    # position 0, which a matched admission skips) — the engine rejects
-    # those combinations at construction.
+    # Models with SSM/cross-attention layers participate through pooled
+    # state checkpoints (see `state_pages`): a warm match restores the
+    # checkpoint of the matched page-aligned prefix.
     prefix_cache: bool = False
     # Admission policy: which queued request a freed slot takes next.
     # "fcfs" -> submission order; "shortest-prompt" -> fewest prompt
@@ -98,10 +99,9 @@ class ServeConfig:
     # position — no re-prefill, generated tokens and sampling rng intact.
     # 0 disables swapping (recompute preemption only). Recompute remains
     # the fallback whenever the pool is full or the victim carries
-    # sequence-aligned extra inputs. Unsound for models with SSM or
-    # cross-attention layers (their per-slot state is dense, not paged,
-    # and would not survive the slot's next occupant) — the engine
-    # rejects those combinations at construction.
+    # sequence-aligned extra inputs. Models with SSM/cross-attention
+    # layers gather/restore their pooled state entry atomically with
+    # their KV pages (see `state_pages`).
     swap_pages: int = 0
     # Victim selection under slot/page pressure: "youngest" evicts the
     # highest request id (FCFS progress, the historical behavior);
@@ -119,6 +119,23 @@ class ServeConfig:
     # a slot's resident page count are bit-identical to dense paged
     # decode. Prefill chunks are unaffected.
     page_topn: int | None = None
+    # Pooled recurrent/cross state (models with SSM or cross-attention
+    # layers, paged only): per-slot `h`/`conv`/cross-cache state lives in
+    # a shared pool of this many entries (serve/statepool.py) addressed
+    # through a traced entry table, mirroring the KV page pools. Spare
+    # entries beyond one-per-slot hold prefix-cache CHECKPOINTS: at each
+    # KV-page boundary of a cacheable chunked prefill the live entry is
+    # copied into a checkpoint keyed by the page's chained hash, so a
+    # warm prefix hit restores the recurrent state of the matched
+    # boundary. None auto-sizes (batch_slots, x4 with prefix_cache);
+    # must be >= batch_slots (>= 2x with prefix_cache).
+    state_pages: int | None = None
+    # Priority tiers on the victim-policy hook: when True, requests
+    # submitted with priority="latency" are never swapped out or
+    # recompute-preempted while any "batch"-tier resident is a viable
+    # victim (multi-tenant SLO protection). Victim_policy then ranks
+    # within the chosen tier.
+    priority: bool = False
 
 
 @dataclasses.dataclass
@@ -136,6 +153,7 @@ class Request:
     eos_token: int | None = None
     sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
     extra: dict | None = None      # per-request model inputs, batch dim 1
+    priority: str = "batch"        # "latency" | "batch" (ServeConfig.priority)
     request_id: int = -1           # assigned by submit
 
 
@@ -168,6 +186,13 @@ class _Slot:
     # scheduler steps since this slot last emitted a token (resident
     # slots only) — the "longest-idle" victim policy's signal
     idle: int = 0
+    # pooled recurrent/cross state (serve/statepool.py): the slot's live
+    # entry id (-1 = none / model has no state layers), mirrored into
+    # `state_tables`
+    state_page: int = -1
+    # transient: checkpoint entry a planned prefix-restore copies from
+    # (-1 = zero-init); consumed into the PlannedAdmission
+    state_src: int = -1
 
     @property
     def prefilling(self) -> bool:
@@ -191,6 +216,8 @@ class Reclaim:
     request_id: int = -1
     pages: tuple = ()              # swap-out: device pages to gather, in
                                    # logical (block) order
+    state_page: int = -1           # swap-out: pooled state entry to gather
+                                   # alongside the pages (-1 = stateless)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -199,6 +226,10 @@ class PlannedAdmission:
     request: Request
     resume: str                    # "fresh" | "recompute" | "swap"
     cached_tokens: int = 0         # prefix-cache tokens mapped at admission
+    state_page: int = -1           # live pooled state entry (-1 = stateless)
+    state_restore: int = -1        # checkpoint entry to copy into the live
+                                   # entry (-1 = zero-init; "swap" resumes
+                                   # restore from the swap payload instead)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -209,6 +240,8 @@ class SwapIn:
     request_id: int
     pages: tuple                   # NEW device pages, logical order
     length: int                    # preserved cache length (resume pos)
+    state_page: int = -1           # NEW pooled state entry the stored
+                                   # state payload scatters into
 
 
 @dataclasses.dataclass(frozen=True)
@@ -229,6 +262,12 @@ class PrefillChunk:
     samples: bool
     rng: Any = None
     eos_token: int | None = None
+    # pooled state checkpoint: after this chunk executes, copy the slot's
+    # live state entry into this (held) entry — `hi` lands exactly on a
+    # KV-page boundary, so the copy is the recurrent state matching the
+    # chain of full pages [0, hi). -1 = no checkpoint. commit() registers
+    # the entry under the page-chain key (or frees it on mismatch).
+    state_ckpt: int = -1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -246,12 +285,18 @@ class DecodeSlot:
 class SchedulePlan:
     """Everything one engine step executes, decided entirely at plan time.
 
-    Execution order (ModelRunner.execute): swap-in scatters, then reclaim
-    gathers (swap-outs), then prefill chunks in order, then one batched
-    decode over `decode` minus eos-dropped slots. `block_tables` is a
-    plan-time snapshot of the host table (None when not paged); it is
-    final for the whole step — every planned write lands in pages the
-    snapshot already maps.
+    Execution order (ModelRunner.execute): swap-in scatters (KV pages +
+    state entry), then reclaim gathers (swap-outs, KV + state), then
+    admission state-entry init (zero or checkpoint restore), then prefill
+    chunks in order (each followed by its planned checkpoint copy), then
+    one batched decode over `decode` minus eos-dropped slots. That order
+    is load-bearing for entry recycling: a swap-out victim's freed entry
+    may be reallocated as a later chunk's checkpoint in the SAME plan —
+    the gather must read it before the copy overwrites it.
+    `block_tables`/`state_tables` are plan-time snapshots of the host
+    tables (None when not paged / stateless); they are final for the
+    whole step — every planned write lands in pages/entries the snapshots
+    already map.
     """
     admissions: tuple = ()
     reclaims: tuple = ()
@@ -260,6 +305,9 @@ class SchedulePlan:
     decode: tuple = ()
     decode_pos: tuple = ()         # [batch_slots] per-slot positions
     block_tables: Any = None       # np.ndarray [batch_slots, max_blocks]
+    state_tables: Any = None       # np.ndarray [batch_slots] pooled state
+                                   # entry per slot (-1 = none); None for
+                                   # stateless/dense models
 
 
 class Scheduler:
@@ -272,7 +320,12 @@ class Scheduler:
     `commit(plan, {slot: [token, ...]})`.
     """
 
-    def __init__(self, scfg: ServeConfig, stats: dict | None = None):
+    def __init__(self, scfg: ServeConfig, stats: dict | None = None, *,
+                 state_layers: int = 0):
+        """`state_layers` is the count of recurrent/cross (SSM 'M' /
+        cross-attention 'C') positions in the model's layer pattern —
+        passed by the engine so the scheduler stays pattern-agnostic.
+        Nonzero + paged turns on the pooled state accounting."""
         if scfg.policy not in ("fcfs", "shortest-prompt"):
             raise ValueError(f"unknown policy {scfg.policy!r}")
         if scfg.victim_policy not in ("youngest", "longest-idle"):
@@ -316,6 +369,18 @@ class Scheduler:
                        else None)
         self.swap = (SwapPool(scfg.swap_pages, self.page)
                      if scfg.paged and scfg.swap_pages else None)
+        self.state_layers = state_layers
+        if scfg.paged and state_layers > 0:
+            self.n_state_pages = resolve_state_pages(scfg)
+            self.statepool: StatePool | None = StatePool(self.n_state_pages)
+            # host-side pooled-state entry table, snapshotted into every
+            # plan and mirrored to device as a TRACED argument; -1 = none
+            self.state_tables: np.ndarray | None = np.full(
+                (scfg.batch_slots,), -1, np.int32)
+        else:
+            self.n_state_pages = 0
+            self.statepool = None
+            self.state_tables = None
         self.slots = [_Slot() for _ in range(scfg.batch_slots)]
         self.queue: collections.deque[Request] = collections.deque()
         self._finished: list[FinishedRequest] = []
@@ -327,12 +392,17 @@ class Scheduler:
                     "tokens_generated", "preemptions", "max_residents",
                     "cached_tokens", "swap_outs", "swap_ins",
                     "swapped_tokens", "replayed_tokens", "swap_out_bytes",
-                    "swap_in_bytes"):
+                    "swap_in_bytes", "state_ckpts", "state_restores",
+                    "state_ckpt_bytes"):
             self.stats.setdefault(key, 0)
         # transient planning state (valid inside one schedule() call)
         self._plan_reclaims: list[Reclaim] = []
         self._plan_chunks: list[PrefillChunk] = []
         self._completed: set[int] = set()
+        # checkpoint entries this plan's admissions restore FROM — pinned
+        # against same-plan LRU eviction (the restore copy executes after
+        # any would-be overwrite of a recycled entry)
+        self._plan_state_pins: set[int] = set()
 
     # ------------------------------------------------------------------
     # queue API
@@ -340,7 +410,7 @@ class Scheduler:
     def submit(self, tokens: np.ndarray | Request, max_new_tokens: int = 16,
                *, eos_token: int | None = None,
                sampling: SamplingParams | None = None,
-               extra: dict | None = None) -> int:
+               extra: dict | None = None, priority: str = "batch") -> int:
         """Enqueue a request; returns its request_id. May be called at any
         time — admission happens at the next `schedule()` if a slot is
         free."""
@@ -357,7 +427,9 @@ class Scheduler:
                           max_new_tokens=max_new_tokens, eos_token=eos_token,
                           sampling=(dataclasses.replace(sampling) if sampling
                                     else SamplingParams()),
-                          extra=copy.deepcopy(extra))
+                          extra=copy.deepcopy(extra), priority=priority)
+        if req.priority not in ("latency", "batch"):
+            raise ValueError(f"unknown priority {req.priority!r}")
         # copy (np.array, not asarray): the queued prompt must not alias a
         # caller buffer that may be reused before admission
         req.tokens = np.array(req.tokens, np.int32).reshape(-1)
@@ -421,6 +493,7 @@ class Scheduler:
         self._plan_reclaims = []
         self._plan_chunks = []
         self._completed = set()
+        self._plan_state_pins = set()
         admissions: list[PlannedAdmission] = []
         swap_ins: list[SwapIn] = []
         for i, slot in enumerate(self.slots):
@@ -437,7 +510,8 @@ class Scheduler:
                     break
                 self._pop_next()
                 swap_ins.append(self._admit_swapped(i, req, pages))
-                admissions.append(PlannedAdmission(i, req, "swap"))
+                admissions.append(PlannedAdmission(
+                    i, req, "swap", state_page=slot.state_page))
             else:
                 self._pop_next()
                 resume = ("recompute" if req.request_id in self._resume
@@ -446,7 +520,10 @@ class Scheduler:
                 self._admit(i, req)
                 admissions.append(PlannedAdmission(
                     i, req, resume,
-                    cached_tokens=self.stats["cached_tokens"] - before))
+                    cached_tokens=self.stats["cached_tokens"] - before,
+                    state_page=slot.state_page,
+                    state_restore=slot.state_src))
+                slot.state_src = -1
         residents = sum(s.request is not None for s in self.slots)
         self.stats["max_residents"] = max(self.stats["max_residents"],
                                           residents)
@@ -467,7 +544,9 @@ class Scheduler:
             decode=decode,
             decode_pos=decode_pos,
             block_tables=(None if self.block_tables is None
-                          else self.block_tables.copy()))
+                          else self.block_tables.copy()),
+            state_tables=(None if self.state_tables is None
+                          else self.state_tables.copy()))
         return plan
 
     def _plan_prefill_budget(self) -> None:
@@ -502,9 +581,18 @@ class Scheduler:
             return                      # slot itself reclaimed for pages
         pos = tuple(int(sl.length) for sl in self.slots)
         samples = hi == s and req.max_new_tokens > 0
+        ckpt = -1
+        if (self.statepool is not None and self.prefix is not None
+                and slot.cacheable and hi % self.page == 0):
+            # the chunk ends exactly on a KV-page boundary: capture the
+            # recurrent state there so a prefix hit on the page chain
+            # [0, hi) can restore it. Best-effort — alloc may come up
+            # empty when every spare entry is a pinned restore source.
+            got = self.statepool.alloc(evict_skip=self._plan_state_pins)
+            ckpt = -1 if got is None else got
         self._plan_chunks.append(PrefillChunk(
             slot=i, request=req, lo=lo, hi=hi, pos=pos, samples=samples,
-            rng=slot.rng, eos_token=req.eos_token))
+            rng=slot.rng, eos_token=req.eos_token, state_ckpt=ckpt))
         slot.prefill_pos = hi
         slot.length = hi
         if hi == s:
@@ -559,7 +647,11 @@ class Scheduler:
             i = ch.slot
             slot = self.slots[i]
             if slot.request is not ch.request:
-                continue               # finished earlier in this commit
+                # finished earlier in this commit; a planned checkpoint
+                # entry must still be returned to the pool
+                if ch.state_ckpt >= 0:
+                    self.statepool.free(ch.state_ckpt)
+                continue
             # register at the chunk's own frontier: `length` was advanced
             # for the whole plan (a same-step decode adds +1), but a page
             # completed by that decode token must be keyed AFTER the
@@ -568,6 +660,8 @@ class Scheduler:
             slot.length = ch.hi
             self._register_full_pages(i, slot)
             slot.length = post
+            if ch.state_ckpt >= 0:
+                self._register_state_ckpt(ch, slot)
             if ch.hi == int(ch.request.tokens.size):
                 if ch.request.max_new_tokens == 0:
                     self._finish(i)
@@ -613,6 +707,7 @@ class Scheduler:
         # pages matchable by its successors).
         if self.scfg.paged:
             self._free_slot_pages(i)
+        self._free_slot_state(i)
         self._clear_slot(i)
 
     def _drain_finished(self) -> list[FinishedRequest]:
@@ -633,6 +728,16 @@ class Scheduler:
         slot.pages = []
         self.block_tables[i, :] = -1
 
+    def _free_slot_state(self, i: int) -> None:
+        """Return slot i's live pooled state entry (its contents are dead:
+        finished, preempted, or already gathered to the swap store)."""
+        slot = self.slots[i]
+        if self.statepool is not None and slot.state_page >= 0:
+            self.statepool.free(slot.state_page)
+            slot.state_page = -1
+            slot.state_src = -1
+            self.state_tables[i] = -1
+
     def _clear_slot(self, i: int) -> None:
         slot = self.slots[i]
         slot.request = None
@@ -644,6 +749,7 @@ class Scheduler:
         slot.cacheable = False
         slot.pages = []
         slot.idle = 0
+        slot.state_src = -1
 
     def _seq_extra_blocks_resume(self, slot: _Slot) -> bool:
         """Recompute-style resume replays prompt+generated tokens, but
@@ -680,6 +786,14 @@ class Scheduler:
                 "KV page pool exhausted and every resident carries "
                 "sequence-aligned extra inputs that cannot be "
                 "re-prefilled after eviction; increase n_pages")
+        if self.scfg.priority:
+            # priority tiers ride on the victim hook: a latency-tier
+            # resident is never reclaimed while ANY batch-tier resident
+            # is a viable victim; victim_policy ranks within the tier
+            batch_tier = [i for i in ok
+                          if self.slots[i].request.priority != "latency"]
+            if batch_tier:
+                ok = batch_tier
         if self.scfg.victim_policy == "longest-idle":
             return max(ok, key=lambda i: (self.slots[i].idle,
                                           self.slots[i].request.request_id))
@@ -696,6 +810,10 @@ class Scheduler:
             if ch.slot == v:
                 if dropped_lo is None:
                     dropped_lo = ch.lo
+                if ch.state_ckpt >= 0:
+                    # the chunk (hence its post-chunk checkpoint copy)
+                    # will never execute — return the held entry
+                    self.statepool.free(ch.state_ckpt)
             else:
                 kept.append(ch)
         self._plan_chunks = kept
@@ -742,8 +860,13 @@ class Scheduler:
         }
         self._plan_reclaims.append(Reclaim(
             kind="swap-out", slot=v, request_id=req.request_id,
-            pages=tuple(int(p) for p in slot.pages[:n_swap])))
+            pages=tuple(int(p) for p in slot.pages[:n_swap]),
+            state_page=slot.state_page))
         self._free_slot_pages(v)
+        # the entry is freed NOW (plan time) and may be recycled by a
+        # later checkpoint alloc in this same plan — safe because the
+        # runner gathers swap-out state before any checkpoint copy
+        self._free_slot_state(v)
         self.queue.appendleft(req)
         self._clear_slot(v)
 
@@ -775,6 +898,7 @@ class Scheduler:
         self._plan_reclaims.append(Reclaim(
             kind="recompute-preempt", slot=i, request_id=req.request_id))
         self._free_slot_pages(i)
+        self._free_slot_state(i)
         self.queue.appendleft(req)
         self._clear_slot(i)
 
@@ -866,6 +990,26 @@ class Scheduler:
                 break
             pages.append(page)
             keys.append(key)
+        if pages and self.statepool is not None:
+            # a stateful model can only resume from a boundary whose
+            # recurrent-state checkpoint survives: cap the match at the
+            # DEEPEST checkpointed boundary of the matched chain (KV
+            # pages beyond it are released — their state is gone)
+            best, src = 0, -1
+            for j in range(len(pages), 0, -1):
+                entry = self.statepool.peek(keys[j - 1])
+                if entry is not None:
+                    best, src = j, entry
+                    break
+            for page in reversed(pages[best:]):
+                self.allocator.free(int(page))
+            pages, keys = pages[:best], keys[:best]
+            if pages:
+                self.statepool.lookup(keys[-1])   # stats + LRU recency
+                slot.state_src = src
+                self._plan_state_pins.add(src)
+            else:
+                self.statepool.misses += 1
         if not pages:
             return
         k = len(pages)
@@ -907,6 +1051,20 @@ class Scheduler:
             self.prefix.register(key, int(row[j]))
             slot.page_keys.append(key)
 
+    def _register_state_ckpt(self, ch: PrefillChunk, slot: _Slot) -> None:
+        """Publish a chunk's executed state checkpoint under the chained
+        key of its page-aligned frontier (the runner already copied the
+        live entry into `ch.state_ckpt`). First-writer-wins like the page
+        index; a duplicate (or an uncacheable slot) frees the entry."""
+        kidx = ch.hi // self.page - 1
+        key = (slot.page_keys[kidx]
+               if slot.cacheable and 0 <= kidx < len(slot.page_keys)
+               else None)
+        if key is not None and self.statepool.register(key, ch.state_ckpt):
+            self.stats["state_ckpts"] += 1
+        else:
+            self.statepool.free(ch.state_ckpt)
+
     # ------------------------------------------------------------------
     # admission internals
     # ------------------------------------------------------------------
@@ -937,6 +1095,15 @@ class Scheduler:
         slot.cacheable = self.prefix is not None and not req.extra
         if slot.cacheable:
             self._match_prefix(i, slot, req)
+        if self.statepool is not None:
+            # live entry AFTER the match (its alloc must not evict the
+            # pinned restore source). Guaranteed to succeed: held entries
+            # never exceed batch_slots live + this plan's pins, and
+            # validate.py sizes the pool above that.
+            slot.state_page = self._alloc_state_entry()
+            self.state_tables[i] = slot.state_page
+            if slot.state_src >= 0:
+                self.stats["state_restores"] += 1
         if entry is not None:
             # the tokens this resume will prefill AGAIN (they were already
             # computed once, then thrown away by recompute preemption) —
@@ -968,11 +1135,23 @@ class Scheduler:
         slot.idle = 0
         self.block_tables[i, :] = -1
         self.block_tables[i, :len(pages)] = pages
+        if self.statepool is not None:
+            slot.state_page = self._alloc_state_entry()
+            self.state_tables[i] = slot.state_page
         self.stats["swap_ins"] += 1
         self.stats["swapped_tokens"] += entry["length"]
         return SwapIn(slot=i, request_id=req.request_id,
                       pages=tuple(int(p) for p in pages),
-                      length=entry["length"])
+                      length=entry["length"], state_page=slot.state_page)
+
+    def _alloc_state_entry(self) -> int:
+        entry = self.statepool.alloc(evict_skip=self._plan_state_pins)
+        if entry is None:
+            raise RuntimeError(
+                "state pool exhausted allocating a live entry — "
+                "state_pages is undersized for batch_slots "
+                "(validate.py should have rejected this config)")
+        return entry
 
     # ------------------------------------------------------------------
     # lockstep / maintenance hooks (engine facade)
@@ -981,6 +1160,9 @@ class Scheduler:
         """Strict allocation for the hand-driven lockstep API: all pages
         or RuntimeError — lockstep never preempts."""
         self._ensure_pages(i, upto, preempt=False)
+        if self.statepool is not None and self.slots[i].state_page < 0:
+            self.slots[i].state_page = self._alloc_state_entry()
+            self.state_tables[i] = self.slots[i].state_page
 
     def reset_for_lockstep(self) -> None:
         """Drop every resident's scheduler state (the lockstep prefill
@@ -996,6 +1178,10 @@ class Scheduler:
             if self.swap is not None:
                 self.swap.clear()
             self.block_tables[:] = -1
+        if self.statepool is not None:
+            # entry contents are dead with the rest of the caches
+            self.statepool = StatePool(self.n_state_pages)
+            self.state_tables[:] = -1
         self._resume.clear()
         self._swap_meta.clear()
         for slot in self.slots:
@@ -1008,6 +1194,8 @@ class Scheduler:
             slot.cacheable = False
             slot.pages = []
             slot.idle = 0
+            slot.state_page = -1
+            slot.state_src = -1
 
     def reset_stats(self) -> None:
         """Zero the counters in place (the dict is shared with the runner
@@ -1025,6 +1213,8 @@ class Scheduler:
             self.prefix.reset_stats()
         if self.swap is not None:
             self.swap.reset_watermark()
+        if self.statepool is not None:
+            self.statepool.reset_stats()
 
     @property
     def lengths(self) -> np.ndarray:

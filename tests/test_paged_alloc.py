@@ -372,3 +372,154 @@ def test_prefix_cache_reset_stats():
     pc.reset_stats()
     assert (pc.hits, pc.misses, pc.registered, pc.evictions) == (0, 0, 0, 0)
     assert len(pc) == 1                           # the index itself persists
+
+
+# ---------------------------------------------------------------------------
+# StatePool (serve/statepool.py): pooled recurrent/cross state entries
+# ---------------------------------------------------------------------------
+
+from repro.serve import StatePool, validate_serve_features
+from repro.serve import resolve_state_pages, state_layer_positions
+
+
+def test_statepool_alloc_free_roundtrip():
+    sp = StatePool(3)
+    entries = [sp.alloc() for _ in range(3)]
+    assert entries == [0, 1, 2]                   # ascending hand-out
+    assert sp.alloc() is None                     # exhausted: all held
+    assert sp.n_held == 3 and sp.n_free == 0
+    for e in entries:
+        sp.free(e)
+    assert sp.n_free == 3 and sp.peak_held == 3
+    sp.check()
+    with pytest.raises(ValueError):
+        StatePool(0)
+
+
+def test_statepool_checkpoint_lifecycle():
+    sp = StatePool(3)
+    live = sp.alloc()
+    ck = sp.alloc()
+    assert sp.register("k1", ck)
+    assert sp.n_ckpt == 1 and sp.n_held == 1
+    assert sp.peek("k1") == ck                    # no stats
+    assert sp.hits == 0 and sp.misses == 0
+    assert sp.lookup("k1") == ck and sp.hits == 1
+    assert sp.lookup("nope") is None and sp.misses == 1
+    # first writer wins: a duplicate key stays held for the caller to free
+    dup = sp.alloc()
+    assert not sp.register("k1", dup)
+    assert dup in sp._held
+    sp.free(dup)
+    with pytest.raises(KeyError):
+        sp.register("k2", ck)                     # ckpt entries aren't held
+    sp.free(live)
+    sp.check()
+
+
+def test_statepool_evicts_lru_checkpoint_when_free_list_empty():
+    sp = StatePool(3)
+    for i in range(3):
+        sp.register(f"k{i}", sp.alloc())
+    sp.lookup("k0")                               # bump k0: k1 now oldest
+    e = sp.alloc()                                # must evict a ckpt
+    assert e is not None and sp.evictions == 1
+    assert sp.peek("k1") is None                  # LRU victim forgotten
+    assert sp.peek("k0") is not None and sp.peek("k2") is not None
+    sp.check()
+
+
+def test_statepool_evict_skip_pins_restore_sources():
+    sp = StatePool(2)
+    sp.register("k0", sp.alloc())
+    sp.register("k1", sp.alloc())
+    pin = {sp.peek("k0")}
+    e = sp.alloc(evict_skip=pin)                  # k1 evicted, k0 survives
+    assert e is not None and sp.peek("k0") is not None
+    assert sp.peek("k1") is None
+    # everything pinned or held -> alloc fails cleanly
+    assert sp.alloc(evict_skip=pin | {sp.peek("k0")}) is None
+    sp.check()
+
+
+def test_statepool_reset_stats_keeps_occupancy():
+    sp = StatePool(2)
+    e = sp.alloc()
+    sp.register("k", e)
+    sp.lookup("k")
+    sp.lookup("gone")
+    sp.reset_stats()
+    assert sp.hits == sp.misses == sp.registered == sp.evictions == 0
+    assert sp.peek("k") is not None               # occupancy untouched
+    assert sp.peak_held == sp.n_held
+    sp.check()
+
+
+@given(st.integers(1, 6), st.lists(st.integers(0, 3 * 7 - 1),
+                                   max_size=60), st.integers(0, 999))
+@settings(max_examples=60, deadline=None)
+def test_statepool_invariants_property(n_entries, ops, seed):
+    """Random alloc/free/register/lookup/evict interleavings keep the
+    held+ckpt+free partition exact."""
+    rng = np.random.default_rng(seed)
+    sp = StatePool(n_entries)
+    held: list = []
+    nkey = 0
+    for op in ops:
+        kind = op % 3
+        if kind == 0:
+            e = sp.alloc(evict_skip=frozenset())
+            if e is not None:
+                held.append(e)
+        elif kind == 1 and held:
+            e = held.pop(int(rng.integers(len(held))))
+            if rng.integers(2):
+                if not sp.register(f"key{nkey}", e):
+                    sp.free(e)
+                nkey += 1
+            else:
+                sp.free(e)
+        elif kind == 2:
+            sp.lookup(f"key{int(rng.integers(nkey + 1))}")
+        sp.check()
+    assert sp.n_held == len(held)
+
+
+# ---------------------------------------------------------------------------
+# serve/validate.py: model-pattern x feature coherence
+# ---------------------------------------------------------------------------
+
+class _SCfg:
+    def __init__(self, **kw):
+        self.paged = kw.get("paged", True)
+        self.prefix_cache = kw.get("prefix_cache", False)
+        self.batch_slots = kw.get("batch_slots", 2)
+        self.state_pages = kw.get("state_pages", None)
+        self.page_topn = kw.get("page_topn", None)
+
+
+def test_state_layer_positions():
+    assert state_layer_positions("AAAA") == ()
+    assert state_layer_positions("AMAM") == (1, 3)
+    assert state_layer_positions("ACM") == (1, 2)
+
+
+def test_resolve_state_pages_auto_sizing():
+    assert resolve_state_pages(_SCfg(batch_slots=3)) == 3
+    assert resolve_state_pages(_SCfg(batch_slots=3, prefix_cache=True)) == 12
+    assert resolve_state_pages(_SCfg(state_pages=7, prefix_cache=True)) == 7
+
+
+def test_validate_serve_features_rules():
+    validate_serve_features("AM", _SCfg(state_pages=4))
+    with pytest.raises(ValueError, match="paged"):
+        validate_serve_features("AM", _SCfg(paged=False, state_pages=4))
+    with pytest.raises(ValueError, match="state_pages"):
+        validate_serve_features("AA", _SCfg(state_pages=4))
+    with pytest.raises(ValueError, match="state_pages"):
+        validate_serve_features("AM", _SCfg(state_pages=1))
+    with pytest.raises(ValueError, match="state_pages"):
+        validate_serve_features("AM", _SCfg(state_pages=3,
+                                            prefix_cache=True))
+    with pytest.raises(ValueError, match="page_topn"):
+        validate_serve_features("M", _SCfg(page_topn=2))

@@ -41,22 +41,15 @@ def test_bisect_integer_lattice_scores():
         np.testing.assert_array_equal(m_bis, m_sort)
 
 
-def test_set_threshold_method_shim_deprecated_but_functional():
-    """The old global setter must warn, yet still swap the default so
-    legacy drivers keep working until removal."""
+def test_set_threshold_method_shim_removed():
+    """The deprecated global setter (kept one cycle) is gone: the only
+    knob is the explicit `method=` argument, and None means "sort"."""
+    assert not hasattr(T, "set_threshold_method")
+    assert not hasattr(T, "_DEFAULT_THRESHOLD_METHOD")
     s = jnp.asarray([[3.0, 1.0, 2.0, 0.0]])
-    with pytest.warns(DeprecationWarning):
-        prev = T.set_threshold_method("bisect")
-    try:
-        assert prev == "sort"
-        assert T._DEFAULT_THRESHOLD_METHOD == "bisect"
-        m_default = np.asarray(T.topn_mask(s, 2))         # uses the new default
-        m_explicit = np.asarray(T.topn_mask(s, 2, method="bisect"))
-        np.testing.assert_array_equal(m_default, m_explicit)
-    finally:
-        with pytest.warns(DeprecationWarning):
-            T.set_threshold_method(prev)
-    assert T._DEFAULT_THRESHOLD_METHOD == "sort"
+    m_default = np.asarray(T.topn_mask(s, 2))
+    m_sort = np.asarray(T.topn_mask(s, 2, method="sort"))
+    np.testing.assert_array_equal(m_default, m_sort)
 
 
 def test_fsdp_policy_thresholds():

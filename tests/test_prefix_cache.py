@@ -280,24 +280,118 @@ def test_requests_with_extras_never_share_pages(params):
     assert len(eng.prefix) == before              # nothing published
 
 
-def test_prefix_cache_requires_paged_and_rejects_stateful_layers(params):
-    """SSM state and the cross cache are only zeroed for a fresh occupant
-    by a position-0 chunk; a prefix-matched admission starts past 0 and
-    would inherit the previous occupant's state — both layer kinds must
-    be rejected at construction."""
+def test_prefix_cache_requires_paged_but_accepts_stateful_layers(params):
+    """Pooled recurrent state (serve/statepool.py) checkpoints SSM and
+    cross-attention state at KV-page boundaries, so hybrid engines accept
+    prefix caching (and swap) like pure-transformer engines do; only the
+    paged=True requirement remains a construction error."""
     with pytest.raises(ValueError, match="paged"):
         Engine(CFG, params, _scfg(1, True, prefix_cache=True))
     hcfg = dataclasses.replace(CFG, name="pfxhyb", family="hybrid",
                                layer_pattern="AM", ssm_state=16,
                                ssm_head_dim=16, ssm_chunk=8)
     hparams = M.init_params(jax.random.PRNGKey(13), hcfg)
-    with pytest.raises(ValueError, match="SSM"):
-        Engine(hcfg, hparams, _scfg(1, True, **PFX))
+    eng = Engine(hcfg, hparams, _scfg(1, True, **PFX))
+    assert eng.statepool is not None and eng.state_tables is not None
     ccfg = dataclasses.replace(CFG, name="pfxvlm", layer_pattern="AC",
                                n_image_tokens=4, frontend_dim=8)
     cparams = M.init_params(jax.random.PRNGKey(14), ccfg)
-    with pytest.raises(ValueError, match="cross"):
-        Engine(ccfg, cparams, _scfg(1, True, **PFX))
+    eng = Engine(ccfg, cparams, _scfg(1, True, swap_pages=4, **PFX))
+    assert eng.statepool is not None
+    # the registry SSM model serves both features end-to-end too
+    from repro.configs import get_config
+    mcfg = get_config("mamba2-130m").reduced()
+    meng = Engine(mcfg, M.init_params(jax.random.PRNGKey(15), mcfg),
+                  _scfg(1, True, swap_pages=4, **PFX))
+    assert meng.statepool is not None
+    # state_pages coherence checks live in serve/validate.py
+    with pytest.raises(ValueError, match="state_pages"):
+        Engine(hcfg, hparams, _scfg(2, True, state_pages=1, **PFX))
+    with pytest.raises(ValueError, match="state_pages"):
+        Engine(CFG, params, _scfg(1, True, state_pages=4, **PFX))
+
+
+# ---------------------------------------------------------------------------
+# hybrid (pooled recurrent state) warm-prefix parity
+# ---------------------------------------------------------------------------
+
+HCFG = dataclasses.replace(CFG, name="pfxhyb", family="hybrid",
+                           layer_pattern="AM", ssm_state=16,
+                           ssm_head_dim=16, ssm_chunk=8)
+MCFG = dataclasses.replace(CFG, name="pfxssm", family="ssm",
+                           layer_pattern="M", n_heads=0, n_kv_heads=0,
+                           head_dim=0, ssm_state=16, ssm_head_dim=16,
+                           ssm_chunk=8)
+
+
+@pytest.mark.parametrize("cfg,seed", [(HCFG, 13), (MCFG, 16)],
+                         ids=["hybrid-AM", "pure-M"])
+@pytest.mark.parametrize("binary", [True, False])
+def test_hybrid_warm_prefix_bit_identical(cfg, seed, binary):
+    """A warm prefix hit on a stateful model restores the recurrent state
+    checkpoint for the matched page-aligned prefix: outputs are
+    bit-identical to a cold run while the matched prefill is skipped."""
+    hparams = M.init_params(jax.random.PRNGKey(seed), cfg)
+    rng = np.random.default_rng(seed)
+    # 3 full pages + tail: the auto-sized pool (4 entries for 1 slot)
+    # holds the live entry plus all 3 boundary checkpoints at once even
+    # when the idle batch plans every chunk in a single step
+    prompt = rng.integers(0, 64, 3 * PAGE + 1)
+    cold = _cold(cfg, hparams, prompt, 6, binary, **PFX)
+    eng = Engine(cfg, hparams, _scfg(1, binary, **PFX))
+    r1 = eng.submit(prompt, max_new_tokens=6)
+    first = eng.run()[r1]
+    np.testing.assert_array_equal(first, cold)
+    eng.reset_stats()
+    r2 = eng.submit(prompt, max_new_tokens=6)
+    warm = eng.run()[r2]
+    np.testing.assert_array_equal(warm, cold)
+    # the matched pages' prefill was skipped AND the state restored
+    assert eng.stats["cached_tokens"] == 3 * PAGE
+    assert eng.stats["prefill_tokens"] < len(prompt)
+    assert eng.stats["state_restores"] == 1
+    assert eng.statepool.hits >= 1
+    eng.statepool.check()
+
+
+def test_hybrid_warm_prefix_bit_identical_kernel_path():
+    """Same pin on the Pallas-kernel attention path of the hybrid."""
+    kcfg = dataclasses.replace(
+        HCFG, had=HADConfig(use_kernels=True, kernel_block_q=8,
+                            kernel_block_t=16))
+    hparams = M.init_params(jax.random.PRNGKey(13), kcfg)
+    rng = np.random.default_rng(21)
+    prompt = rng.integers(0, 64, 3 * PAGE + 2)
+    cold = _cold(kcfg, hparams, prompt, 5, True, **PFX)
+    eng = Engine(kcfg, hparams, _scfg(1, True, **PFX))
+    ra = eng.submit(prompt, max_new_tokens=5)
+    np.testing.assert_array_equal(eng.run()[ra], cold)
+    rb = eng.submit(prompt, max_new_tokens=5)
+    np.testing.assert_array_equal(eng.run()[rb], cold)
+    assert eng.stats["state_restores"] == 1
+
+
+def test_hybrid_state_checkpoints_commit_at_page_boundaries():
+    """Checkpoint entries are registered only for page-aligned chunk ends
+    of cacheable prompts, keyed by the page chain; lookup of a shorter
+    chain restores the deepest checkpointed boundary."""
+    hparams = M.init_params(jax.random.PRNGKey(13), HCFG)
+    rng = np.random.default_rng(33)
+    eng = Engine(HCFG, hparams, _scfg(1, True, **PFX))
+    prompt = rng.integers(0, 64, 3 * PAGE)        # 3 full pages, chunk=page
+    rid = eng.submit(prompt, max_new_tokens=3)
+    eng.run()
+    # one checkpoint per full page boundary
+    assert eng.stats["state_ckpts"] == 3
+    assert eng.statepool.n_ckpt == 3
+    assert eng.stats["state_ckpt_bytes"] > 0
+    eng.statepool.check()
+    # a request sharing only the first 2 pages restores that boundary
+    p2 = np.concatenate([prompt[:2 * PAGE], rng.integers(0, 64, 3)])
+    cold2 = _cold(HCFG, hparams, p2, 4, True, **PFX)
+    r2 = eng.submit(p2, max_new_tokens=4)
+    np.testing.assert_array_equal(eng.run()[r2], cold2)
+    assert eng.stats["state_restores"] == 1
 
 
 def test_finished_chain_evicts_leaf_before_root(params):

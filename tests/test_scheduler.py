@@ -354,3 +354,179 @@ def test_slot_page_lists_match_block_table_scan():
 def test_swap_requires_paged():
     with pytest.raises(ValueError, match="paged"):
         Scheduler(_scfg(swap_pages=4))
+
+
+# ---------------------------------------------------------------------------
+# priority tiers (latency never swapped while a batch-tier victim exists)
+# ---------------------------------------------------------------------------
+
+def _prefilled_prio(sched, i, n_tokens, max_new, priority):
+    rid = sched.submit(np.arange(n_tokens, dtype=np.int32),
+                       max_new_tokens=max_new, priority=priority)
+    sched._admit(i, sched._pop_next())
+    slot = sched.slots[i]
+    assert sched._ensure_pages(i, n_tokens)
+    slot.prefill_pos = slot.length = n_tokens
+    slot.generated = [1]
+    slot.next_token = 1
+    return rid
+
+
+def test_latency_tier_never_victimized_while_batch_victim_exists():
+    """With priority tiers on, victim selection restricts to batch-tier
+    residents first: a YOUNGER latency resident survives pressure that
+    the default "youngest" policy would have evicted it under."""
+    def pressured(priority_on):
+        sched = Scheduler(_scfg(slots=2, max_len=16, chunk=16, n_pages=4,
+                                priority=priority_on, **PAGED))
+        _prefilled_prio(sched, 0, 8, 8, "batch")     # id 0: older, batch
+        _prefilled_prio(sched, 1, 8, 8, "latency")   # id 1: younger
+        plan = sched.schedule()
+        ev = [r for r in plan.reclaims if r.kind != "lru-evict"]
+        assert ev, "pool pressure never forced an eviction"
+        return ev[0].slot
+    assert pressured(False) == 1        # youngest policy: latency evicted
+    assert pressured(True) == 0         # tiered: batch resident pays
+
+
+def test_priority_tier_falls_back_when_all_latency():
+    """All-latency residency: the tier restriction is vacuous and the
+    configured victim policy applies within the tier."""
+    sched = Scheduler(_scfg(slots=2, max_len=16, chunk=16, n_pages=4,
+                            priority=True, **PAGED))
+    _prefilled_prio(sched, 0, 8, 8, "latency")
+    _prefilled_prio(sched, 1, 8, 8, "latency")
+    plan = sched.schedule()
+    ev = [r for r in plan.reclaims if r.kind != "lru-evict"]
+    assert ev and ev[0].slot == 1       # youngest within the tier
+
+
+def test_submit_rejects_unknown_priority():
+    sched = Scheduler(_scfg())
+    with pytest.raises(ValueError, match="priority"):
+        sched.submit(np.arange(4, dtype=np.int32), max_new_tokens=1,
+                     priority="urgent")
+    assert sched.submit(np.arange(4, dtype=np.int32), max_new_tokens=1,
+                        priority="latency") == 0
+
+
+# ---------------------------------------------------------------------------
+# pooled state accounting (state_layers > 0; still fully device-free)
+# ---------------------------------------------------------------------------
+
+def test_admission_allocates_state_entry_and_finish_frees_it():
+    sched = Scheduler(_scfg(slots=2, n_pages=8, **PAGED), state_layers=1)
+    assert sched.statepool is not None
+    sched.submit(np.arange(6, dtype=np.int32), max_new_tokens=2)
+    plan = sched.schedule()
+    adm = plan.admissions[0]
+    assert adm.state_page >= 0 and adm.state_restore == -1
+    assert plan.state_tables is not None
+    assert plan.state_tables[adm.slot] == adm.state_page
+    sched.commit(plan, _fake_results(plan))
+    _drive(sched)
+    assert sched.statepool.n_held == 0           # freed with the slot
+    assert sched.state_tables[adm.slot] == -1
+    sched.statepool.check()
+
+
+def test_stateless_scheduler_has_no_state_tables():
+    sched = Scheduler(_scfg(slots=2, n_pages=8, **PAGED))
+    sched.submit(np.arange(6, dtype=np.int32), max_new_tokens=2)
+    plan = sched.schedule()
+    assert sched.statepool is None
+    assert plan.state_tables is None
+    assert plan.admissions[0].state_page == -1
+
+
+def test_swap_out_reclaim_carries_state_page():
+    """The swap-out Reclaim names the victim's state entry so the runner
+    gathers it with the KV pages; the entry is freed for the next
+    occupant, and the later SwapIn carries a fresh entry to scatter the
+    stored state back into."""
+    sched = Scheduler(_scfg(slots=2, max_len=24, n_pages=6, swap_pages=4,
+                            **PAGED), state_layers=1)
+    _prefilled(sched, 0, 7, 12)
+    _prefilled(sched, 1, 7, 8)
+    entry1 = sched.slots[1].state_page
+    assert entry1 >= 0
+    rc = None
+    for _ in range(12):
+        plan, _ = _tick(sched)
+        rcs = [r for r in plan.reclaims if r.kind == "swap-out"]
+        if rcs:
+            rc = rcs[0]
+            break
+    assert rc is not None, "pool pressure never forced a swap"
+    assert rc.state_page == entry1
+    assert sched.slots[rc.slot].state_page == -1   # freed after the gather
+    swap_in = None
+    for _ in range(30):
+        if not sched.queue and all(s.request is None for s in sched.slots):
+            break
+        plan, _ = _tick(sched)
+        if plan.swap_ins:
+            swap_in = plan.swap_ins[0]
+    assert swap_in is not None and swap_in.state_page >= 0
+    assert sched.statepool.n_held == 0
+    sched.statepool.check()
+
+
+def test_state_checkpoints_planned_at_page_aligned_chunk_ends():
+    """With prefix caching, a cacheable prompt's prefill chunks that end
+    on a page boundary carry a checkpoint entry; unaligned tails do not.
+    Registered checkpoints survive the request."""
+    sched = Scheduler(_scfg(slots=1, chunk=4, n_pages=8,
+                            prefix_cache=True, **PAGED), state_layers=1)
+    sched.submit(np.arange(10, dtype=np.int32), max_new_tokens=1)
+    plans, _ = _drive(sched)
+    ckpts = [(ch.lo, ch.hi, ch.state_ckpt)
+             for plan in plans for ch in plan.prefill if ch.state_ckpt >= 0]
+    assert [hi for _, hi, _ in ckpts] == [4, 8]  # page==chunk==4; 8->10 tail
+    assert sched.stats["state_ckpts"] == 2
+    assert sched.statepool.n_ckpt == 2
+    assert sched.statepool.n_held == 0
+    sched.statepool.check()
+
+
+def test_warm_admission_restores_state_checkpoint():
+    """A prefix hit restores the checkpoint of the deepest matched
+    page-aligned boundary: the PlannedAdmission names the source entry
+    and the restore counter ticks."""
+    sched = Scheduler(_scfg(slots=1, chunk=4, n_pages=8,
+                            prefix_cache=True, **PAGED), state_layers=1)
+    sched.submit(np.arange(8, dtype=np.int32), max_new_tokens=1)
+    _drive(sched)
+    sched.submit(np.arange(8, dtype=np.int32), max_new_tokens=1)
+    plan = sched.schedule()
+    adm = plan.admissions[0]
+    assert adm.cached_tokens > 0
+    assert adm.state_restore >= 0
+    assert sched.stats["state_restores"] == 1
+    assert sched.statepool.hits >= 1
+    sched.commit(plan, _fake_results(plan))
+    _drive(sched)
+    sched.statepool.check()
+
+
+def test_state_pool_invariant_under_preemption_sweep():
+    """Held/checkpoint/free partition stays exact and state_tables mirrors
+    slot ownership through a preemption+swap-heavy workload."""
+    sched = Scheduler(_scfg(slots=3, max_len=48, n_pages=6, swap_pages=4,
+                            page_size=8, paged=True), state_layers=2)
+    rng = np.random.default_rng(3)
+    for n, g in ((13, 12), (9, 12), (11, 12)):
+        sched.submit(rng.integers(0, 64, n), max_new_tokens=g)
+    for _ in range(200):
+        if not sched.queue and all(s.request is None for s in sched.slots):
+            break
+        _tick(sched)
+        sched.statepool.check()
+        for i, slot in enumerate(sched.slots):
+            if slot.request is None:
+                assert sched.state_tables[i] == -1
+            else:
+                assert slot.state_page >= 0
+                assert sched.state_tables[i] == slot.state_page
+    assert sched.stats["preemptions"] > 0        # the sweep saw pressure
+    assert sched.statepool.n_held == 0

@@ -578,16 +578,127 @@ def test_swap_keeps_one_prefill_one_decode_trace(params):
     assert eng._step._cache_size() == 2, eng._step._cache_size()
 
 
-def test_swap_rejected_for_stateful_layers_and_dense_cache(params):
-    """SSM / cross-attention per-slot state is dense (not paged) and dies
-    with the slot's next occupant — swap must be rejected for those
-    models, and for non-paged caches where there are no pages to swap."""
+def test_swap_rejected_for_dense_cache_only(params):
+    """Non-paged caches have no pages to swap — still a construction
+    error. Stateful (SSM / cross-attention) models are no longer
+    rejected: their per-slot state lives in the pooled state allocation
+    and swaps atomically with the KV pages."""
     with pytest.raises(ValueError, match="paged"):
         Engine(CFG, params, _scfg(1, True, swap_pages=4))
     hparams = M.init_params(jax.random.PRNGKey(13), HCFG)
-    with pytest.raises(ValueError, match="SSM"):
-        Engine(HCFG, hparams, _scfg(1, True, paged=True, page_size=8,
-                                    swap_pages=4))
+    eng = Engine(HCFG, hparams, _scfg(1, True, paged=True, page_size=8,
+                                      swap_pages=4))
+    assert eng.statepool is not None
+
+
+@pytest.mark.parametrize("binary", [True, False])
+def test_hybrid_swap_bit_identical_with_zero_reprefill(binary):
+    """Acceptance pin: an overcommitted hybrid (attention+Mamba) engine
+    with swap space serves every request bit-identically to the
+    unpreempted baseline — the recurrent state entry is gathered to host
+    and restored verbatim alongside the KV pages."""
+    hparams = M.init_params(jax.random.PRNGKey(13), HCFG)
+    rng = np.random.default_rng(41)
+    prompts = [rng.integers(0, 64, n) for n in (13, 5, 9)]
+    dense = Engine(HCFG, hparams, _scfg(3, binary))
+    ids_d = [dense.submit(p, max_new_tokens=5) for p in prompts]
+    want = dense.run()
+    eng = Engine(HCFG, hparams, _scfg(3, binary, paged=True, page_size=8,
+                                      n_pages=3, swap_pages=8))
+    ids = [eng.submit(p, max_new_tokens=5) for p in prompts]
+    got = eng.run()
+    assert eng.stats["swap_outs"] > 0, "pool never forced a swap: test void"
+    assert eng.stats["replayed_tokens"] == 0     # zero re-prefill
+    for a, b in zip(ids_d, ids):
+        np.testing.assert_array_equal(got[b], want[a])
+    assert eng.allocator.in_use == 0
+    assert eng.swap.in_use == 0
+    assert eng.statepool.n_held == 0             # all state entries returned
+    eng.statepool.check()
+
+
+def test_hybrid_swap_roundtrip_kernel_path():
+    kcfg = dataclasses.replace(
+        HCFG, had=HADConfig(use_kernels=True, kernel_block_q=8,
+                            kernel_block_t=16))
+    kparams = M.init_params(jax.random.PRNGKey(13), kcfg)
+    rng = np.random.default_rng(42)
+    prompts = [rng.integers(0, 64, n) for n in (13, 5, 9)]
+    eng = Engine(kcfg, kparams, _scfg(3, True, paged=True, page_size=8,
+                                      n_pages=3, swap_pages=8))
+    ids = [eng.submit(p, max_new_tokens=5) for p in prompts]
+    got = eng.run()
+    assert eng.stats["swap_outs"] > 0
+    assert eng.stats["replayed_tokens"] == 0
+    want = _sequential(kcfg, kparams, prompts, 5, True)
+    for rid, w in zip(ids, want):
+        np.testing.assert_array_equal(got[rid], w)
+
+
+def test_hybrid_recompute_preemption_matches_and_state_is_fresh():
+    """Swap off: hybrid preemption falls back to recompute replay. The
+    re-prefill re-derives the recurrent state from scratch, so outputs
+    still match the unpreempted baseline — pinning that a re-filled slot
+    never inherits its previous occupant's h/conv state under chunked
+    prefill x preemption."""
+    hparams = M.init_params(jax.random.PRNGKey(13), HCFG)
+    rng = np.random.default_rng(43)
+    prompts = [rng.integers(0, 64, n) for n in (13, 9, 11)]
+    dense = Engine(HCFG, hparams, _scfg(3, True))
+    ids_d = [dense.submit(p, max_new_tokens=12) for p in prompts]
+    want = dense.run()
+    eng = Engine(HCFG, hparams, _scfg(3, True, paged=True, page_size=8,
+                                      n_pages=4))
+    ids = [eng.submit(p, max_new_tokens=12) for p in prompts]
+    got = eng.run()
+    assert eng.stats["preemptions"] >= 2, eng.stats
+    assert eng.stats["replayed_tokens"] > 0
+    for a, b in zip(ids_d, ids):
+        np.testing.assert_array_equal(got[b], want[a])
+
+
+def test_cross_state_pooled_swap_and_refill_no_leak():
+    """Cross-attention (AC) engine under pool pressure with swap: the
+    pooled cross-cache entry swaps atomically with the KV pages, and an
+    image-free request re-filling a slot that previously held an image
+    request attends a ZERO cross cache, not the old occupant's image
+    K/V — under chunked prefill x preemption x re-fill."""
+    cfg = dataclasses.replace(CFG, name="vlm3", n_layers=2,
+                              layer_pattern="AC", n_image_tokens=4,
+                              frontend_dim=8)
+    cparams = M.init_params(jax.random.PRNGKey(14), cfg)
+    rng = np.random.default_rng(45)
+    img = rng.normal(size=(1, 4, 8)).astype(np.float32)
+    reqs = [(rng.integers(0, 64, 13), {"image_embeds": img}),
+            (rng.integers(0, 64, 5), None),
+            (rng.integers(0, 64, 9), {"image_embeds": img})]
+    eng = Engine(cfg, cparams, _scfg(2, True, paged=True, page_size=8,
+                                     n_pages=3, swap_pages=8))
+    ids = [eng.submit(p, max_new_tokens=5, extra=e) for p, e in reqs]
+    got = eng.run()
+    assert eng.stats["preemptions"] > 0, eng.stats
+    for rid, (p, e) in zip(ids, reqs):
+        ref = Engine(cfg, cparams, _scfg(1, True))
+        sid = ref.submit(p, max_new_tokens=5, extra=e)
+        np.testing.assert_array_equal(got[rid], ref.run()[sid])
+    assert eng.statepool.n_held == 0
+    eng.statepool.check()
+
+
+def test_hybrid_swap_keeps_one_prefill_one_decode_trace():
+    """The pooled-state step stays on the shared traces: a swap-heavy
+    hybrid run keeps exactly one prefill-chunk trace plus one decode
+    trace (state gathers/scatters are eager, outside the jit)."""
+    hparams = M.init_params(jax.random.PRNGKey(13), HCFG)
+    eng = Engine(HCFG, hparams, _scfg(3, True, paged=True, page_size=8,
+                                      n_pages=3, swap_pages=8,
+                                      prefix_cache=True))
+    rng = np.random.default_rng(44)
+    for n in (13, 5, 9):
+        eng.submit(rng.integers(0, 64, n), max_new_tokens=5)
+    eng.run()
+    assert eng.stats["swap_outs"] > 0
+    assert eng._step._cache_size() == 2, eng._step._cache_size()
 
 
 # ---------------------------------------------------------------------------
