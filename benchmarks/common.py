@@ -174,3 +174,48 @@ def distill_variant(cfg: ModelConfig, teacher: dict, task: Iterator, *,
 
 def csv_line(name: str, us: float, derived) -> str:
     return f"{name},{us:.1f},{derived}"
+
+
+# ---------------------------------------------------------------------------
+# serving latency helpers (shared by serve_bench cases; consume the
+# telemetry layer's RequestMetrics instead of hand-rolled perf_counter
+# bookkeeping per case)
+# ---------------------------------------------------------------------------
+
+def percentiles_ms(xs, pcts=(50, 95, 99)) -> tuple[float, ...]:
+    """p50/p95/p99 (by default) of second-valued latency samples, in ms —
+    the one percentile derivation every serving CSV row goes through."""
+    if not len(xs):
+        return tuple(0.0 for _ in pcts)
+    ms = np.asarray(xs, np.float64) * 1e3
+    return tuple(float(np.percentile(ms, p)) for p in pcts)
+
+
+def latency_samples(metrics) -> dict:
+    """Flatten finished RequestMetrics into the sample lists the serving
+    benchmarks report: TTFT (submit -> first token) and queue time
+    (submit -> first admission) one per request in request-id order, ITL
+    per generated token after the first."""
+    ttft, itl, queue = [], [], []
+    for m in sorted(metrics, key=lambda m: m.request_id):
+        if m.ttft is not None:
+            ttft.append(m.ttft)
+        if m.queue_time is not None:
+            queue.append(m.queue_time)
+        itl.extend(m.itl)
+    return {"ttft": ttft, "itl": itl, "queue": queue}
+
+
+def preemption_attribution(metrics) -> dict:
+    """Aggregate per-request preemption attribution: how many requests
+    were victimized at all, and the total reclaim count by kind."""
+    by_kind: dict[str, int] = {}
+    victims = 0
+    for m in metrics:
+        evicted = 0
+        for kind, n in m.preemptions.items():
+            by_kind[kind] = by_kind.get(kind, 0) + n
+            if kind != "lru-evict":
+                evicted += n
+        victims += bool(evicted)
+    return {"victims": victims, "by_kind": by_kind}

@@ -11,8 +11,18 @@ CPU numbers are correctness-grade (interpret-mode kernel / jnp reference
 path), but the relative trends — slot scaling, ragged admission cost, and
 the chunk-budget/ITL trade — are real on any backend.
 
+Every engine runs with a telemetry hub attached: TTFT/ITL/queue-time
+samples and preemption attribution are derived from the drained
+per-request ``RequestMetrics`` (``Engine.pop_finished_metrics()``), each
+case ends with the ``Engine.check()`` invariant probe, ``--trace-file``
+dumps the step flight recorder as schema-validated JSONL after every
+driven workload, and ``--metrics`` renders the Prometheus-text registry.
+
 CSV contract: throughput rows keep ``serve_<case>,us_per_token,tok_per_s``;
-latency rows are ``serve_<case>_{ttft|itl}_p{50|95|99},<ms>,ms`` and one
+latency rows are ``serve_<case>_{ttft|itl|queue}_p{50|95|99},<ms>,ms``,
+preemption-attribution rows are ``serve_<case>_preempt,<victims>,...``
+(per-kind reclaim totals, asserted equal to the scheduler's aggregate
+``preemptions`` counter), and one
 ``serve_<case>_stats,<prefill_chunks>,<decode_steps>`` row per timed case
 (the engine's counters are reset after warm-up, so a jump in chunk or
 step counts flags a scheduling/trace regression). With ``--paged`` every
@@ -61,14 +71,19 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import causal_cfg
+from benchmarks.common import (causal_cfg, latency_samples, percentiles_ms,
+                               preemption_attribution)
 from repro.models import model as M
-from repro.serve import Engine, ServeConfig
+from repro.serve import Engine, ServeConfig, Telemetry
 
 PROMPT_MEAN = 96
 GEN = 16
 MAX_LEN = 256
 CHUNK = 64       # step() prefill token budget
+
+# set by __main__: the trace file handed to every engine's telemetry hub
+# (--trace-file) and the last hub built (--metrics renders its registry)
+TELEMETRY = {"trace_file": None, "last": None}
 
 
 def _prompts(n_req: int, skew: str, rng) -> list[np.ndarray]:
@@ -82,67 +97,52 @@ def _prompts(n_req: int, skew: str, rng) -> list[np.ndarray]:
 
 def _drive(eng: Engine, prompts: list[np.ndarray], *, stagger: int = 0
            ) -> dict:
-    """Run the workload, recording per-request token arrival times.
+    """Run the workload; latency samples come from the engine's telemetry
+    layer (per-request RequestMetrics) instead of ad-hoc bookkeeping.
 
     stagger > 0 trickles one request in every `stagger` scheduler steps
     after the first slot-filling wave (staggered arrivals — the TTFT/ITL
     measurement regime); 0 submits everything up front (throughput).
-    Returns {"wall": s, "ttft": [s], "itl": [s], "gen": n_tokens}.
+    Returns {"wall": s, "ttft": [s], "itl": [s], "queue": [s],
+    "gen": n_tokens, "metrics": [RequestMetrics]}.
     """
-    submit_t: dict[int, float] = {}
-    first_t: dict[int, float] = {}
-    last_t: dict[int, float] = {}
-    counts: dict[int, int] = {}
-    itl: list[float] = []
-
-    def _submit(p) -> None:
-        rid = eng.submit(p, max_new_tokens=GEN)
-        submit_t[rid] = time.perf_counter()
-        counts[rid] = 0
-
-    def _record(rid: int, n_tokens: int, now: float) -> None:
-        for k in range(counts[rid], n_tokens):
-            if k == 0:
-                first_t[rid] = now
-            else:
-                itl.append(now - last_t[rid])
-            last_t[rid] = now
-        counts[rid] = n_tokens
-
     t0 = time.perf_counter()
     n_first = len(prompts) if not stagger else min(eng.scfg.batch_slots,
                                                    len(prompts))
     for p in prompts[:n_first]:
-        _submit(p)
+        eng.submit(p, max_new_tokens=GEN)
     nxt, steps = n_first, 0
+    metrics = []
     while (eng.queue or any(s.request is not None for s in eng.slots)
            or nxt < len(prompts)):
-        finished = eng.step()
-        now = time.perf_counter()
+        eng.step()
+        metrics += eng.pop_finished_metrics()
         steps += 1
-        for slot in eng.slots:
-            if slot.request is not None:
-                _record(slot.request.request_id, len(slot.generated), now)
-        for fr in finished:
-            _record(fr.request_id, len(fr.tokens), now)
         if stagger and nxt < len(prompts) and steps % stagger == 0:
-            _submit(prompts[nxt])
+            eng.submit(prompts[nxt], max_new_tokens=GEN)
             nxt += 1
     wall = time.perf_counter() - t0
-    ttft = [first_t[rid] - submit_t[rid] for rid in sorted(first_t)]
+    metrics += eng.pop_finished_metrics()
     if stagger:
         # the latency regime exists to measure admissions into a BUSY
         # batch; if nothing trickled in mid-flight the numbers are lies
         assert nxt > n_first, "staggered regime never fired: need " \
                               "more requests than slots"
-    return {"wall": wall, "ttft": ttft, "itl": itl,
-            "gen": sum(counts.values())}
+    eng.check()          # pool/slot invariants must hold after every case
+    if eng.telemetry is not None and eng.telemetry.trace_file:
+        eng.dump_trace(requests=metrics)
+    lat = latency_samples(metrics)
+    return {"wall": wall, "ttft": lat["ttft"], "itl": lat["itl"],
+            "queue": lat["queue"],
+            "gen": sum(m.n_generated for m in metrics), "metrics": metrics}
 
 
 def _engine(params, cfg, *, slots: int, binary: bool, paged: bool = False,
             page_size: int = 16, n_pages: int | None = None,
             prefix_cache: bool = False, swap_pages: int = 0,
             page_topn: int | None = None) -> Engine:
+    tel = Telemetry(trace_file=TELEMETRY["trace_file"])
+    TELEMETRY["last"] = tel
     return Engine(cfg, params, ServeConfig(max_len=MAX_LEN, batch_slots=slots,
                                            binary=binary,
                                            prefill_chunk=CHUNK, paged=paged,
@@ -150,12 +150,8 @@ def _engine(params, cfg, *, slots: int, binary: bool, paged: bool = False,
                                            n_pages=n_pages,
                                            prefix_cache=prefix_cache,
                                            swap_pages=swap_pages,
-                                           page_topn=page_topn))
-
-
-def _pcts(xs: list[float]) -> tuple[float, float, float]:
-    ms = np.asarray(xs, np.float64) * 1e3
-    return tuple(float(np.percentile(ms, p)) for p in (50, 95, 99))
+                                           page_topn=page_topn),
+                  telemetry=tel)
 
 
 def _kvpool_row(name: str, eng: Engine) -> str:
@@ -227,14 +223,17 @@ def run(print_fn=print, slot_counts=(1, 2, 4), n_req: int = 4,
         us, tps = r["wall"] / r["gen"] * 1e6, r["gen"] / r["wall"]
         name = f"{prefix}_{tag}_s{slots}_mixed"
         csv.append(f"{name},{us:.1f},{tps:.2f}")
-        t50, t95, t99 = _pcts(r["ttft"])
-        i50, i95, i99 = _pcts(r["itl"]) if r["itl"] else (0.0, 0.0, 0.0)
+        t50, t95, t99 = percentiles_ms(r["ttft"])
+        i50, i95, i99 = percentiles_ms(r["itl"])
+        q50, q95, q99 = percentiles_ms(r["queue"])
         print_fn(f"  {tag:8s} slots={slots} mixed+staggered: "
                  f"{tps:7.1f} tok/s | TTFT p50/p95/p99 "
                  f"{t50:.1f}/{t95:.1f}/{t99:.1f} ms | ITL "
-                 f"{i50:.1f}/{i95:.1f}/{i99:.1f} ms")
+                 f"{i50:.1f}/{i95:.1f}/{i99:.1f} ms | queue "
+                 f"{q50:.1f}/{q95:.1f}/{q99:.1f} ms")
         for metric, (p50, p95, p99) in (("ttft", (t50, t95, t99)),
-                                        ("itl", (i50, i95, i99))):
+                                        ("itl", (i50, i95, i99)),
+                                        ("queue", (q50, q95, q99))):
             csv.append(f"{name}_{metric}_p50,{p50:.2f},ms")
             csv.append(f"{name}_{metric}_p95,{p95:.2f},ms")
             csv.append(f"{name}_{metric}_p99,{p99:.2f},ms")
@@ -300,7 +299,7 @@ def _hybrid_case(print_fn, *, slots: int, n_req: int, stagger: int,
         r = _drive(eng, prompts, stagger=stagger)
         st = eng.stats
         name = f"serve_hybrid_{tag}_s{slots}"
-        t50, _, _ = _pcts(r["ttft"])
+        t50, _, _ = percentiles_ms(r["ttft"])
         csv.append(f"{name}_ttft_p50,{t50:.2f},ms")
         csv.append(f"{name}_prefill_tokens,{st['prefill_tokens']},tok")
         csv.append(_kvpool_row(name, eng))
@@ -387,6 +386,7 @@ def _page_sparse_case(print_fn, params, cfg, *, slots: int, n_req: int,
         while eng.queue or any(s.request is not None for s in eng.slots):
             for fr in eng.step():
                 gen[fr.request_id] = list(fr.tokens)
+        eng.check()
         st = eng.stats
         toks[tag] = gen
         traffic[tag] = (st["decode_pages_touched"], st["decode_hbm_bytes"])
@@ -438,8 +438,8 @@ def _swap_case(print_fn, params, cfg, *, slots: int, n_req: int,
         r = _drive(eng, prompts, stagger=stagger)
         st = eng.stats
         name = f"serve_swapout_{tag}_s{slots}"
-        t50, t95, t99 = _pcts(r["ttft"])
-        i50, i95, i99 = _pcts(r["itl"]) if r["itl"] else (0.0, 0.0, 0.0)
+        t50, t95, t99 = percentiles_ms(r["ttft"])
+        i50, i95, i99 = percentiles_ms(r["itl"])
         for metric, (p50, p95, p99) in (("ttft", (t50, t95, t99)),
                                         ("itl", (i50, i95, i99))):
             csv.append(f"{name}_{metric}_p50,{p50:.2f},ms")
@@ -448,6 +448,15 @@ def _swap_case(print_fn, params, cfg, *, slots: int, n_req: int,
         csv.append(f"{name}_tokens,{st['swapped_tokens']},"
                    f"{st['replayed_tokens']}")
         csv.append(_kvpool_row(name, eng))
+        # per-request attribution (RequestMetrics) must re-derive the
+        # scheduler's aggregate preemption counter exactly
+        pa = preemption_attribution(r["metrics"])
+        evictions = (pa["by_kind"].get("swap-out", 0)
+                     + pa["by_kind"].get("recompute-preempt", 0))
+        assert evictions == st["preemptions"], (pa, dict(st))
+        csv.append(f"{name}_preempt,{pa['victims']},"
+                   f"{pa['by_kind'].get('swap-out', 0)},"
+                   f"{pa['by_kind'].get('recompute-preempt', 0)}")
         replayed[tag] = st["replayed_tokens"]
         if swap:
             assert st["swap_outs"] > 0, (
@@ -501,7 +510,7 @@ def _prefix_case(print_fn, params, cfg, *, slots: int, n_req: int,
         eng.reset_stats()
         r = _drive(eng, prompts, stagger=stagger)
         st = eng.stats
-        t50, t95, t99 = _pcts(r["ttft"])
+        t50, t95, t99 = percentiles_ms(r["ttft"])
         name = f"serve_prefix_{tag}_s{slots}"
         csv.append(f"{name}_ttft_p50,{t50:.2f},ms")
         csv.append(f"{name}_ttft_p95,{t95:.2f},ms")
@@ -558,9 +567,15 @@ def _overcommit_case(print_fn, params, cfg, *, slots: int, n_req: int,
              f"({st['preemptions']} preemptions, {tps:.1f} tok/s)")
     assert st["max_residents"] > dense_residents, (
         "overcommit case failed to exceed dense-layout capacity")
+    pa = preemption_attribution(r["metrics"])
+    assert (pa["by_kind"].get("swap-out", 0)
+            + pa["by_kind"].get("recompute-preempt", 0)
+            == st["preemptions"]), (pa, dict(st))
     name = f"serve_paged_overcommit_s{slots}"
     return [f"{name},{r['wall'] / r['gen'] * 1e6:.1f},{tps:.2f}",
-            _kvpool_row(name, eng)]
+            _kvpool_row(name, eng),
+            f"{name}_preempt,{pa['victims']},"
+            f"{pa['by_kind'].get('recompute-preempt', 0)}"]
 
 
 if __name__ == "__main__":
@@ -589,6 +604,13 @@ if __name__ == "__main__":
                          "plus the frontier (implies --paged; adds decode "
                          "pages-touched / est-HBM-bytes + quality CSV "
                          "columns)")
+    ap.add_argument("--trace-file", default=None,
+                    help="dump the step flight recorder + per-request "
+                         "records as JSONL here after every driven "
+                         "workload (schema: repro.serve.telemetry)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the Prometheus-text metrics render of the "
+                         "last case's registry after the run")
     ap.add_argument("--hybrid", action="store_true",
                     help="run the shared-system-prompt case on a reduced "
                          "mamba2-130m served through the pooled recurrent "
@@ -599,6 +621,7 @@ if __name__ == "__main__":
     args = ap.parse_args()
     paged = (args.paged or args.prefix_cache or bool(args.swap_pages)
              or bool(args.page_topn))
+    TELEMETRY["trace_file"] = args.trace_file
     if args.smoke:
         lines = run(slot_counts=(2,), n_req=2, paged=paged,
                     page_size=args.page_size,
@@ -607,10 +630,12 @@ if __name__ == "__main__":
                     page_topn=args.page_topn or None,
                     hybrid=args.hybrid)
         assert any("_ttft_p99," in l for l in lines), lines
+        assert any("_queue_p99," in l for l in lines), lines
         assert any("_stats," in l for l in lines), lines
         if paged:
             assert any("_kvpool," in l for l in lines), lines
             assert any("overcommit" in l for l in lines), lines
+            assert any("_preempt," in l for l in lines), lines
         if args.prefix_cache:
             assert any("serve_prefix_on_cached," in l for l in lines), lines
             assert any(l.startswith("serve_prefix_off_") and "_ttft_p50," in l
@@ -640,8 +665,25 @@ if __name__ == "__main__":
             if args.swap_pages:
                 assert any(l.startswith("serve_hybrid_swap_")
                            for l in lines), lines
+        if args.trace_file:
+            from repro.serve import load_trace
+            events = load_trace(args.trace_file)  # validates every line
+            kinds = {e["kind"] for e in events}
+            assert {"meta", "step", "request", "check"} <= kinds, kinds
+            steps = [e for e in events if e["kind"] == "step"]
+            assert all({"schedule", "execute", "commit"}
+                       <= set(e["timings"]) for e in steps), "timings missing"
+            assert all(e["ok"] for e in events if e["kind"] == "check")
+            print(f"trace ok: {len(events)} events")
+        if args.metrics:
+            text = TELEMETRY["last"].registry.render()
+            assert "repro_serve_decode_steps" in text, text[:400]
+            assert '_bucket{le="' in text, text[:400]
+            print("metrics render ok")
         print("smoke ok")
     else:
         run(paged=paged, page_size=args.page_size,
             prefix_cache=args.prefix_cache, swap_pages=args.swap_pages,
             page_topn=args.page_topn or None, hybrid=args.hybrid)
+        if args.metrics:
+            print(TELEMETRY["last"].registry.render())

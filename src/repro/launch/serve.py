@@ -15,7 +15,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import model as M
-from repro.serve import Engine, SamplingParams, ServeConfig
+from repro.serve import Engine, SamplingParams, ServeConfig, Telemetry
 
 
 def main():
@@ -71,6 +71,17 @@ def main():
                     help="which resident pays for pool pressure: the "
                          "youngest (FCFS progress) or the slot idle the "
                          "longest since its last emitted token (fairness)")
+    ap.add_argument("--trace-file", default=None,
+                    help="dump the step flight recorder + per-request "
+                         "lifecycle records as JSONL here at exit "
+                         "(schema: repro.serve.telemetry)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the Prometheus-text metrics render and the "
+                         "queue/TTFT/ITL percentile summary at exit")
+    ap.add_argument("--fence", action="store_true",
+                    help="block on the cache pools between execute and "
+                         "commit so per-step execute timings measure "
+                         "device time, not dispatch time (with telemetry)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -88,6 +99,8 @@ def main():
     binary = not args.baseline and cfg.had.enabled and cfg.has_attention
     paged = (args.paged or args.prefix_cache or bool(args.swap_pages)
              or bool(args.page_topn))
+    telemetry = (Telemetry(trace_file=args.trace_file, fence=args.fence)
+                 if (args.trace_file or args.metrics or args.fence) else None)
     eng = Engine(cfg, params, ServeConfig(max_len=max_len,
                                           batch_slots=args.slots,
                                           prefill_chunk=args.prefill_chunk,
@@ -98,7 +111,8 @@ def main():
                                           prefix_cache=args.prefix_cache,
                                           swap_pages=args.swap_pages,
                                           victim_policy=args.victim_policy,
-                                          page_topn=args.page_topn or None))
+                                          page_topn=args.page_topn or None),
+                 telemetry=telemetry)
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, seed=args.seed)
 
@@ -113,16 +127,19 @@ def main():
                               sampling=sampling))
     next_req = warm
     steps = 0
+    req_metrics = []
     while eng.queue or any(s.request is not None for s in eng.slots) \
             or next_req < n_req:
         for fr in eng.step():
             results[fr.request_id] = fr.tokens
+        req_metrics += eng.pop_finished_metrics()
         steps += 1
         if args.stagger and next_req < n_req and steps % args.stagger == 0:
             ids.append(eng.submit(prompts[next_req], max_new_tokens=args.gen,
                                   sampling=sampling))
             next_req += 1
     dt = time.perf_counter() - t0
+    req_metrics += eng.pop_finished_metrics()
 
     gen_tok = eng.stats["tokens_generated"]
     print(f"arch={cfg.name} binary={binary} N={eng.n} slots={args.slots} "
@@ -157,6 +174,41 @@ def main():
               f"{eng.stats['replayed_tokens']} recomputed, "
               f"{eng.stats['swap_out_bytes']} B out / "
               f"{eng.stats['swap_in_bytes']} B in")
+
+    if telemetry is not None:
+        def pcts(xs):
+            if not xs:
+                return "n/a"
+            ms = np.asarray(xs, np.float64) * 1e3
+            p = [float(np.percentile(ms, q)) for q in (50, 95, 99)]
+            return f"{p[0]:.1f}/{p[1]:.1f}/{p[2]:.1f} ms"
+
+        by_id = sorted(req_metrics, key=lambda m: m.request_id)
+        ttft = [m.ttft for m in by_id if m.ttft is not None]
+        queue = [m.queue_time for m in by_id if m.queue_time is not None]
+        itl = [s for m in by_id for s in m.itl]
+        print(f"latency (p50/p95/p99): queue {pcts(queue)} | "
+              f"TTFT {pcts(ttft)} | ITL {pcts(itl)}")
+        victims = [m for m in by_id
+                   if any(n for k, n in m.preemptions.items()
+                          if k != "lru-evict")]
+        if victims:
+            print(f"preempted requests ({len(victims)}):")
+            for m in victims:
+                kinds = ", ".join(f"{k} x{n}"
+                                  for k, n in sorted(m.preemptions.items())
+                                  if n)
+                print(f"  req {m.request_id}: {kinds}, "
+                      f"{m.swapped_tokens} tok swapped back, "
+                      f"{m.replayed_tokens} replayed, "
+                      f"{m.swap_out_bytes} B out")
+        if args.metrics:
+            print(telemetry.registry.render())
+        if args.trace_file:
+            n = eng.dump_trace(requests=req_metrics)
+            print(f"wrote {n} trace events -> {args.trace_file}")
+        else:
+            eng.check()
 
 
 if __name__ == "__main__":

@@ -12,5 +12,8 @@ from repro.serve.scheduler import (DecodeSlot, PlannedAdmission,
                                    PrefillChunk, Reclaim, SchedulePlan,
                                    Scheduler, SwapIn)
 from repro.serve.statepool import StatePool
+from repro.serve.telemetry import (FlightRecorder, MetricsRegistry,
+                                   RequestMetrics, Telemetry, load_trace,
+                                   validate_event)
 from repro.serve.validate import (resolve_state_pages, state_layer_positions,
                                   validate_serve_features)

@@ -60,16 +60,18 @@ from repro.serve.runner import ModelRunner, _chunk_extra, _sample_token
 from repro.serve.scheduler import (FinishedRequest, Request, SamplingParams,
                                    SchedulePlan, Scheduler, ServeConfig)
 from repro.serve.statepool import StatePool
+from repro.serve.telemetry import RequestMetrics, Telemetry  # noqa: F401
 from repro.serve.validate import (state_layer_positions,
                                   validate_serve_features)
 
-__all__ = ["Engine", "FinishedRequest", "Request", "SamplingParams",
-           "SchedulePlan", "Scheduler", "ModelRunner", "ServeConfig",
-           "StatePool"]
+__all__ = ["Engine", "FinishedRequest", "Request", "RequestMetrics",
+           "SamplingParams", "SchedulePlan", "Scheduler", "ModelRunner",
+           "ServeConfig", "StatePool", "Telemetry"]
 
 
 class Engine:
-    def __init__(self, cfg: ModelConfig, params: dict, scfg: ServeConfig):
+    def __init__(self, cfg: ModelConfig, params: dict, scfg: ServeConfig,
+                 telemetry: Telemetry | None = None):
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
@@ -78,9 +80,18 @@ class Engine:
         validate_serve_features(cfg.layer_pattern, scfg)
         state_layers = (len(state_layer_positions(cfg.layer_pattern))
                         if scfg.paged else 0)
-        self.scheduler = Scheduler(scfg, state_layers=state_layers)
+        # when a telemetry hub is attached, its registry IS the engine's
+        # stats (one declared schema shared by scheduler, runner, and the
+        # request-latency histograms); disabled costs one None check per
+        # hook site
+        self.telemetry = telemetry
+        self.scheduler = Scheduler(
+            scfg, stats=(telemetry.registry if telemetry else None),
+            state_layers=state_layers)
+        self.scheduler.telemetry = telemetry
         self.runner = ModelRunner(cfg, params, scfg,
                                   stats=self.scheduler.stats)
+        self.runner.telemetry = telemetry
         self.n = self.runner.n
         self.chunk = self.scheduler.chunk
 
@@ -176,10 +187,88 @@ class Engine:
     def step(self) -> list[FinishedRequest]:
         """One scheduler step — the whole engine loop is the three-line
         policy/execution contract: plan, execute verbatim, fold the
-        sampled tokens back. Returns newly finished requests."""
+        sampled tokens back. Returns newly finished requests.
+
+        With telemetry attached, each phase is timed host-side (monotonic
+        clock) and the plan is recorded as one flight-recorder step event;
+        `Telemetry(fence=True)` blocks on the cache pools before the
+        execute->commit stamp so execute time is device time, not
+        dispatch time."""
+        tel = self.telemetry
+        if tel is None:
+            plan = self.scheduler.schedule()
+            results = self.runner.execute(plan)
+            return self.scheduler.commit(plan, results)
+        t0 = tel.clock()
         plan = self.scheduler.schedule()
+        t1 = tel.clock()
         results = self.runner.execute(plan)
-        return self.scheduler.commit(plan, results)
+        if tel.fence:
+            self.runner.sync()
+        t2 = tel.clock()
+        finished = self.scheduler.commit(plan, results)
+        t3 = tel.clock()
+        tel.record_step(plan, timings={"schedule": t1 - t0,
+                                       "execute": t2 - t1,
+                                       "commit": t3 - t2,
+                                       "fenced": tel.fence},
+                        pool=self.scheduler.watermarks())
+        return finished
+
+    def pop_finished_metrics(self) -> list[RequestMetrics]:
+        """Drain the lifecycle records of requests that finished since the
+        last call (empty when telemetry is disabled)."""
+        return (self.telemetry.pop_finished()
+                if self.telemetry is not None else [])
+
+    def check(self) -> None:
+        """Debug probe: run every pool invariant check (BlockAllocator /
+        SwapPool / StatePool accounting + slot <-> block-table
+        cross-checks) in one call. On failure, the flight recorder is
+        dumped to the telemetry trace file (when one is configured)
+        before the AssertionError propagates."""
+        try:
+            self.scheduler.check()
+        except Exception as e:
+            tel = self.telemetry
+            if tel is not None and tel.trace_file:
+                tel.recorder.dump(
+                    tel.trace_file, clock=tel.clock,
+                    extra_events=[{"kind": "check", "ts": tel.clock(),
+                                   "ok": False, "error": str(e)}],
+                    note=f"invariant failure dump: {e}")
+            raise
+
+    def dump_trace(self, path: str | None = None, *,
+                   requests=()) -> int:
+        """Write the flight-recorder ring buffer as JSONL (meta header,
+        buffered step events, live + undrained request records, and a
+        check event from an auto-run `check()`). Records already drained
+        via `pop_finished_metrics()` can be handed back through
+        `requests` to appear in the dump. Returns the number of events
+        written."""
+        tel = self.telemetry
+        if tel is None:
+            raise RuntimeError("dump_trace requires an Engine telemetry "
+                               "hub (Engine(..., telemetry=Telemetry()))")
+        path = path if path is not None else tel.trace_file
+        if path is None:
+            raise RuntimeError("no trace path: pass one or set "
+                               "Telemetry(trace_file=...)")
+        ok, err = True, ""
+        try:
+            self.scheduler.check()
+        except AssertionError as e:
+            ok, err = False, str(e)
+        extra = [m.to_event() for m in requests]
+        extra += [m.to_event() for m in tel.live_requests]
+        extra += [m.to_event() for m in tel._finished]
+        extra.append({"kind": "check", "ts": tel.clock(), "ok": ok,
+                      "error": err})
+        n = tel.recorder.dump(path, extra_events=extra, clock=tel.clock)
+        if not ok:
+            raise AssertionError(err)
+        return n
 
     def run(self) -> dict[int, np.ndarray]:
         """Step until queue and slots drain; returns request_id -> tokens."""
@@ -193,8 +282,13 @@ class Engine:
 
     def reset_stats(self) -> None:
         """Zero the counters (e.g. after a warm-up pass, so benchmark stats
-        don't double-count); watermarks restart at current occupancy."""
+        don't double-count); watermarks restart at current occupancy.
+        Telemetry request records from before the reset are dropped the
+        same way — the next `pop_finished_metrics()` only sees requests
+        finishing after this call."""
         self.scheduler.reset_stats()
+        if self.telemetry is not None:
+            self.telemetry.pop_finished()
 
     # ------------------------------------------------------------------
     # low-level lockstep API (uniform batches, hand-driven)

@@ -190,6 +190,28 @@ class BlockAllocator:
         self.free_count += 1
         return page
 
+    def check(self) -> None:
+        """Raise AssertionError unless every accounting invariant holds:
+        ``in_use + lru + free == n_pages``, the free list is duplicate-free
+        and disjoint from the LRU, and each page's list membership matches
+        its refcount/cached state exactly."""
+        free, lru = set(self._free), set(self._lru)
+        assert len(free) == len(self._free), (
+            f"duplicate pages on the free list: {sorted(self._free)}")
+        assert not (free & lru), f"pages on free AND lru: {sorted(free & lru)}"
+        assert self.in_use + self.n_lru + self.n_free == self.n_pages, (
+            f"in_use {self.in_use} + lru {self.n_lru} + free {self.n_free} "
+            f"!= n_pages {self.n_pages}")
+        for page in range(self.n_pages):
+            ref, cached = self._ref[page], page in self._cached
+            assert ref >= 0, f"page {page} refcount {ref} < 0"
+            assert (page in free) == (ref == 0 and not cached), (
+                f"page {page}: free-list membership inconsistent "
+                f"(ref={ref}, cached={cached})")
+            assert (page in lru) == (ref == 0 and cached), (
+                f"page {page}: LRU membership inconsistent "
+                f"(ref={ref}, cached={cached})")
+
 
 # ---------------------------------------------------------------------------
 # content-addressed prefix index
@@ -383,6 +405,14 @@ class SwapPool:
 
     def reset_watermark(self) -> None:
         self.peak_in_use = self.in_use
+
+    def check(self) -> None:
+        """Raise AssertionError unless the capacity ledger is coherent:
+        every reservation holds >= 1 page and the total fits capacity."""
+        for rid, n in self._held.items():
+            assert n >= 1, f"request {rid} holds {n} swap pages"
+        assert 0 <= self.in_use <= self.capacity, (
+            f"swap in_use {self.in_use} outside [0, {self.capacity}]")
 
 
 def pages_needed(n_tokens: int, page_size: int) -> int:

@@ -51,6 +51,7 @@ from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.serve.paged import pages_needed
 from repro.serve.scheduler import SamplingParams, SchedulePlan, ServeConfig
+from repro.serve.telemetry import SERVE_COUNTERS, MetricsRegistry
 from repro.serve.validate import (resolve_state_pages, state_layer_positions,
                                   validate_serve_features)
 
@@ -117,15 +118,14 @@ class ModelRunner:
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
-        self.stats = stats
-        # usually the Scheduler's (pre-seeded) dict; seed the counters
-        # this side increments so a standalone runner works with any dict
+        # usually the Scheduler's registry (one shared schema across the
+        # stack); a standalone runner adopts whatever it was handed —
+        # undeclared counter keys raise instead of silently appearing
+        self.stats = MetricsRegistry.adopt(stats)
+        self.stats.declare_counters(SERVE_COUNTERS)
+        # optional observability hub (set by the Engine)
+        self.telemetry = None
         validate_serve_features(cfg.layer_pattern, scfg)
-        for key in ("prefill_chunks", "prefill_tokens", "decode_steps",
-                    "swap_out_bytes", "swap_in_bytes",
-                    "decode_pages_touched", "decode_hbm_bytes",
-                    "state_ckpt_bytes"):
-            self.stats.setdefault(key, 0)
         self.n = scfg.topn if scfg.topn is not None else cfg.had.topn(scfg.max_len)
         self.chunk = max(1, min(scfg.prefill_chunk, scfg.max_len))
         self.page = scfg.page_size
@@ -187,6 +187,12 @@ class ModelRunner:
         no longer exist."""
         self.caches = self._init_caches()
         self._swap_store.clear()
+
+    def sync(self) -> None:
+        """Block until every in-flight device write to the cache pools has
+        landed — the fence behind `Telemetry(fence=True)`, separating
+        device time from dispatch time in step phase timings."""
+        jax.block_until_ready(self.caches)
 
     # ------------------------------------------------------------------
     # low-level steps (shared by plan execution and the lockstep API)
@@ -299,6 +305,8 @@ class ModelRunner:
                              batch=b, row=ch.slot),
                 np.asarray(ch.pos, np.int32), active, n_valid,
                 plan.block_tables, plan.state_tables)
+            if self.telemetry is not None:
+                self.telemetry.on_chunk(req.request_id)
             if ch.state_ckpt >= 0:
                 # checkpoint the recurrent state at this chunk's
                 # page-aligned frontier for later prefix restores
@@ -369,6 +377,8 @@ class ModelRunner:
                 state[key] = taken
         self._swap_store[request_id] = {"kv": kv, "state": state}
         self.stats["swap_out_bytes"] += nbytes
+        if self.telemetry is not None:
+            self.telemetry.on_swap_bytes(request_id, out=nbytes)
 
     def _swap_in_pages(self, request_id: int, pages: tuple,
                        state_page: int = -1) -> None:
@@ -395,6 +405,8 @@ class ModelRunner:
             caches[key] = layer
         self.caches = caches
         self.stats["swap_in_bytes"] += nbytes
+        if self.telemetry is not None:
+            self.telemetry.on_swap_bytes(request_id, in_=nbytes)
 
     # ------------------------------------------------------------------
     # pooled state entry ops (eager, outside the jitted step)

@@ -50,6 +50,7 @@ import numpy as np
 from repro.serve.paged import (BlockAllocator, PrefixCache, SwapPool,
                                chain_hash, pages_needed)
 from repro.serve.statepool import StatePool
+from repro.serve.telemetry import SERVE_COUNTERS, MetricsRegistry
 from repro.serve.validate import resolve_state_pages
 
 
@@ -387,14 +388,15 @@ class Scheduler:
         self._resume: dict[int, dict] = {}     # recompute-preempted state
         self._swap_meta: dict[int, dict] = {}  # swapped-out request state
         self._next_id = 0
-        self.stats = stats if stats is not None else {}
-        for key in ("decode_steps", "prefill_chunks", "prefill_tokens",
-                    "tokens_generated", "preemptions", "max_residents",
-                    "cached_tokens", "swap_outs", "swap_ins",
-                    "swapped_tokens", "replayed_tokens", "swap_out_bytes",
-                    "swap_in_bytes", "state_ckpts", "state_restores",
-                    "state_ckpt_bytes"):
-            self.stats.setdefault(key, 0)
+        # the declared metrics schema replaces ad-hoc setdefault seeding:
+        # a typo'd counter key now raises KeyError instead of silently
+        # minting a new counter. Registry access is dict-compatible, so
+        # `stats["k"] += 1` / `dict(stats)` call sites are unchanged.
+        self.stats = MetricsRegistry.adopt(stats)
+        self.stats.declare_counters(SERVE_COUNTERS)
+        # optional observability hub (set by the Engine); every hook is
+        # behind one `is not None` test so the disabled path is free
+        self.telemetry = None
         # transient planning state (valid inside one schedule() call)
         self._plan_reclaims: list[Reclaim] = []
         self._plan_chunks: list[PrefillChunk] = []
@@ -449,6 +451,8 @@ class Scheduler:
         req.request_id = self._next_id
         self._next_id += 1
         self.queue.append(req)
+        if self.telemetry is not None:
+            self.telemetry.on_submit(req.request_id, int(req.tokens.size))
         return req.request_id
 
     def _prompt_rank(self, req: Request) -> tuple[int, int]:
@@ -502,7 +506,8 @@ class Scheduler:
             req = self._peek_next()
             if req.request_id in self._swap_meta:
                 pages = self._alloc_swap_in(
-                    self._swap_meta[req.request_id]["n_pages"])
+                    self._swap_meta[req.request_id]["n_pages"],
+                    rid=req.request_id)
                 if pages is None:
                     # head-of-line: a swapped request re-admits only when
                     # its full page set is available without preempting
@@ -512,18 +517,27 @@ class Scheduler:
                 swap_ins.append(self._admit_swapped(i, req, pages))
                 admissions.append(PlannedAdmission(
                     i, req, "swap", state_page=slot.state_page))
+                if self.telemetry is not None:
+                    self.telemetry.on_admit(req.request_id, "swap")
             else:
                 self._pop_next()
                 resume = ("recompute" if req.request_id in self._resume
                           else "fresh")
                 before = self.stats["cached_tokens"]
+                replayed0 = self.stats["replayed_tokens"]
                 self._admit(i, req)
+                cached = self.stats["cached_tokens"] - before
                 admissions.append(PlannedAdmission(
                     i, req, resume,
-                    cached_tokens=self.stats["cached_tokens"] - before,
+                    cached_tokens=cached,
                     state_page=slot.state_page,
                     state_restore=slot.state_src))
                 slot.state_src = -1
+                if self.telemetry is not None:
+                    self.telemetry.on_admit(
+                        req.request_id, resume, cached_tokens=cached,
+                        replayed_tokens=(self.stats["replayed_tokens"]
+                                         - replayed0))
         residents = sum(s.request is not None for s in self.slots)
         self.stats["max_residents"] = max(self.stats["max_residents"],
                                           residents)
@@ -687,6 +701,8 @@ class Scheduler:
         slot.generated.append(tok)
         slot.next_token = tok
         self.stats["tokens_generated"] += 1
+        if self.telemetry is not None:
+            self.telemetry.on_token(slot.request.request_id)
         req = slot.request
         if (len(slot.generated) >= req.max_new_tokens
                 or (req.eos_token is not None and tok == req.eos_token)):
@@ -698,6 +714,8 @@ class Scheduler:
             request_id=slot.request.request_id,
             prompt_len=slot.prompt_len,
             tokens=np.asarray(slot.generated, np.int32)))
+        if self.telemetry is not None:
+            self.telemetry.on_finish(slot.request.request_id)
         # free the slot AND reset its serving state: a stale `length` would
         # false-trip the lockstep decode() guard and feed garbage positions
         # for the inactive row. Paged: drop the slot's page refs the moment
@@ -869,6 +887,9 @@ class Scheduler:
         self._free_slot_state(v)
         self.queue.appendleft(req)
         self._clear_slot(v)
+        if self.telemetry is not None:
+            self.telemetry.on_reclaim(req.request_id, "swap-out")
+            self.telemetry.on_requeue(req.request_id)
 
     def _preempt(self, i: int) -> None:
         """Evict slot i recompute-style: free its pages and re-queue its
@@ -901,6 +922,9 @@ class Scheduler:
         self._free_slot_state(i)
         self.queue.appendleft(req)
         self._clear_slot(i)
+        if self.telemetry is not None:
+            self.telemetry.on_reclaim(req.request_id, "recompute-preempt")
+            self.telemetry.on_requeue(req.request_id)
 
     def _ensure_pages(self, i: int, upto: int, *, preempt: bool = True
                       ) -> bool:
@@ -920,6 +944,11 @@ class Scheduler:
             if page is None:
                 if self.prefix is not None and self.prefix.evict_one():
                     self._plan_reclaims.append(Reclaim(kind="lru-evict"))
+                    if self.telemetry is not None and slot.request is not None:
+                        # attributed to the request whose allocation forced
+                        # the cached page out (nobody *loses* work)
+                        self.telemetry.on_reclaim(
+                            slot.request.request_id, "lru-evict")
                     continue
                 if not preempt:
                     raise RuntimeError(
@@ -934,7 +963,7 @@ class Scheduler:
             row[len(slot.pages) - 1] = page
         return True
 
-    def _alloc_swap_in(self, n: int) -> list[int] | None:
+    def _alloc_swap_in(self, n: int, rid: int = -1) -> list[int] | None:
         """Allocate the full page set a swap-in needs, evicting LRU pages
         but never preempting a resident (a swapped request waits rather
         than cascading evictions). None iff the pool cannot supply them —
@@ -951,6 +980,8 @@ class Scheduler:
             if page is None:
                 if self.prefix is not None and self.prefix.evict_one():
                     self._plan_reclaims.append(Reclaim(kind="lru-evict"))
+                    if self.telemetry is not None and rid >= 0:
+                        self.telemetry.on_reclaim(rid, "lru-evict")
                     continue
                 for p in reversed(got):
                     self.allocator.free(p)
@@ -1104,6 +1135,8 @@ class Scheduler:
             self.state_tables[i] = slot.state_page
             if slot.state_src >= 0:
                 self.stats["state_restores"] += 1
+                if self.telemetry is not None:
+                    self.telemetry.on_state_restore(req.request_id)
         if entry is not None:
             # the tokens this resume will prefill AGAIN (they were already
             # computed once, then thrown away by recompute preemption) —
@@ -1140,6 +1173,9 @@ class Scheduler:
             self.state_tables[i] = slot.state_page
         self.stats["swap_ins"] += 1
         self.stats["swapped_tokens"] += entry["length"]
+        if self.telemetry is not None:
+            self.telemetry.on_swapped_tokens(req.request_id,
+                                             entry["length"])
         return SwapIn(slot=i, request_id=req.request_id,
                       pages=tuple(int(p) for p in pages),
                       length=entry["length"], state_page=slot.state_page)
@@ -1198,13 +1234,13 @@ class Scheduler:
             slot.state_src = -1
 
     def reset_stats(self) -> None:
-        """Zero the counters in place (the dict is shared with the runner
-        and the engine facade). `max_residents` is a watermark, not a
-        counter: it restarts at the CURRENT resident count (mirroring
+        """Zero the counters in place (the registry is shared with the
+        runner and the engine facade); histograms clear alongside the
+        scalars. `max_residents` is a watermark, not a counter: it
+        restarts at the CURRENT resident count (mirroring
         `reset_watermark`'s in-use baseline) — zeroing it mid-flight
         under-reported until the next step."""
-        for key in self.stats:
-            self.stats[key] = 0
+        self.stats.reset()
         self.stats["max_residents"] = sum(s.request is not None
                                           for s in self.slots)
         if self.allocator is not None:
@@ -1220,3 +1256,65 @@ class Scheduler:
     def lengths(self) -> np.ndarray:
         """Per-slot valid cache lengths, int32 (kernel dtype)."""
         return np.array([s.length for s in self.slots], np.int32)
+
+    # ------------------------------------------------------------------
+    # observability
+    # ------------------------------------------------------------------
+    def watermarks(self) -> dict:
+        """Current pool occupancies as one flat JSON-able dict — the
+        `pool` field of every flight-recorder step event."""
+        out: dict[str, int] = {
+            "residents": sum(s.request is not None for s in self.slots),
+            "queued": len(self.queue),
+        }
+        if self.allocator is not None:
+            out.update(pages_in_use=self.allocator.in_use,
+                       pages_lru=self.allocator.n_lru,
+                       pages_free=self.allocator.n_free)
+        if self.prefix is not None:
+            out["prefix_keys"] = len(self.prefix)
+        if self.swap is not None:
+            out.update(swap_in_use=self.swap.in_use,
+                       swap_free=self.swap.n_free)
+        if self.statepool is not None:
+            out.update(state_held=self.statepool.n_held,
+                       state_ckpt=self.statepool.n_ckpt,
+                       state_free=self.statepool.n_free)
+        return out
+
+    def check(self) -> None:
+        """Run every pool invariant check plus the slot <-> block-table
+        cross-checks in one call (the Engine's debug probe; AssertionError
+        on any accounting corruption)."""
+        if self.allocator is not None:
+            self.allocator.check()
+        if self.swap is not None:
+            self.swap.check()
+        if self.statepool is not None:
+            self.statepool.check()
+        for i, slot in enumerate(self.slots):
+            if self.block_tables is not None:
+                row = self.block_tables[i]
+                k = len(slot.pages)
+                assert list(row[:k]) == [int(p) for p in slot.pages], (
+                    f"slot {i}: block-table row {row[:k].tolist()} != "
+                    f"pages {slot.pages}")
+                assert (row[k:] == -1).all(), (
+                    f"slot {i}: stale block-table entries past "
+                    f"{k} pages: {row.tolist()}")
+                for p in slot.pages:
+                    assert self.allocator.refcount(int(p)) >= 1, (
+                        f"slot {i}: mapped page {p} has refcount 0")
+                if slot.request is not None:
+                    assert len(slot.pages) >= pages_needed(
+                        slot.length, self.page), (
+                        f"slot {i}: {len(slot.pages)} pages cannot hold "
+                        f"length {slot.length}")
+            if self.state_tables is not None:
+                assert int(self.state_tables[i]) == slot.state_page, (
+                    f"slot {i}: state table {self.state_tables[i]} != "
+                    f"slot entry {slot.state_page}")
+        if self.swap is not None:
+            for rid in self._swap_meta:
+                assert self.swap.holds(rid), (
+                    f"swapped request {rid} has no swap reservation")

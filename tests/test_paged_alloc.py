@@ -321,6 +321,41 @@ def test_swap_pool_rejects_bad_transitions():
         SwapPool(4, 0)
 
 
+# ---------------------------------------------------------------------------
+# explicit invariant probes (Engine.check() building blocks)
+# ---------------------------------------------------------------------------
+
+def test_allocator_check_passes_through_lifecycle():
+    a = BlockAllocator(6, page_size=4)
+    a.check()
+    pages = [a.alloc() for _ in range(3)]
+    a.check()
+    for p in pages[:2]:
+        a.mark_cached(p)
+    for p in pages:
+        a.free(p)
+    a.check()                      # cached pages parked on the LRU
+    assert a.evict_lru() is not None
+    a.check()
+
+
+def test_allocator_check_catches_corruption():
+    a = BlockAllocator(4, page_size=4)
+    page = a.alloc()
+    a._free.append(page)           # page both allocated and free
+    with pytest.raises(AssertionError):
+        a.check()
+
+
+def test_swap_pool_check_catches_corruption():
+    sw = SwapPool(4, page_size=8)
+    sw.reserve(0, 2)
+    sw.check()
+    sw._held[1] = 0                # reservation holding zero pages
+    with pytest.raises(AssertionError, match="holds"):
+        sw.check()
+
+
 def test_swap_pool_clear_and_stats():
     sw = SwapPool(8, page_size=16)
     sw.reserve(1, 2)

@@ -1,0 +1,466 @@
+"""Serving telemetry subsystem tests.
+
+Three load-bearing properties:
+
+  * the telemetry layer is a pure OBSERVER — attaching a hub changes no
+    engine output bit on any path (binary / kernel / full-precision) and
+    compiles no extra traces (the 1-prefill + 1-decode pin holds);
+  * the metrics registry replaces the untyped shared stats dict with a
+    declared schema — an undeclared counter key RAISES instead of
+    `setdefault`-ing a silent new counter (the regression that motivated
+    it), while every existing `stats[...]` call-site idiom keeps working;
+  * everything dumped or derived is faithful: JSONL trace events survive
+    a round-trip losslessly for every event kind, request lifecycle
+    timestamps are ordered, and the RequestMetrics-derived percentiles /
+    preemption attribution re-derive the legacy hand-rolled computation.
+"""
+import dataclasses
+import inspect
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.serve import telemetry as T
+from repro.serve.telemetry import (EVENT_SCHEMA, SERVE_COUNTERS,
+                                   FlightRecorder, Histogram,
+                                   MetricsRegistry, RequestMetrics,
+                                   Telemetry, event_from_json,
+                                   event_to_json, load_trace,
+                                   validate_event)
+
+
+# ---------------------------------------------------------------------------
+# metrics registry: declared schema, dict compatibility, render
+# ---------------------------------------------------------------------------
+
+def _registry():
+    r = MetricsRegistry()
+    r.declare_counters(SERVE_COUNTERS)
+    return r
+
+
+def test_registry_unknown_key_raises():
+    r = _registry()
+    r["decode_steps"] += 1
+    with pytest.raises(KeyError):
+        r["decode_stepz"] += 1          # typo'd read
+    with pytest.raises(KeyError):
+        r["brand_new_counter"] = 7      # typo'd write
+    assert "decode_stepz" not in r
+
+
+def test_registry_dict_compat():
+    """Every idiom the serving stack uses on the old dict keeps working."""
+    r = _registry()
+    r["prefill_chunks"] += 3
+    r["max_residents"] = max(r["max_residents"], 2)
+    assert r.get("prefill_chunks") == 3
+    assert r.get("nope", -1) == -1
+    d = dict(r)                          # serve_bench snapshots stats
+    assert d["prefill_chunks"] == 3 and d["max_residents"] == 2
+    assert set(d) == set(SERVE_COUNTERS)
+    assert len(r) == len(SERVE_COUNTERS)
+    # histograms are render/snapshot-only: never in the scalar view
+    r.histogram("lat_seconds", "test latency")
+    assert "lat_seconds" not in r
+    assert len(r) == len(SERVE_COUNTERS)
+
+
+def test_registry_adopt_seeds_and_shares():
+    r = MetricsRegistry.adopt({"prefill_chunks": 5})
+    r.declare_counters(SERVE_COUNTERS)
+    assert r["prefill_chunks"] == 5
+    assert MetricsRegistry.adopt(r) is r
+
+
+def test_registry_reset_keeps_schema():
+    r = _registry()
+    r["decode_steps"] += 9
+    h = r.histogram("lat_seconds", "test latency")
+    h.observe(0.5)
+    r.reset()
+    assert r["decode_steps"] == 0
+    assert h.count == 0
+    with pytest.raises(KeyError):
+        r["still_undeclared"] += 1
+
+
+def test_scheduler_and_runner_reject_undeclared_keys():
+    """The regression the registry exists for: a typo'd stats key inside
+    Scheduler/ModelRunner code now raises instead of silently creating a
+    fresh counter (both construct their stats through the registry)."""
+    from repro.serve.scheduler import Scheduler, ServeConfig
+    sched = Scheduler(ServeConfig(max_len=32, batch_slots=1))
+    with pytest.raises(KeyError):
+        sched.stats["prefil_chunks"] += 1
+    assert sched.stats["prefill_chunks"] == 0
+
+
+def test_prometheus_render():
+    r = _registry()
+    r["tokens_generated"] += 41
+    h = r.histogram("step_seconds", "per-step wall time")
+    for v in (1e-4, 1e-3, 2.0, 1e9):
+        h.observe(v)
+    text = r.render(namespace="repro_serve")
+    assert "# HELP repro_serve_tokens_generated" in text
+    assert "# TYPE repro_serve_tokens_generated counter" in text
+    assert "repro_serve_tokens_generated 41" in text
+    assert "# TYPE repro_serve_step_seconds histogram" in text
+    assert 'repro_serve_step_seconds_bucket{le="+Inf"} 4' in text
+    assert "repro_serve_step_seconds_count 4" in text
+    # cumulative buckets: the le=2 bucket holds the first three samples
+    assert 'le="2"} 3' in text
+
+
+# ---------------------------------------------------------------------------
+# histogram bucket boundaries
+# ---------------------------------------------------------------------------
+
+def test_histogram_bucket_boundaries():
+    h = Histogram("h_seconds", "t", bounds=(1.0, 2.0, 4.0))
+    # le-semantics: a value exactly on a bound lands IN that bound's bucket
+    for v, want in ((0.5, 0), (1.0, 0), (1.5, 1), (2.0, 1), (4.0, 2),
+                    (4.5, 3)):
+        before = list(h.snapshot()["counts"])
+        h.observe(v)
+        after = h.snapshot()["counts"]
+        assert after[want] == before[want] + 1, (v, want, after)
+    assert h.count == 6
+    assert h.sum == pytest.approx(0.5 + 1.0 + 1.5 + 2.0 + 4.0 + 4.5)
+
+
+def test_histogram_default_bounds_are_log_spaced():
+    assert T.TIME_BUCKETS[0] < 1e-4 and T.TIME_BUCKETS[-1] > 32.0
+    ratios = {b / a for a, b in zip(T.TIME_BUCKETS, T.TIME_BUCKETS[1:])}
+    assert ratios == {2.0}
+
+
+# ---------------------------------------------------------------------------
+# trace events: schema validation + lossless JSONL round-trip
+# ---------------------------------------------------------------------------
+
+def _sample_events():
+    req = RequestMetrics(request_id=3, prompt_len=17, submit_ts=1.0,
+                         admit_ts=1.5, first_chunk_ts=1.6, first_token_ts=2.0,
+                         finish_ts=3.0, itl=[0.1, 0.2], n_generated=3,
+                         queue_steps=4, admissions=2, prefill_chunks=5,
+                         cached_tokens=16, replayed_tokens=8,
+                         swapped_tokens=32,
+                         preemptions={"lru-evict": 1, "swap-out": 2,
+                                      "recompute-preempt": 0},
+                         swap_out_bytes=1024, swap_in_bytes=1024,
+                         state_restores=1)
+    return [
+        {"kind": "meta", "schema": T.TRACE_SCHEMA_VERSION, "ts": 12.5,
+         "note": "unit"},
+        {"kind": "step", "step": 7, "ts": 13.0,
+         "admissions": [{"slot": 0, "request_id": 3, "resume": "fresh",
+                         "cached_tokens": 0}],
+         "prefill": [{"slot": 0, "request_id": 3, "lo": 0, "hi": 8,
+                      "samples": True}],
+         "decode": [1, 2],
+         "reclaims": [{"kind": "swap-out", "slot": 1, "request_id": 9,
+                       "n_pages": 3}],
+         "swap_ins": [{"slot": 2, "request_id": 11, "n_pages": 2,
+                       "length": 29}],
+         "timings": {"schedule": 1e-4, "execute": 2e-3, "commit": 5e-5,
+                     "fenced": False},
+         "pool": {"residents": 3, "queued": 1, "pages_in_use": 12}},
+        req.to_event(),
+        {"kind": "check", "ts": 14.0, "ok": False, "error": "boom"},
+    ]
+
+
+def test_every_event_kind_round_trips_losslessly():
+    for ev in _sample_events():
+        assert set(EVENT_SCHEMA) >= {ev["kind"]}
+        back = event_from_json(event_to_json(ev))
+        assert back == ev, ev["kind"]
+    # and the request record reconstructs into an equal dataclass
+    req_ev = _sample_events()[2]
+    m = RequestMetrics.from_event(event_from_json(event_to_json(req_ev)))
+    assert dataclasses.asdict(m) == dataclasses.asdict(
+        RequestMetrics.from_event(req_ev))
+    assert m.ttft == pytest.approx(1.0) and m.queue_time == pytest.approx(0.5)
+
+
+def test_validate_event_rejects_malformed():
+    ok = _sample_events()[0]
+    with pytest.raises(ValueError):
+        validate_event({**ok, "kind": "mystery"})
+    with pytest.raises(ValueError):
+        validate_event({k: v for k, v in ok.items() if k != "ts"})
+    with pytest.raises(ValueError):
+        validate_event({**ok, "extra_field": 1})
+    with pytest.raises(ValueError):
+        validate_event({**_sample_events()[3], "ok": 1})  # bool, not int
+
+
+def test_recorder_ring_and_jsonl_dump(tmp_path):
+    rec = FlightRecorder(capacity=3)
+    for ev in _sample_events() * 3:          # 12 events through a 3-ring
+        rec.record(ev)
+    assert len(rec.events()) == 3
+    assert rec.recorded == 12 and rec.dropped == 9
+    path = tmp_path / "trace.jsonl"
+    n = rec.dump(str(path), note="unit dump", append=False)
+    events = load_trace(str(path))
+    assert len(events) == n == 4             # meta header + 3 ring events
+    assert events[0]["kind"] == "meta"
+    assert events[0]["schema"] == T.TRACE_SCHEMA_VERSION
+    with open(path) as f:                    # one JSON object per line
+        for line in f:
+            json.loads(line)
+
+
+# ---------------------------------------------------------------------------
+# engine integration: lifecycle ordering, observer invariance, trace pin
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def serve_setup():
+    import jax
+    from repro.models import ModelConfig
+    from repro.models import model as M
+    cfg = ModelConfig(name="tel", family="dense", n_layers=2, d_model=32,
+                      n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64,
+                      head_dim=16, param_dtype="float32", q_block=16,
+                      remat=False)
+    return cfg, M.init_params(jax.random.PRNGKey(10), cfg)
+
+
+def _scfg(slots, binary, **kw):
+    from repro.serve import ServeConfig
+    kw.setdefault("max_len", 48)
+    return ServeConfig(batch_slots=slots, binary=binary, topn=6,
+                       prefill_chunk=8, **kw)
+
+
+def _run_workload(cfg, params, *, telemetry, scfg_kw=None, n_req=4, gen=5):
+    from repro.serve import Engine
+    eng = Engine(cfg, params, _scfg(2, True, **(scfg_kw or {})),
+                 telemetry=telemetry)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, 64, n) for n in (13, 5, 9, 11)][:n_req]
+    ids = [eng.submit(p, max_new_tokens=gen) for p in prompts]
+    out = eng.run()
+    return eng, {rid: out[rid] for rid in ids}
+
+
+def test_request_lifecycle_ordering(serve_setup):
+    cfg, params = serve_setup
+    tel = Telemetry()
+    eng, out = _run_workload(cfg, params, telemetry=tel)
+    mets = eng.pop_finished_metrics()
+    assert len(mets) == 4
+    assert eng.pop_finished_metrics() == []          # drained
+    for m in mets:
+        assert m.submit_ts <= m.admit_ts <= m.first_chunk_ts \
+            <= m.first_token_ts <= m.finish_ts, dataclasses.asdict(m)
+        assert m.n_generated == len(out[m.request_id])
+        assert len(m.itl) == m.n_generated - 1
+        assert m.admissions >= 1 and m.prefill_chunks >= 1
+        assert m.queue_time >= 0 and m.ttft >= m.queue_time
+        assert m.e2e >= m.ttft
+    # the shared registry saw the same totals
+    assert eng.stats["tokens_generated"] == sum(m.n_generated for m in mets)
+    assert tel.registry is eng.scheduler.stats is eng.runner.stats
+
+
+def test_telemetry_is_a_pure_observer(serve_setup):
+    """Attaching a hub (even with fencing) changes no output bit and
+    compiles no extra traces — binary and full-precision paths."""
+    cfg, params = serve_setup
+    for binary in (True, False):
+        base = None
+        for tel in (None, Telemetry(), Telemetry(fence=True)):
+            from repro.serve import Engine
+            eng = Engine(cfg, params, _scfg(2, binary), telemetry=tel)
+            rng = np.random.default_rng(3)
+            prompts = [rng.integers(0, 64, n) for n in (13, 5, 9, 11)]
+            ids = [eng.submit(p, max_new_tokens=5) for p in prompts]
+            out = eng.run()
+            got = [out[rid] for rid in ids]
+            if base is None:
+                base = got
+            else:
+                for a, b in zip(base, got):
+                    np.testing.assert_array_equal(a, b)
+            # the standing trace pin: 1 prefill chunk + 1 decode
+            assert eng._step._cache_size() == 2, eng._step._cache_size()
+
+
+def test_telemetry_observer_kernel_path():
+    import dataclasses as dc
+    import jax
+    from repro.models import ModelConfig
+    from repro.models import model as M
+    from repro.models.config import HADConfig
+    from repro.serve import Engine
+    cfg = ModelConfig(name="telk", family="dense", n_layers=2, d_model=32,
+                      n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64,
+                      head_dim=16, param_dtype="float32", q_block=16,
+                      remat=False)
+    kcfg = dc.replace(cfg, had=HADConfig(use_kernels=True, kernel_block_q=8,
+                                         kernel_block_t=16))
+    params = M.init_params(jax.random.PRNGKey(10), kcfg)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, 64, n) for n in (12, 7)]
+    base = None
+    for tel in (None, Telemetry()):
+        eng = Engine(kcfg, params, _scfg(2, True), telemetry=tel)
+        ids = [eng.submit(p, max_new_tokens=4) for p in prompts]
+        out = eng.run()
+        got = [out[rid] for rid in ids]
+        if base is None:
+            base = got
+        else:
+            for a, b in zip(base, got):
+                np.testing.assert_array_equal(a, b)
+
+
+def test_step_events_recorded_with_timings(serve_setup):
+    cfg, params = serve_setup
+    tel = Telemetry(trace_capacity=512)
+    eng, _ = _run_workload(cfg, params, telemetry=tel,
+                           scfg_kw={"paged": True, "page_size": 8})
+    events = tel.recorder.events()
+    assert events and all(e["kind"] == "step" for e in events)
+    assert [e["step"] for e in events] == list(range(len(events)))
+    for e in events:
+        validate_event(e)
+        assert set(e["timings"]) == {"schedule", "execute", "commit",
+                                     "fenced"}
+        assert all(t >= 0 for k, t in e["timings"].items() if k != "fenced")
+        assert e["pool"]["residents"] >= 0
+        assert "pages_in_use" in e["pool"]
+    # admissions / prefill chunks / decode sets all appear somewhere
+    assert any(e["admissions"] for e in events)
+    assert any(e["prefill"] for e in events)
+    assert any(e["decode"] for e in events)
+
+
+def test_engine_dump_trace_and_check(serve_setup, tmp_path):
+    cfg, params = serve_setup
+    path = tmp_path / "t.jsonl"
+    tel = Telemetry(trace_file=str(path))
+    eng, _ = _run_workload(cfg, params, telemetry=tel,
+                           scfg_kw={"paged": True, "page_size": 8})
+    mets = eng.pop_finished_metrics()
+    eng.check()                               # clean engine passes
+    n = eng.dump_trace(requests=mets)
+    events = load_trace(str(path))
+    assert len(events) == n
+    kinds = {e["kind"] for e in events}
+    assert kinds == {"meta", "step", "request", "check"}
+    assert sum(e["kind"] == "request" for e in events) == 4
+    assert all(e["ok"] for e in events if e["kind"] == "check")
+
+    # corrupt the allocator: check() must raise AND auto-dump a failing
+    # check event to the configured trace file
+    eng.allocator._free.append(eng.allocator._free[0])
+    with pytest.raises(AssertionError):
+        eng.check()
+    bad = [e for e in load_trace(str(path)) if e["kind"] == "check"
+           and not e["ok"]]
+    assert bad and "free" in bad[-1]["error"]
+
+
+def test_disabled_engine_has_no_telemetry_surface(serve_setup):
+    cfg, params = serve_setup
+    eng, _ = _run_workload(cfg, params, telemetry=None)
+    assert eng.pop_finished_metrics() == []
+    with pytest.raises(RuntimeError):
+        eng.dump_trace()
+    eng.check()                               # probe works without a hub
+
+
+def test_telemetry_module_is_device_free():
+    assert "import jax" not in inspect.getsource(T), \
+        "telemetry is imported by the device-free scheduler"
+
+
+# ---------------------------------------------------------------------------
+# derived percentiles / attribution == the legacy hand-rolled computation
+# ---------------------------------------------------------------------------
+
+def test_percentile_derivation_matches_legacy_formula():
+    """benchmarks.common.percentiles_ms must reproduce the hand-rolled
+    per-case computation it replaced, exactly, on the same samples."""
+    from benchmarks.common import percentiles_ms
+    rng = np.random.default_rng(0)
+    xs = rng.gamma(2.0, 0.01, size=257).tolist()
+    legacy = tuple(float(np.percentile(np.asarray(xs, np.float64) * 1e3, p))
+                   for p in (50, 95, 99))
+    assert percentiles_ms(xs) == legacy
+    assert percentiles_ms([]) == (0.0, 0.0, 0.0)
+
+
+def test_request_metrics_match_legacy_capture(serve_setup):
+    """Dual capture on one workload: the legacy serve_bench bookkeeping
+    (stamp after each step() returns) and RequestMetrics (stamped in
+    commit) must agree on every sample COUNT and closely on values —
+    the commit-vs-loop stamp gap is bounded by one step's host work."""
+    from benchmarks.common import latency_samples
+    from repro.serve import Engine
+    cfg, params = serve_setup
+    tel = Telemetry()
+    eng = Engine(cfg, params, _scfg(2, True), telemetry=tel)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, 64, n) for n in (13, 5, 9, 11)]
+    submit_t, first_t, last_t, counts, legacy_itl = {}, {}, {}, {}, []
+    for p in prompts:
+        rid = eng.submit(p, max_new_tokens=5)
+        submit_t[rid] = time.perf_counter()
+        counts[rid] = 0
+    def _record(rid, n, now):     # verbatim from the old serve_bench loop
+        for k in range(counts[rid], n):
+            if k == 0:
+                first_t[rid] = now
+            else:
+                legacy_itl.append(now - last_t[rid])
+            last_t[rid] = now
+        counts[rid] = n
+
+    while eng.queue or any(s.request is not None for s in eng.slots):
+        finished = eng.step()
+        now = time.perf_counter()
+        for slot in eng.slots:
+            if slot.request is not None:
+                _record(slot.request.request_id, len(slot.generated), now)
+        for fr in finished:
+            _record(fr.request_id, len(fr.tokens), now)
+    legacy_ttft = [first_t[rid] - submit_t[rid] for rid in sorted(first_t)]
+    lat = latency_samples(eng.pop_finished_metrics())
+    assert len(lat["ttft"]) == len(legacy_ttft) == 4
+    assert len(lat["itl"]) == len(legacy_itl)
+    for a, b in zip(lat["ttft"], legacy_ttft):
+        assert abs(a - b) < 2.0, (lat["ttft"], legacy_ttft)
+
+
+def test_preemption_attribution_rederives_scheduler_counters(serve_setup):
+    """On an overcommitted paged pool, per-request attribution summed over
+    all finished requests equals the scheduler's aggregate counters."""
+    from benchmarks.common import preemption_attribution
+    from repro.serve import Engine
+    cfg, params = serve_setup
+    tel = Telemetry()
+    eng = Engine(cfg, params,
+                 _scfg(2, True, paged=True, page_size=8, n_pages=6),
+                 telemetry=tel)
+    rng = np.random.default_rng(5)
+    for p in [rng.integers(0, 64, n) for n in (22, 23, 21, 24)]:
+        eng.submit(p, max_new_tokens=8)
+    eng.run()
+    mets = eng.pop_finished_metrics()
+    st = eng.stats
+    pa = preemption_attribution(mets)
+    assert st["preemptions"] > 0, "overcommit never preempted: test is void"
+    assert (pa["by_kind"].get("recompute-preempt", 0)
+            + pa["by_kind"].get("swap-out", 0)) == st["preemptions"]
+    assert sum(m.replayed_tokens for m in mets) == st["replayed_tokens"]
+    assert pa["victims"] >= 1
+    eng.check()
