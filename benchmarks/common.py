@@ -206,6 +206,11 @@ def latency_samples(metrics) -> dict:
     return {"ttft": ttft, "itl": itl, "queue": queue}
 
 
+# goodput numerator shared with the serving CLI — lives next to
+# RequestMetrics, re-exported here for the benchmark harnesses
+from repro.serve.telemetry import slo_attainment  # noqa: E402,F401
+
+
 def preemption_attribution(metrics) -> dict:
     """Aggregate per-request preemption attribution: how many requests
     were victimized at all, and the total reclaim count by kind."""

@@ -63,18 +63,35 @@ the warm pass restores recurrent-state checkpoints and does strictly
 less prefill work than cold. With ``--swap-pages`` it also runs an
 overcommitted hybrid pass whose victims carry their state entry through
 the host swap pool (``serve_hybrid_swap_s<N>,<swap_outs>,<bytes>``).
+
+With ``--async`` two pipelined-front-end cases run. The *double-buffer*
+case drives the overcommitted staggered workload through
+``Engine.step_pipelined()`` — plan N+1 is built on the host while step N
+runs on the device — side by side with the sync loop, and reports the
+fraction of scheduling work hidden inside the device window
+(``serve_async_pipe_s<N>_overlap,<frac>,<steps>``; asserted > 0.5 on the
+default workload, > 0 under ``--smoke``). The *open-loop* case submits
+Poisson arrivals through the asyncio front end (``AsyncEngine``) at
+0.5x/1x/2x the measured closed-loop capacity — arrivals keep coming
+regardless of completions, the regime where queueing delay compounds —
+and reports goodput under SLO: the attainment fraction at self-calibrated
+TTFT/ITL deadlines and the SLO-attaining request rate per offered QPS
+(``serve_openloop_<m>x_{offered|goodput}`` rows). The arrival process is
+seeded by ``--seed``, stamped in the ``serve_openloop_meta`` row;
+closed-loop rows are unaffected by the seed.
 """
 from __future__ import annotations
 
+import asyncio
 import time
 
 import jax
 import numpy as np
 
 from benchmarks.common import (causal_cfg, latency_samples, percentiles_ms,
-                               preemption_attribution)
+                               preemption_attribution, slo_attainment)
 from repro.models import model as M
-from repro.serve import Engine, ServeConfig, Telemetry
+from repro.serve import AsyncEngine, Engine, ServeConfig, Telemetry
 
 PROMPT_MEAN = 96
 GEN = 16
@@ -95,17 +112,20 @@ def _prompts(n_req: int, skew: str, rng) -> list[np.ndarray]:
     return [rng.integers(0, 512, size=int(s)) for s in lens]
 
 
-def _drive(eng: Engine, prompts: list[np.ndarray], *, stagger: int = 0
-           ) -> dict:
+def _drive(eng: Engine, prompts: list[np.ndarray], *, stagger: int = 0,
+           pipelined: bool = False) -> dict:
     """Run the workload; latency samples come from the engine's telemetry
     layer (per-request RequestMetrics) instead of ad-hoc bookkeeping.
 
     stagger > 0 trickles one request in every `stagger` scheduler steps
     after the first slot-filling wave (staggered arrivals — the TTFT/ITL
     measurement regime); 0 submits everything up front (throughput).
-    Returns {"wall": s, "ttft": [s], "itl": [s], "queue": [s],
-    "gen": n_tokens, "metrics": [RequestMetrics]}.
+    pipelined drives the double-buffered `step_pipelined()` loop instead
+    of the sync `step()` (the loop also waits out the final in-flight
+    device step). Returns {"wall": s, "ttft": [s], "itl": [s],
+    "queue": [s], "gen": n_tokens, "metrics": [RequestMetrics]}.
     """
+    step = eng.step_pipelined if pipelined else eng.step
     t0 = time.perf_counter()
     n_first = len(prompts) if not stagger else min(eng.scfg.batch_slots,
                                                    len(prompts))
@@ -114,8 +134,9 @@ def _drive(eng: Engine, prompts: list[np.ndarray], *, stagger: int = 0
     nxt, steps = n_first, 0
     metrics = []
     while (eng.queue or any(s.request is not None for s in eng.slots)
-           or nxt < len(prompts)):
-        eng.step()
+           or nxt < len(prompts)
+           or (pipelined and eng._inflight is not None)):
+        step()
         metrics += eng.pop_finished_metrics()
         steps += 1
         if stagger and nxt < len(prompts) and steps % stagger == 0:
@@ -191,7 +212,8 @@ def run(print_fn=print, slot_counts=(1, 2, 4), n_req: int = 4,
         stagger: int = 2, paged: bool = False,
         page_size: int = 16, prefix_cache: bool = False,
         swap_pages: int = 0, page_topn: int | None = None,
-        hybrid: bool = False) -> list[str]:
+        hybrid: bool = False, async_mode: bool = False, seed: int = 0,
+        smoke: bool = False) -> list[str]:
     csv = []
     cfg = causal_cfg(d=64, layers=2, heads=4)
     params = M.init_params(jax.random.PRNGKey(0), cfg)
@@ -262,6 +284,145 @@ def run(print_fn=print, slot_counts=(1, 2, 4), n_req: int = 4,
         csv += _hybrid_case(print_fn, slots=slot_counts[-1], n_req=n_req,
                             stagger=stagger, page_size=page_size,
                             swap_pages=swap_pages)
+    if async_mode:
+        csv += _async_case(print_fn, params, cfg, slots=slot_counts[-1],
+                           n_req=n_req, stagger=stagger,
+                           page_size=page_size, prefix_cache=prefix_cache,
+                           swap_pages=swap_pages, smoke=smoke)
+        csv += _openloop_case(print_fn, params, cfg, slots=slot_counts[-1],
+                              page_size=page_size, seed=seed, smoke=smoke)
+    return csv
+
+
+def _async_case(print_fn, params, cfg, *, slots: int, n_req: int,
+                stagger: int, page_size: int, prefix_cache: bool,
+                swap_pages: int, smoke: bool) -> list[str]:
+    """Double-buffered serving: the overcommitted staggered workload
+    driven through `step_pipelined()` — the scheduler builds plan N+1
+    (and commits step N's structural effects) while step N's device work
+    is still in flight, syncing step N's sampled tokens only when plan
+    N+1 is ready to launch. Bit-identical outputs vs the sync loop are
+    pinned in tests/test_async_engine.py (including prefix-cache and
+    swap interplay); here the harness measures what the overlap buys —
+    the fraction of host scheduling work hidden inside the device window
+    (from the flight recorder's per-step overlap timings) — and reports
+    tok/s side by side with the sync loop on the same workload."""
+    from repro.serve import pages_needed
+    dense_pages = slots * pages_needed(MAX_LEN, page_size)
+    n_pages = max(pages_needed(MAX_LEN, page_size), int(dense_pages * 0.4))
+    rng = np.random.default_rng(19)
+    prompts = _prompts(max(n_req, slots + 2), "mixed", rng)
+    csv = []
+    for pipelined in (False, True):
+        tag = "pipe" if pipelined else "sync"
+        eng = _engine(params, cfg, slots=slots, binary=True, paged=True,
+                      page_size=page_size, n_pages=n_pages,
+                      prefix_cache=prefix_cache, swap_pages=swap_pages)
+        _drive(eng, prompts, stagger=stagger, pipelined=pipelined)
+        eng.reset_stats()
+        r = _drive(eng, prompts, stagger=stagger, pipelined=pipelined)
+        tps = r["gen"] / r["wall"]
+        name = f"serve_async_{tag}_s{slots}"
+        csv.append(f"{name},{r['wall'] / r['gen'] * 1e6:.1f},{tps:.2f}")
+        if pipelined:
+            ov = eng.overlap_stats()
+            assert ov["pipelined_steps"] > 0, dict(eng.stats)
+            # the default overcommit workload must hide most of its
+            # scheduling inside the device window; the smoke workload is
+            # too small to promise a ratio, only that overlap happened
+            floor = 0.0 if smoke else 0.5
+            assert ov["overlap_frac"] > floor, ov
+            csv.append(f"{name}_overlap,{ov['overlap_frac']:.3f},"
+                       f"{ov['pipelined_steps']}")
+            print_fn(f"  async    slots={slots} double-buffer: {tps:7.1f} "
+                     f"tok/s | {100 * ov['overlap_frac']:.0f}% of "
+                     f"scheduling overlapped across "
+                     f"{ov['pipelined_steps']} pipelined steps")
+        else:
+            print_fn(f"  async    slots={slots} sync loop:     "
+                     f"{tps:7.1f} tok/s")
+    return csv
+
+
+def _openloop_pass(eng: Engine, prompts: list[np.ndarray],
+                   arrive_s: np.ndarray) -> tuple[float, list]:
+    """One open-loop pass: clients submit through the asyncio front end
+    at fixed absolute arrival offsets (seconds from pass start),
+    regardless of completions, while `AsyncEngine.run()` drives the
+    pipelined loop in a worker thread. Returns (wall_s, metrics)."""
+    aeng = AsyncEngine(eng)
+
+    async def client(i: int):
+        await asyncio.sleep(float(arrive_s[i]))
+        h = await aeng.submit(prompts[i], max_new_tokens=GEN)
+        await h.result()
+
+    async def main():
+        runner = asyncio.ensure_future(aeng.run())
+        t0 = time.perf_counter()
+        await asyncio.gather(*[client(i) for i in range(len(prompts))])
+        aeng.stop()
+        await runner
+        return time.perf_counter() - t0
+
+    wall = asyncio.run(main())
+    eng.check()
+    if eng.telemetry is not None and eng.telemetry.trace_file:
+        eng.dump_trace(requests=aeng.finished_metrics)
+    return wall, list(aeng.finished_metrics)
+
+
+def _openloop_case(print_fn, params, cfg, *, slots: int, page_size: int,
+                   seed: int, smoke: bool) -> list[str]:
+    """Open-loop goodput under SLO: Poisson arrivals at a fixed offered
+    rate keep coming whether or not the engine keeps up — the serving
+    regime where queueing delay compounds past saturation, which a
+    closed-loop driver (submit-on-completion) structurally cannot
+    produce. A closed-loop calibration pass sets the capacity estimate
+    and the SLO deadlines (4x the uncongested p50 TTFT / ITL on this
+    machine — CPU-absolute numbers are meaningless across hosts, the
+    *shape* of attainment vs offered load is the result); the sweep then
+    offers 0.5x/1x/2x capacity and reports attainment (fraction of
+    requests meeting both deadlines, via `slo_attainment`) and goodput
+    (SLO-attaining request rate). Arrivals are drawn from --seed,
+    stamped in the meta row; closed-loop rows never see the seed."""
+    rng = np.random.default_rng(seed)
+    n_req = 6 if smoke else 16
+    prompts = _prompts(n_req, "mixed", rng)
+
+    eng = _engine(params, cfg, slots=slots, binary=True, paged=True,
+                  page_size=page_size)
+    _drive(eng, prompts, stagger=0, pipelined=True)      # compile warm-up
+    eng.reset_stats()
+    cal = _drive(eng, prompts, stagger=0, pipelined=True)
+    cap_qps = len(prompts) / cal["wall"]
+    t50, _, _ = percentiles_ms(cal["ttft"])
+    i50, _, _ = percentiles_ms(cal["itl"])
+    slo_ttft_s, slo_itl_s = 4 * t50 / 1e3, 4 * i50 / 1e3
+    csv = [f"serve_openloop_meta,{seed},seed",
+           f"serve_openloop_slo,{4 * t50:.2f},{4 * i50:.2f}"]
+    print_fn(f"  open-loop slots={slots}: capacity ~{cap_qps:.2f} req/s, "
+             f"SLO ttft<={4 * t50:.1f} ms itl<={4 * i50:.1f} ms "
+             f"(seed {seed})")
+    for mult in ((1.0,) if smoke else (0.5, 1.0, 2.0)):
+        qps = cap_qps * mult
+        arrive = np.cumsum(rng.exponential(1.0 / qps, size=n_req))
+        eng = _engine(params, cfg, slots=slots, binary=True, paged=True,
+                      page_size=page_size)
+        _drive(eng, prompts[:2], stagger=0, pipelined=True)   # compile
+        eng.reset_stats()
+        wall, metrics = _openloop_pass(eng, prompts, arrive)
+        assert len(metrics) == n_req, (len(metrics), n_req)
+        att = slo_attainment(metrics, ttft_s=slo_ttft_s, itl_s=slo_itl_s)
+        good = att["attained"] / wall
+        tag = f"{mult:g}x"
+        csv.append(f"serve_openloop_{tag}_offered,{qps:.2f},qps")
+        csv.append(f"serve_openloop_{tag}_goodput,{good:.2f},"
+                   f"{att['attainment']:.3f}")
+        print_fn(f"  open-loop {tag:4s}: offered {qps:.2f} req/s -> "
+                 f"{att['attained']}/{att['total']} in SLO "
+                 f"({100 * att['attainment']:.0f}%), goodput "
+                 f"{good:.2f} req/s")
     return csv
 
 
@@ -604,6 +765,16 @@ if __name__ == "__main__":
                          "plus the frontier (implies --paged; adds decode "
                          "pages-touched / est-HBM-bytes + quality CSV "
                          "columns)")
+    ap.add_argument("--async", dest="async_mode", action="store_true",
+                    help="run the pipelined-front-end cases: double-"
+                         "buffered schedule/execute overlap vs the sync "
+                         "loop (adds tok/s + overlap-fraction CSV rows) "
+                         "and the open-loop Poisson goodput-under-SLO "
+                         "sweep through the asyncio front end")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seed for the open-loop arrival process (stamped "
+                         "in the serve_openloop_meta CSV row; closed-loop "
+                         "cases are unaffected)")
     ap.add_argument("--trace-file", default=None,
                     help="dump the step flight recorder + per-request "
                          "records as JSONL here after every driven "
@@ -628,7 +799,8 @@ if __name__ == "__main__":
                     prefix_cache=args.prefix_cache,
                     swap_pages=args.swap_pages,
                     page_topn=args.page_topn or None,
-                    hybrid=args.hybrid)
+                    hybrid=args.hybrid, async_mode=args.async_mode,
+                    seed=args.seed, smoke=True)
         assert any("_ttft_p99," in l for l in lines), lines
         assert any("_queue_p99," in l for l in lines), lines
         assert any("_stats," in l for l in lines), lines
@@ -665,6 +837,15 @@ if __name__ == "__main__":
             if args.swap_pages:
                 assert any(l.startswith("serve_hybrid_swap_")
                            for l in lines), lines
+        if args.async_mode:
+            assert any(l.startswith("serve_async_pipe_") and "_overlap,"
+                       in l for l in lines), lines
+            assert any(l.startswith("serve_async_sync_")
+                       for l in lines), lines
+            assert any(l.startswith("serve_openloop_meta,"
+                                    f"{args.seed},") for l in lines), lines
+            assert any(l.startswith("serve_openloop_") and "_goodput," in l
+                       for l in lines), lines
         if args.trace_file:
             from repro.serve import load_trace
             events = load_trace(args.trace_file)  # validates every line
@@ -675,6 +856,16 @@ if __name__ == "__main__":
                        <= set(e["timings"]) for e in steps), "timings missing"
             assert all(e["ok"] for e in events if e["kind"] == "check")
             print(f"trace ok: {len(events)} events")
+            if args.async_mode:
+                # the double-buffer's overlap must be visible in the dump
+                pipe = [e for e in steps if e["timings"].get("pipelined")]
+                assert pipe, "no pipelined step events in the trace"
+                ratio = (sum(e["timings"]["overlap"] for e in pipe)
+                         / max(sum(e["timings"]["schedule"] for e in pipe),
+                               1e-9))
+                assert ratio > 0, "pipelined trace records no overlap"
+                print(f"async trace ok: {len(pipe)} pipelined steps, "
+                      f"overlap ratio {ratio:.2f}")
         if args.metrics:
             text = TELEMETRY["last"].registry.render()
             assert "repro_serve_decode_steps" in text, text[:400]
@@ -684,6 +875,7 @@ if __name__ == "__main__":
     else:
         run(paged=paged, page_size=args.page_size,
             prefix_cache=args.prefix_cache, swap_pages=args.swap_pages,
-            page_topn=args.page_topn or None, hybrid=args.hybrid)
+            page_topn=args.page_topn or None, hybrid=args.hybrid,
+            async_mode=args.async_mode, seed=args.seed)
         if args.metrics:
             print(TELEMETRY["last"].registry.render())

@@ -1,9 +1,19 @@
 """Serving launcher: continuous-batching HAD inference with the packed-bit
-K cache. Drives the scheduler with staggered, mixed-length requests.
+K cache. Drives the scheduler with staggered, mixed-length requests,
+streaming each request's tokens the step they commit (the scheduler's
+`token_sink` hook — the same path the asyncio front end consumes).
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced \
       --prompt-len 64 --gen 16 --slots 4 --requests 8 --len-spread 0.5 \
       --stagger 2
+
+With ``--async`` the drive loop is the double-buffered
+`Engine.step_pipelined()` — plan N+1 is built while step N runs on the
+device — and the overlap summary is printed at exit. With
+``--slo-ttft-ms`` / ``--slo-itl-ms`` the exit summary adds goodput under
+SLO: the fraction of requests whose TTFT and every inter-token gap met
+the deadlines (from the engine's RequestMetrics; auto-enables
+telemetry), and the SLO-attaining request rate vs the raw rate.
 """
 from __future__ import annotations
 
@@ -15,7 +25,8 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import model as M
-from repro.serve import Engine, SamplingParams, ServeConfig, Telemetry
+from repro.serve import (Engine, SamplingParams, ServeConfig, Telemetry,
+                         slo_attainment)
 
 
 def main():
@@ -78,6 +89,25 @@ def main():
     ap.add_argument("--metrics", action="store_true",
                     help="print the Prometheus-text metrics render and the "
                          "queue/TTFT/ITL percentile summary at exit")
+    ap.add_argument("--async", dest="async_mode", action="store_true",
+                    help="drive the double-buffered pipelined loop: the "
+                         "scheduler builds plan N+1 while step N runs on "
+                         "the device (bit-identical outputs; prints the "
+                         "overlap summary at exit)")
+    ap.add_argument("--stream", action="store_true",
+                    help="print every token the step it commits (one "
+                         "line per token) in addition to the per-request "
+                         "sequences at exit")
+    ap.add_argument("--slo-ttft-ms", type=float, default=0.0,
+                    help="TTFT deadline for the goodput summary: a "
+                         "request attains its SLO only if its first "
+                         "token arrived within this bound (0: no TTFT "
+                         "leg; enables telemetry)")
+    ap.add_argument("--slo-itl-ms", type=float, default=0.0,
+                    help="inter-token deadline for the goodput summary: "
+                         "every gap between consecutive tokens must stay "
+                         "within this bound (0: no ITL leg; enables "
+                         "telemetry)")
     ap.add_argument("--fence", action="store_true",
                     help="block on the cache pools between execute and "
                          "commit so per-step execute timings measure "
@@ -99,8 +129,10 @@ def main():
     binary = not args.baseline and cfg.had.enabled and cfg.has_attention
     paged = (args.paged or args.prefix_cache or bool(args.swap_pages)
              or bool(args.page_topn))
+    slo = bool(args.slo_ttft_ms or args.slo_itl_ms)
     telemetry = (Telemetry(trace_file=args.trace_file, fence=args.fence)
-                 if (args.trace_file or args.metrics or args.fence) else None)
+                 if (args.trace_file or args.metrics or args.fence or slo)
+                 else None)
     eng = Engine(cfg, params, ServeConfig(max_len=max_len,
                                           batch_slots=args.slots,
                                           prefill_chunk=args.prefill_chunk,
@@ -116,6 +148,21 @@ def main():
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, seed=args.seed)
 
+    # per-token streaming: the scheduler hands every sampled token to the
+    # sink the step it commits — the whole sequence is assembled from the
+    # stream, and the finished-request arrays must agree with it
+    streamed: dict[int, list[int]] = {}
+
+    def sink(rid: int, tok: int) -> None:
+        toks = streamed.setdefault(rid, [])
+        toks.append(int(tok))
+        if args.stream:
+            print(f"  + req {rid}[{len(toks) - 1}] = {int(tok)}",
+                  flush=True)
+
+    eng.scheduler.token_sink = sink
+    step = eng.step_pipelined if args.async_mode else eng.step
+
     t0 = time.perf_counter()
     pending = list(range(n_req))
     results: dict[int, np.ndarray] = {}
@@ -129,8 +176,9 @@ def main():
     steps = 0
     req_metrics = []
     while eng.queue or any(s.request is not None for s in eng.slots) \
-            or next_req < n_req:
-        for fr in eng.step():
+            or next_req < n_req \
+            or (args.async_mode and eng._inflight is not None):
+        for fr in step():
             results[fr.request_id] = fr.tokens
         req_metrics += eng.pop_finished_metrics()
         steps += 1
@@ -145,10 +193,19 @@ def main():
     print(f"arch={cfg.name} binary={binary} N={eng.n} slots={args.slots} "
           f"requests={n_req} prompt_lens={lens.tolist()} gen={args.gen}")
     for rid in ids:
+        assert streamed.get(rid, []) == results[rid].tolist(), (
+            f"req {rid}: streamed tokens diverge from the finished array")
         print(f"  req {rid}: {results[rid].tolist()}")
     print(f"wall {dt:.2f}s  decode_steps={eng.stats['decode_steps']} "
           f"prefill_chunks={eng.stats['prefill_chunks']} "
           f"({gen_tok / dt:.1f} generated tok/s)")
+    if args.async_mode:
+        ov = eng.overlap_stats()
+        print(f"pipeline: {ov['pipelined_steps']} double-buffered steps, "
+              f"{100 * ov['overlap_frac']:.0f}% of scheduling overlapped "
+              f"with device execution "
+              f"({ov['overlap_s'] * 1e3:.1f}/{ov['schedule_s'] * 1e3:.1f} "
+              f"ms)")
     if paged:
         a = eng.allocator
         print(f"kv pool: peak {a.peak_in_use}/{a.n_pages} pages "
@@ -189,6 +246,21 @@ def main():
         itl = [s for m in by_id for s in m.itl]
         print(f"latency (p50/p95/p99): queue {pcts(queue)} | "
               f"TTFT {pcts(ttft)} | ITL {pcts(itl)}")
+        if slo:
+            att = slo_attainment(
+                req_metrics,
+                ttft_s=args.slo_ttft_ms / 1e3 if args.slo_ttft_ms else None,
+                itl_s=args.slo_itl_ms / 1e3 if args.slo_itl_ms else None)
+            legs = []
+            if args.slo_ttft_ms:
+                legs.append(f"TTFT<={args.slo_ttft_ms:g}ms")
+            if args.slo_itl_ms:
+                legs.append(f"ITL<={args.slo_itl_ms:g}ms")
+            print(f"SLO ({', '.join(legs)}): {att['attained']}/"
+                  f"{att['total']} requests attained "
+                  f"({100 * att['attainment']:.0f}%) | goodput "
+                  f"{att['attained'] / dt:.2f} req/s of "
+                  f"{att['total'] / dt:.2f} req/s served")
         victims = [m for m in by_id
                    if any(n for k, n in m.preemptions.items()
                           if k != "lru-evict")]

@@ -1,8 +1,12 @@
 """Serving: continuous-batching engine over the HAD binary-cache path.
 
 Layered as Scheduler (pure policy -> SchedulePlan) -> ModelRunner
-(executes plans verbatim) -> Engine (compatibility facade).
+(executes plans verbatim) -> Engine (compatibility facade, with a
+double-buffered `step_pipelined()` loop) -> AsyncEngine (asyncio
+submission, token streaming, SLO-aware admission).
 """
+from repro.serve.async_engine import (AsyncEngine, AsyncRequestHandle,
+                                      SLORejected)
 from repro.serve.engine import (Engine, FinishedRequest, Request,
                                 SamplingParams, ServeConfig)
 from repro.serve.paged import (BlockAllocator, PoolStats, PrefixCache,
@@ -14,6 +18,6 @@ from repro.serve.scheduler import (DecodeSlot, PlannedAdmission,
 from repro.serve.statepool import StatePool
 from repro.serve.telemetry import (FlightRecorder, MetricsRegistry,
                                    RequestMetrics, Telemetry, load_trace,
-                                   validate_event)
+                                   slo_attainment, validate_event)
 from repro.serve.validate import (resolve_state_pages, state_layer_positions,
                                   validate_serve_features)

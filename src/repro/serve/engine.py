@@ -52,6 +52,10 @@ convenience that routes through the scheduler.
 """
 from __future__ import annotations
 
+import dataclasses
+import time
+from typing import Any
+
 import numpy as np
 
 from repro.models.config import ModelConfig
@@ -67,6 +71,18 @@ from repro.serve.validate import (state_layer_positions,
 __all__ = ["Engine", "FinishedRequest", "Request", "RequestMetrics",
            "SamplingParams", "SchedulePlan", "Scheduler", "ModelRunner",
            "ServeConfig", "StatePool", "Telemetry"]
+
+
+@dataclasses.dataclass
+class _Inflight:
+    """One dispatched-but-uncommitted pipelined step: the resolved plan,
+    the runner's pending handle, and the host timestamps needed to stamp
+    its flight-recorder event once it lands."""
+    plan: SchedulePlan
+    pending: Any
+    launch_ts: float                   # execute_async dispatch time
+    sched_s: float                     # host time spent building the plan
+    structural_s: float                # host time of commit_structural
 
 
 class Engine:
@@ -94,6 +110,11 @@ class Engine:
         self.runner.telemetry = telemetry
         self.n = self.runner.n
         self.chunk = self.scheduler.chunk
+        # the double buffer: at most ONE dispatched-but-uncommitted step
+        self._inflight: _Inflight | None = None
+        # pipelined-mode overlap accounting (seconds): how much host
+        # schedule time was hidden under the previous step's device window
+        self._pipe = {"overlap": 0.0, "schedule": 0.0, "steps": 0}
 
     # ------------------------------------------------------------------
     # facade: shared state lives on the scheduler (host) / runner (device)
@@ -185,20 +206,25 @@ class Engine:
                                      extra=extra, priority=priority)
 
     def step(self) -> list[FinishedRequest]:
-        """One scheduler step — the whole engine loop is the three-line
-        policy/execution contract: plan, execute verbatim, fold the
-        sampled tokens back. Returns newly finished requests.
+        """One synchronous scheduler step — a thin wrapper over the same
+        primitives the pipelined path uses: `execute()` is
+        `wait(execute_async(plan))` and `commit()` is
+        `commit_structural(plan)` + `commit_tokens(plan, results)`, just
+        composed back-to-back with no overlap. Returns newly finished
+        requests (any in-flight pipelined step is landed first — mixing
+        the two stepping APIs never reorders commits).
 
         With telemetry attached, each phase is timed host-side (monotonic
         clock) and the plan is recorded as one flight-recorder step event;
         `Telemetry(fence=True)` blocks on the cache pools before the
         execute->commit stamp so execute time is device time, not
         dispatch time."""
+        finished = self.flush()
         tel = self.telemetry
         if tel is None:
             plan = self.scheduler.schedule()
             results = self.runner.execute(plan)
-            return self.scheduler.commit(plan, results)
+            return finished + self.scheduler.commit(plan, results)
         t0 = tel.clock()
         plan = self.scheduler.schedule()
         t1 = tel.clock()
@@ -206,7 +232,7 @@ class Engine:
         if tel.fence:
             self.runner.sync()
         t2 = tel.clock()
-        finished = self.scheduler.commit(plan, results)
+        finished += self.scheduler.commit(plan, results)
         t3 = tel.clock()
         tel.record_step(plan, timings={"schedule": t1 - t0,
                                        "execute": t2 - t1,
@@ -214,6 +240,110 @@ class Engine:
                                        "fenced": tel.fence},
                         pool=self.scheduler.watermarks())
         return finished
+
+    # ------------------------------------------------------------------
+    # pipelined stepping (double-buffered schedule/execute overlap)
+    # ------------------------------------------------------------------
+    def _clock(self):
+        return self.telemetry.clock if self.telemetry else time.perf_counter
+
+    def step_pipelined(self) -> list[FinishedRequest]:
+        """One double-buffered step: build plan N+1 while step N is still
+        in flight on device, then land step N, resolve plan N+1 against
+        its committed tokens, and dispatch it.
+
+        Per iteration: `schedule()` runs first — the whole host-side
+        policy pass overlaps the previous step's device execution (that
+        interval is the recorded `overlap`). Only then does the host sync
+        on step N (`runner.wait`), token-commit it, rebind plan N+1's
+        stale decode inputs (`resolve_plan`), dispatch it
+        (`execute_async`), and apply its structural commit. Outputs are
+        bit-identical to `step()` — scheduling *policy* may diverge
+        (admissions and preemptions see token effects one step later),
+        which the standing warm==cold / swapped==unpreempted pins
+        guarantee is output-invariant. Returns requests finished by the
+        step that landed."""
+        clock = self._clock()
+        t0 = clock()
+        plan = self.scheduler.schedule()
+        t1 = clock()
+        self._pipe["schedule"] += t1 - t0
+        finished = (self._complete_inflight((t0, t1))
+                    if self._inflight is not None else [])
+        if not (plan.admissions or plan.swap_ins or plan.reclaims
+                or plan.prefill or plan.decode):
+            return finished            # nothing to dispatch — don't track
+        plan = self.scheduler.resolve_plan(plan)
+        launch = clock()
+        pending = self.runner.execute_async(plan)
+        s0 = clock()
+        self.scheduler.commit_structural(plan)
+        s1 = clock()
+        self._inflight = _Inflight(plan, pending, launch, t1 - t0, s1 - s0)
+        self._pipe["steps"] += 1
+        self.stats["pipelined_steps"] += 1
+        return finished
+
+    def _complete_inflight(self, overlap_interval: tuple[float, float]
+                           | None = None) -> list[FinishedRequest]:
+        """Land the in-flight step: host-sync its sampled tokens, token-
+        commit them, and stamp its flight-recorder event. The event's
+        `overlap` is how much of the given host interval (the NEXT plan's
+        schedule phase) fell inside this step's device window
+        [dispatch, wait-end]."""
+        inflight = self._inflight
+        self._inflight = None
+        results = self.runner.wait(inflight.pending)
+        clock = self._clock()
+        t2 = clock()
+        finished = self.scheduler.commit_tokens(inflight.plan, results)
+        t3 = clock()
+        execute_s = t2 - inflight.launch_ts
+        overlap = 0.0
+        if overlap_interval is not None:
+            o0, o1 = overlap_interval
+            overlap = max(0.0, min(o1, t2) - max(o0, inflight.launch_ts))
+        self._pipe["overlap"] += overlap
+        if self.telemetry is not None:
+            self.telemetry.record_step(
+                inflight.plan,
+                timings={"schedule": inflight.sched_s,
+                         "execute": execute_s,
+                         "commit": inflight.structural_s + (t3 - t2),
+                         "fenced": False,
+                         "overlap": overlap,
+                         "pipelined": True},
+                pool=self.scheduler.watermarks())
+        return finished
+
+    def flush(self) -> list[FinishedRequest]:
+        """Land any in-flight pipelined step (no-op when none). Called on
+        entry to every synchronous `step()`."""
+        if self._inflight is None:
+            return []
+        return self._complete_inflight()
+
+    def overlap_stats(self) -> dict:
+        """Aggregate pipelined-overlap accounting: seconds of host
+        schedule time total vs hidden under device windows, and the
+        resulting overlap fraction (the acceptance metric for the
+        double buffer)."""
+        s = self._pipe
+        frac = (s["overlap"] / s["schedule"]) if s["schedule"] > 0 else 0.0
+        return {"schedule_s": s["schedule"], "overlap_s": s["overlap"],
+                "pipelined_steps": s["steps"], "overlap_frac": frac}
+
+    def run_pipelined(self) -> dict[int, np.ndarray]:
+        """`run()` over the double-buffered step: drains the queue, all
+        slots, AND the in-flight step; returns request_id -> tokens."""
+        out: dict[int, np.ndarray] = {}
+        while (self.queue or any(s.request is not None for s in self.slots)
+               or self._inflight is not None):
+            for fr in self.step_pipelined():
+                out[fr.request_id] = fr.tokens
+        for fr in self.scheduler._drain_finished():
+            out[fr.request_id] = fr.tokens
+        return out
 
     def pop_finished_metrics(self) -> list[RequestMetrics]:
         """Drain the lifecycle records of requests that finished since the
@@ -287,6 +417,7 @@ class Engine:
         same way — the next `pop_finished_metrics()` only sees requests
         finishing after this call."""
         self.scheduler.reset_stats()
+        self._pipe = {"overlap": 0.0, "schedule": 0.0, "steps": 0}
         if self.telemetry is not None:
             self.telemetry.pop_finished()
 
@@ -316,6 +447,7 @@ class Engine:
         # bookkeeping, and a preempted resident's resume/swap entry would
         # outlive the request it belonged to; the runner likewise rebuilds
         # its pools from zeros and drops swapped page contents
+        self._inflight = None          # lockstep resets drop pending work
         self.scheduler.reset_for_lockstep()
         self.runner.reset_caches()
         if self.scfg.paged:

@@ -32,13 +32,26 @@ safe):
      whose just-sampled first token hit eos — the one stop condition
      only execution can observe).
 
-The swap transfers are eager one-off gathers/scatters per eviction (one
+The swap transfers are one-off gathers/scatters per eviction (one
 indexed take / indexed update per cache leaf) — they never touch the
 jitted step, so the one-prefill-trace + one-decode-trace pin holds.
+Swap-out gathers are *asynchronous*: the device-side indexed take is
+dispatched (capturing the pre-recycle page contents by data dependency)
+and the D2H copy started with ``copy_to_host_async``, but the host only
+blocks for the bytes at the next `wait()`/`sync()` — the transfer rides
+under the same step's decode work.
+
+`execute()` itself splits the same way: `execute_async(plan)` dispatches
+every stage and returns a :class:`_PendingStep` whose decode logits are
+still in flight; `wait(pending)` is the one host sync point, where the
+decode tokens are sampled and pending swap bytes land. A pipelined
+engine schedules plan N+1 between the two; the synchronous `execute()`
+is exactly `wait(execute_async(plan))`.
 """
 from __future__ import annotations
 
 import collections
+import dataclasses
 import functools
 from typing import Any
 
@@ -110,6 +123,17 @@ def _chunk_extra(extra: dict | None, s: int, lo: int, hi: int, chunk: int,
     return out
 
 
+@dataclasses.dataclass
+class _PendingStep:
+    """An `execute_async` dispatch awaiting its host sync: prefill-sampled
+    tokens are already final (the samples->same-step-decode handoff needs
+    them on host), decode logits are still device-side. `wait()` samples
+    the decode tokens and returns the merged per-slot results."""
+    results: dict[int, list[int]]
+    entries: list                      # decode entries pending sampling
+    logits: Any = None                 # un-synced decode logits, or None
+
+
 class ModelRunner:
     """Device-state owner and plan executor for one serving engine."""
 
@@ -157,6 +181,9 @@ class ModelRunner:
         # {leaf name -> np [n_groups, ...]}}} (accounting lives in the
         # scheduler's SwapPool; this is the data half)
         self._swap_store: dict[int, dict] = {}
+        # request_ids whose swap-out gathers are still device-side arrays
+        # with an async D2H in flight (finalized to numpy at wait()/sync())
+        self._pending_swaps: list[int] = []
 
         @functools.partial(jax.jit, static_argnames=("n", "binary",
                                                      "page_topn"))
@@ -187,11 +214,13 @@ class ModelRunner:
         no longer exist."""
         self.caches = self._init_caches()
         self._swap_store.clear()
+        self._pending_swaps.clear()
 
     def sync(self) -> None:
         """Block until every in-flight device write to the cache pools has
         landed — the fence behind `Telemetry(fence=True)`, separating
         device time from dispatch time in step phase timings."""
+        self._finalize_swaps()
         jax.block_until_ready(self.caches)
 
     # ------------------------------------------------------------------
@@ -270,6 +299,17 @@ class ModelRunner:
         """Run one SchedulePlan verbatim; returns per-slot sampled tokens
         in emission order (a slot completing prefill and decoding in the
         same step yields two)."""
+        return self.wait(self.execute_async(plan))
+
+    def execute_async(self, plan: SchedulePlan) -> _PendingStep:
+        """Dispatch one SchedulePlan without the final host sync: swap
+        transfers, state ops, prefill chunks (whose completion samples are
+        drawn eagerly — the same-step decode handoff feeds on them) and
+        the batched decode launch all go to the device, but the decode
+        logits are NOT materialized. The returned `_PendingStep` is
+        redeemed by `wait()`; between the two the caller's host thread is
+        free — that window is where the pipelined engine builds plan
+        N+1."""
         results: dict[int, list[int]] = collections.defaultdict(list)
         for swap_in in plan.swap_ins:               # 1. restores
             self._swap_in_pages(swap_in.request_id, swap_in.pages,
@@ -320,6 +360,7 @@ class ModelRunner:
                 if ch.eos_token is not None and tok == ch.eos_token:
                     eos_hit.add(ch.slot)
         entries = [e for e in plan.decode if e.slot not in eos_hit]
+        logits = None
         if entries:                                 # 5. batched decode
             tokens = np.zeros((b,), np.int32)
             active = np.zeros((b,), bool)
@@ -331,11 +372,23 @@ class ModelRunner:
                 tokens, np.asarray(plan.decode_pos, np.int32), active,
                 plan.block_tables, plan.state_tables)
             self.stats["decode_steps"] += 1
-            rows = np.asarray(logits[:, 0, :vocab])
-            for e in entries:
+        return _PendingStep(results=dict(results), entries=entries,
+                            logits=logits)
+
+    def wait(self, pending: _PendingStep) -> dict[int, list[int]]:
+        """The host sync for one dispatched step: land pending swap-out
+        bytes, materialize the decode logits, and draw the decode tokens
+        (in plan entry order — the rng stream is identical to the fully
+        synchronous path)."""
+        self._finalize_swaps()
+        if pending.logits is not None:
+            vocab = self.cfg.vocab_size
+            rows = np.asarray(pending.logits[:, 0, :vocab])
+            for e in pending.entries:
                 tok = _sample_token(rows[e.slot], e.sampling, e.rng)
-                results[e.slot].append(tok)
-        return dict(results)
+                pending.results.setdefault(e.slot, []).append(tok)
+            pending.logits = None
+        return pending.results
 
     # ------------------------------------------------------------------
     # page swap transfers (the data half of swap-out preemption)
@@ -353,32 +406,54 @@ class ModelRunner:
                         state_page: int = -1) -> None:
         """Gather a victim's device pages (every paged leaf: packed k_bits
         + v, or the fp k/v twins) — plus, for hybrid models, its pooled
-        state entry — to host memory — one indexed take per leaf, page
-        granularity — before the freed pages/entries can be recycled by
-        this plan's writes."""
+        state entry — one indexed take per leaf, page granularity. The
+        take is an on-device copy dispatched BEFORE any planned write can
+        recycle the pages (functional arrays: it snapshots the pre-recycle
+        contents by construction), and the D2H transfer is started
+        asynchronously — host bytes land at the next `wait()`/`sync()`
+        instead of blocking dispatch here."""
         idx = jnp.asarray(np.asarray(pages, np.int32))
-        kv: dict[str, dict[str, np.ndarray]] = {}
+        kv: dict[str, dict[str, Any]] = {}
         nbytes = 0
         for key in self._pool_keys():
             taken = {}
             for name, leaf in self.caches[key].items():
-                arr = np.asarray(leaf[:, idx])      # [n_groups, k, ...]
+                arr = leaf[:, idx]                  # [n_groups, k, ...]
+                if hasattr(arr, "copy_to_host_async"):
+                    arr.copy_to_host_async()
                 taken[name] = arr
                 nbytes += arr.nbytes
             kv[key] = taken
-        state: dict[str, dict[str, np.ndarray]] = {}
+        state: dict[str, dict[str, Any]] = {}
         if state_page >= 0:
             for key in self._state_keys():
                 taken = {}
                 for name, leaf in self.caches[key].items():
-                    arr = np.asarray(leaf[:, state_page])  # [n_groups, ...]
+                    arr = leaf[:, state_page]       # [n_groups, ...]
+                    if hasattr(arr, "copy_to_host_async"):
+                        arr.copy_to_host_async()
                     taken[name] = arr
                     nbytes += arr.nbytes
                 state[key] = taken
         self._swap_store[request_id] = {"kv": kv, "state": state}
+        self._pending_swaps.append(request_id)
         self.stats["swap_out_bytes"] += nbytes
         if self.telemetry is not None:
             self.telemetry.on_swap_bytes(request_id, out=nbytes)
+
+    def _finalize_swaps(self) -> None:
+        """Convert pending swap-out gathers to host numpy — the blocking
+        half of the async D2H, deferred to the step's sync point so the
+        transfer overlaps the decode it was dispatched with."""
+        for rid in self._pending_swaps:
+            payload = self._swap_store.get(rid)
+            if payload is None:
+                continue               # cancelled or already restored
+            for part in ("kv", "state"):
+                for key, taken in payload[part].items():
+                    payload[part][key] = {name: np.asarray(arr)
+                                          for name, arr in taken.items()}
+        self._pending_swaps.clear()
 
     def _swap_in_pages(self, request_id: int, pages: tuple,
                        state_page: int = -1) -> None:

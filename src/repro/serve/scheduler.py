@@ -275,11 +275,14 @@ class PrefillChunk:
 class DecodeSlot:
     """One slot of the batched ragged decode step. `token` is the input
     token; None means "the token this plan's prefill completion sampled"
-    (same-step prefill->decode handoff)."""
+    (same-step prefill->decode handoff). `request` identifies the slot's
+    occupant at plan time so a pipelined engine can detect that the slot
+    changed hands between planning and execution (`resolve_plan`)."""
     slot: int
     token: int | None
     sampling: SamplingParams
     rng: Any = None
+    request: Any = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -397,6 +400,11 @@ class Scheduler:
         # optional observability hub (set by the Engine); every hook is
         # behind one `is not None` test so the disabled path is free
         self.telemetry = None
+        # optional per-token streaming sink: callable(request_id, token),
+        # invoked the moment a sampled token is committed (or routed to a
+        # preempted request) — the hook behind AsyncEngine streaming and
+        # `launch.serve`'s live token printing
+        self.token_sink = None
         # transient planning state (valid inside one schedule() call)
         self._plan_reclaims: list[Reclaim] = []
         self._plan_chunks: list[PrefillChunk] = []
@@ -642,7 +650,8 @@ class Scheduler:
             entries.append(DecodeSlot(
                 slot=i,
                 token=None if i in self._completed else slot.next_token,
-                sampling=slot.request.sampling, rng=slot.rng))
+                sampling=slot.request.sampling, rng=slot.rng,
+                request=slot.request))
             slot.length += 1
         return tuple(entries), decode_pos
 
@@ -654,41 +663,88 @@ class Scheduler:
         """Fold the runner's sampled tokens back into scheduler state:
         append tokens, apply stop conditions, register newly completed
         prefix pages, free finished slots, and advance idle counters.
-        Returns the requests that finished this step."""
-        remaining = {i: list(toks) for i, toks in results.items()}
-        emitted: set[int] = set()
+        Returns the requests that finished this step.
+
+        Exactly `commit_structural(plan)` followed by
+        `commit_tokens(plan, results)` — the two halves a pipelined
+        engine calls separately so plan N+1 can be built while step N is
+        still in flight on device."""
+        self.commit_structural(plan)
+        return self.commit_tokens(plan, results)
+
+    def commit_structural(self, plan: SchedulePlan) -> None:
+        """The token-independent half of `commit()`: every effect that is
+        knowable from the plan alone — prefix-page registration at each
+        chunk's frontier, state-checkpoint registration, returning
+        checkpoint entries planned for since-evicted slots, and
+        `max_new_tokens == 0` finishes. Safe to apply the moment the plan
+        is dispatched, before any sampled token exists, so the next
+        `schedule()` sees the structural state exactly as the synchronous
+        path would."""
         for ch in plan.prefill:
             i = ch.slot
             slot = self.slots[i]
             if slot.request is not ch.request:
-                # finished earlier in this commit; a planned checkpoint
-                # entry must still be returned to the pool
+                # the slot changed hands between planning and commit; a
+                # planned checkpoint entry must still be returned
                 if ch.state_ckpt >= 0:
                     self.statepool.free(ch.state_ckpt)
                 continue
             # register at the chunk's own frontier: `length` was advanced
             # for the whole plan (a same-step decode adds +1), but a page
             # completed by that decode token must be keyed AFTER the
-            # token is pushed — the decode pass below handles it
+            # token is pushed — commit_tokens' decode pass handles it
             post = slot.length
             slot.length = ch.hi
             self._register_full_pages(i, slot)
             slot.length = post
             if ch.state_ckpt >= 0:
                 self._register_state_ckpt(ch, slot)
-            if ch.hi == int(ch.request.tokens.size):
-                if ch.request.max_new_tokens == 0:
-                    self._finish(i)
-                elif ch.samples:
-                    tok = remaining[i].pop(0)
-                    emitted.add(i)
-                    self._push_token(i, slot, tok)
+            if (ch.hi == int(ch.request.tokens.size)
+                    and ch.request.max_new_tokens == 0):
+                self._finish(i)
+
+    def commit_tokens(self, plan: SchedulePlan,
+                      results: dict[int, list[int]]
+                      ) -> list[FinishedRequest]:
+        """The sampled-token half of `commit()`: pushes tokens, applies
+        eos/max_new_tokens stop conditions, registers pages completed by
+        decode tokens, and advances idle counters. In pipelined mode a
+        plan's slot may have been reclaimed (by the interleaved
+        `schedule()`) while its step was in flight — its sampled token is
+        then routed to the preempted request's resume record instead of
+        dropped, so a swapped/recomputed victim resumes with the exact
+        token stream of an unpreempted run."""
+        remaining = {i: list(toks) for i, toks in results.items()}
+        emitted: set[int] = set()
+        for ch in plan.prefill:
+            i = ch.slot
+            slot = self.slots[i]
+            if not ch.samples or not remaining.get(i):
+                continue
+            if slot.request is not ch.request:
+                self._route_token(ch.request, remaining[i].pop(0))
+                continue
+            tok = remaining[i].pop(0)
+            emitted.add(i)
+            self._push_token(i, slot, tok)
         for entry in plan.decode:
             i = entry.slot
             slot = self.slots[i]
-            if slot.request is None or not remaining.get(i):
+            if not remaining.get(i):
                 continue               # finished at its prefill sample
+            if slot.request is None or (entry.request is not None
+                                        and slot.request is not entry.request):
+                self._route_token(entry.request, remaining[i].pop(0))
+                continue
+            # register pages at the PLAN's post-decode frontier: in
+            # pipelined mode `slot.length` may already include the next
+            # plan's in-flight advance, whose token does not exist yet
+            post = slot.length
+            if plan.decode_pos:
+                slot.length = plan.decode_pos[i] + 1
             self._register_full_pages(i, slot)
+            slot.length = post
             tok = remaining[i].pop(0)
             emitted.add(i)
             self._push_token(i, slot, tok)
@@ -697,16 +753,103 @@ class Scheduler:
                 slot.idle = 0 if i in emitted else slot.idle + 1
         return self._drain_finished()
 
+    def resolve_plan(self, plan: SchedulePlan) -> SchedulePlan:
+        """Re-bind a plan built before the previous step's tokens were
+        committed (the pipelined schedule/execute overlap): stale decode
+        input tokens are replaced with the slot's now-current
+        `next_token`, decode entries for slots that finished meanwhile
+        are dropped, and swap-out gathers for requests that finished via
+        token routing are cancelled. A no-op (returns `plan` unchanged)
+        on the synchronous path, where nothing can go stale."""
+        changed = False
+        decode = []
+        for e in plan.decode:
+            slot = self.slots[e.slot]
+            if slot.request is None or (e.request is not None
+                                        and slot.request is not e.request):
+                changed = True         # finished between plan and launch
+                continue
+            if e.token is not None and e.token != slot.next_token:
+                e = dataclasses.replace(e, token=slot.next_token)
+                changed = True
+            decode.append(e)
+        reclaims = plan.reclaims
+        if any(rc.kind == "swap-out" and rc.request_id not in self._swap_meta
+               for rc in reclaims):
+            # the victim finished off-slot (a routed eos/max_new token):
+            # its reservation is released and nothing will ever restore
+            # the gather — cancel it so the runner's swap store stays
+            # bounded by live reservations
+            reclaims = tuple(
+                rc for rc in reclaims
+                if not (rc.kind == "swap-out"
+                        and rc.request_id not in self._swap_meta))
+            changed = True
+        if not changed:
+            return plan
+        return dataclasses.replace(plan, decode=tuple(decode),
+                                   reclaims=reclaims)
+
     def _push_token(self, i: int, slot: _Slot, tok: int) -> None:
         slot.generated.append(tok)
         slot.next_token = tok
         self.stats["tokens_generated"] += 1
         if self.telemetry is not None:
             self.telemetry.on_token(slot.request.request_id)
+        if self.token_sink is not None:
+            self.token_sink(slot.request.request_id, tok)
         req = slot.request
         if (len(slot.generated) >= req.max_new_tokens
                 or (req.eos_token is not None and tok == req.eos_token)):
             self._finish(i)
+
+    def _route_token(self, req: Request | None, tok: int) -> None:
+        """Credit a sampled token to a request whose slot was reclaimed
+        while the step was in flight (pipelined mode only). The token is
+        appended to the preempted request's resume record — its KV is
+        already captured (swap gathers execute after the in-flight step's
+        cache writes; recompute replays the extended prompt) — and the
+        stop conditions are applied off-slot, finishing the request
+        straight out of the queue when it is done."""
+        if req is None:
+            return
+        rid = req.request_id
+        meta = self._swap_meta.get(rid)
+        entry = self._resume.get(rid) if meta is None else None
+        if meta is not None:
+            meta["generated"].append(tok)
+            meta["next_token"] = tok
+            generated, prompt_len = meta["generated"], meta["prompt_len"]
+        elif entry is not None:
+            entry["generated"].append(tok)
+            # recompute resume replays generated tokens from the folded
+            # prompt — the routed token must replay with them
+            req.tokens = np.concatenate(
+                [req.tokens, np.asarray([tok], np.int32)])
+            generated, prompt_len = entry["generated"], entry["prompt_len"]
+        else:
+            return                     # already retired — drop
+        self.stats["tokens_generated"] += 1
+        if self.telemetry is not None:
+            self.telemetry.on_token(rid)
+        if self.token_sink is not None:
+            self.token_sink(rid, tok)
+        if (len(generated) >= req.max_new_tokens
+                or (req.eos_token is not None and tok == req.eos_token)):
+            try:
+                self.queue.remove(req)
+            except ValueError:
+                pass
+            if meta is not None:
+                self._swap_meta.pop(rid, None)
+                self.swap.release(rid)
+            else:
+                self._resume.pop(rid, None)
+            self._finished.append(FinishedRequest(
+                request_id=rid, prompt_len=prompt_len,
+                tokens=np.asarray(generated, np.int32)))
+            if self.telemetry is not None:
+                self.telemetry.on_finish(rid)
 
     def _finish(self, i: int) -> None:
         slot = self.slots[i]

@@ -136,6 +136,9 @@ SERVE_COUNTERS: dict[str, str] = {
     "state_ckpt_bytes": "bytes copied capturing state checkpoints",
     "decode_pages_touched": "KV pages whose V was read by decode steps",
     "decode_hbm_bytes": "estimated decode K+V HBM traffic, bytes",
+    "pipelined_steps": "double-buffered steps dispatched before the "
+                       "previous step committed",
+    "slo_rejected": "submissions refused by SLO-aware admission control",
 }
 
 
@@ -414,6 +417,28 @@ def load_trace(path: str) -> list[dict]:
     return events
 
 
+def slo_attainment(metrics, *, ttft_s: float | None = None,
+                   itl_s: float | None = None) -> dict:
+    """Goodput numerator over finished :class:`RequestMetrics`: how many
+    requests met their latency deadlines — TTFT <= ttft_s AND every
+    inter-token gap <= itl_s (a None deadline disables that leg). A
+    request with no recorded first token counts as missed when a TTFT
+    deadline is set. Returns {"total", "attained", "attainment"} with
+    attainment in [0, 1]; goodput is attained / wall-clock at the call
+    site."""
+    total = attained = 0
+    for m in metrics:
+        total += 1
+        ok = True
+        if ttft_s is not None and (m.ttft is None or m.ttft > ttft_s):
+            ok = False
+        if ok and itl_s is not None and any(g > itl_s for g in m.itl):
+            ok = False
+        attained += ok
+    return {"total": total, "attained": attained,
+            "attainment": attained / max(total, 1)}
+
+
 def _plan_rows(entries, fields) -> list[dict]:
     out = []
     for e in entries:
@@ -542,6 +567,9 @@ class Telemetry:
                          "time executing one plan (device time iff fenced)")
         self._h_commit = h("step_commit_seconds",
                            "host time folding sampled tokens back")
+        self._h_overlap = h("step_overlap_seconds",
+                            "host schedule time hidden under the previous "
+                            "step's device window (pipelined mode)")
 
     # -- request lifecycle (scheduler side) -----------------------------
     def on_submit(self, request_id: int, prompt_len: int) -> None:
@@ -641,4 +669,6 @@ class Telemetry:
         self._h_sched.observe(timings["schedule"])
         self._h_exec.observe(timings["execute"])
         self._h_commit.observe(timings["commit"])
+        if "overlap" in timings:
+            self._h_overlap.observe(timings["overlap"])
         self.step_idx += 1

@@ -1,0 +1,209 @@
+"""Pipelined engine + asyncio front end (serve/engine.py step_pipelined,
+serve/async_engine.py).
+
+The standing parity pin extended to the double buffer: sync engine ==
+pipelined engine == async engine outputs bit-identical on the binary,
+fp, and kernel paths — including the prefix-cache and swap interplay
+under overcommit — while the 1-prefill + 1-decode trace pin stays
+intact with the double buffer active. Scheduling *policy* may diverge
+between the orders (admissions see token effects one step later); the
+outputs must not.
+"""
+import asyncio
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import model as M
+from repro.models.config import HADConfig, ModelConfig
+from repro.serve import (AsyncEngine, Engine, SamplingParams, ServeConfig,
+                         SLORejected, Telemetry)
+
+CFG = ModelConfig(name="pipe", family="dense", n_layers=2, d_model=32,
+                  n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64,
+                  head_dim=16, param_dtype="float32", q_block=16,
+                  remat=False)
+KCFG = dataclasses.replace(
+    CFG, had=HADConfig(use_kernels=True, kernel_block_q=8,
+                       kernel_block_t=16))
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(jax.random.PRNGKey(10), CFG)
+
+
+def _scfg(binary=True, **kw):
+    return ServeConfig(batch_slots=2, max_len=48, prefill_chunk=8,
+                       binary=binary, topn=6, **kw)
+
+
+OVERCOMMIT = dict(paged=True, page_size=4, n_pages=9, prefix_cache=True,
+                  swap_pages=32)
+
+
+def _submit_workload(eng):
+    rng = np.random.default_rng(42)
+    ids = []
+    for k, n in enumerate((11, 7, 19, 5, 13, 9)):
+        ids.append(eng.submit(
+            rng.integers(1, 64, n).astype(np.int32),
+            max_new_tokens=6 + (k % 3),
+            sampling=SamplingParams(temperature=0.8, top_k=8, seed=k)))
+    return ids
+
+
+# ---------------------------------------------------------------------------
+# sync == pipelined, bit-identical, on every attention path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cfg,binary,serve_kw", [
+    (CFG, True, {}),
+    (CFG, True, OVERCOMMIT),
+    (CFG, False, OVERCOMMIT),
+    (KCFG, True, OVERCOMMIT),
+], ids=["binary-dense", "binary-overcommit", "fp-overcommit",
+        "kernel-overcommit"])
+def test_pipelined_outputs_bit_identical_to_sync(cfg, binary, serve_kw,
+                                                 params):
+    sync_eng = Engine(cfg, params, _scfg(binary=binary, **serve_kw))
+    _submit_workload(sync_eng)
+    ref = sync_eng.run()
+    pipe_eng = Engine(cfg, params, _scfg(binary=binary, **serve_kw))
+    _submit_workload(pipe_eng)
+    out = pipe_eng.run_pipelined()
+    assert set(ref) == set(out)
+    for rid in ref:
+        np.testing.assert_array_equal(ref[rid], out[rid])
+    pipe_eng.scheduler.check()
+    if serve_kw:
+        assert pipe_eng.stats["preemptions"] > 0    # overcommit saw pressure
+
+
+def test_trace_pin_holds_with_double_buffer_active(params):
+    """The jitted step still compiles exactly one prefill trace + one
+    decode trace when driven through the pipelined path (async swap
+    transfers and the deferred sync never touch the jitted step)."""
+    eng = Engine(CFG, params, _scfg(**OVERCOMMIT))
+    _submit_workload(eng)
+    eng.run_pipelined()
+    assert eng._step._cache_size() == 2
+    assert eng.stats["pipelined_steps"] > 0
+
+
+def test_overlap_fraction_and_step_events(params):
+    """The double buffer demonstrably overlaps: schedule time for plan
+    N+1 lands inside step N's device window (aggregate overlap fraction
+    > 0.5), and pipelined step events carry overlap timings while sync
+    events keep exactly the original four keys."""
+    tel = Telemetry()
+    eng = Engine(CFG, params, _scfg(**OVERCOMMIT), telemetry=tel)
+    _submit_workload(eng)
+    eng.run_pipelined()
+    ov = eng.overlap_stats()
+    assert ov["pipelined_steps"] > 0
+    assert ov["overlap_frac"] > 0.5, ov
+    events = [e for e in tel.recorder.events() if e["kind"] == "step"]
+    assert events
+    assert all(e["timings"].get("pipelined") for e in events)
+    assert all(e["timings"]["overlap"] >= 0 for e in events)
+    tel2 = Telemetry()
+    eng2 = Engine(CFG, params, _scfg(), telemetry=tel2)
+    _submit_workload(eng2)
+    eng2.run()
+    for e in tel2.recorder.events():
+        if e["kind"] == "step":
+            assert set(e["timings"]) == {"schedule", "execute", "commit",
+                                         "fenced"}
+
+
+def test_sync_step_flushes_inflight_work(params):
+    """Mixing the APIs: pipelined steps followed by sync `step()` loses
+    nothing — the in-flight step is landed first, and the combined run
+    matches the pure-sync outputs bit-identically."""
+    ref_eng = Engine(CFG, params, _scfg(**OVERCOMMIT))
+    _submit_workload(ref_eng)
+    ref = ref_eng.run()
+    eng = Engine(CFG, params, _scfg(**OVERCOMMIT))
+    _submit_workload(eng)
+    out = {}
+    for _ in range(5):
+        for fr in eng.step_pipelined():
+            out[fr.request_id] = fr.tokens
+    assert eng._inflight is not None
+    out.update(eng.run())              # sync run() flushes and finishes
+    assert set(ref) == set(out)
+    for rid in ref:
+        np.testing.assert_array_equal(ref[rid], out[rid])
+
+
+# ---------------------------------------------------------------------------
+# asyncio front end: streaming, completion, SLO admission
+# ---------------------------------------------------------------------------
+
+def test_async_engine_streams_and_matches_sync(params):
+    sync_eng = Engine(CFG, params, _scfg(**OVERCOMMIT))
+    ids = _submit_workload(sync_eng)
+    ref = sync_eng.run()
+
+    async def main():
+        eng = Engine(CFG, params, _scfg(**OVERCOMMIT),
+                     telemetry=Telemetry())
+        aeng = AsyncEngine(eng)
+        rng = np.random.default_rng(42)
+        callback_tokens: dict[int, list[int]] = {}
+
+        async def client(k, n):
+            prompt = rng.integers(1, 64, n).astype(np.int32)
+            got: list[int] = []
+            h = await aeng.submit(
+                prompt, max_new_tokens=6 + (k % 3),
+                sampling=SamplingParams(temperature=0.8, top_k=8, seed=k),
+                on_token=got.append)
+            streamed = [t async for t in h]
+            callback_tokens[h.request_id] = got
+            return h.request_id, streamed, await h.result()
+
+        runner = asyncio.ensure_future(aeng.run())
+        outs = await asyncio.gather(
+            *[client(k, n) for k, n in enumerate((11, 7, 19, 5, 13, 9))])
+        aeng.stop()
+        await runner
+        return outs, callback_tokens, aeng
+
+    outs, callback_tokens, aeng = asyncio.run(main())
+    assert len(outs) == len(ids)
+    for k, (rid, streamed, result) in enumerate(outs):
+        # streamed tokens == callback tokens == final result == sync run
+        np.testing.assert_array_equal(np.asarray(streamed, np.int32),
+                                      result)
+        assert callback_tokens[rid] == streamed
+        np.testing.assert_array_equal(result, ref[ids[k]])
+    # queue-time records fed the admission estimator
+    assert len(aeng.finished_metrics) == len(ids)
+    assert aeng.queue_delay_estimate() >= 0.0
+
+
+def test_async_engine_slo_admission_rejects(params):
+    async def main():
+        eng = Engine(CFG, params, _scfg(), telemetry=Telemetry())
+        aeng = AsyncEngine(eng, slo_ttft_s=0.05)
+        # no history: optimistic admission
+        h = await aeng.submit(np.arange(1, 6, dtype=np.int32),
+                              max_new_tokens=2)
+        # a queue-time record far past the deadline: shed at the door
+        aeng._queue_times.extend([0.4, 0.6])
+        with pytest.raises(SLORejected):
+            await aeng.submit(np.arange(1, 6, dtype=np.int32),
+                              max_new_tokens=2)
+        runner = asyncio.ensure_future(aeng.run())
+        tokens = await h.result()
+        aeng.stop()
+        await runner
+        return tokens, eng.stats["slo_rejected"]
+
+    tokens, rejected = asyncio.run(main())
+    assert tokens.size == 2
+    assert rejected == 1

@@ -530,3 +530,257 @@ def test_state_pool_invariant_under_preemption_sweep():
                 assert sched.state_tables[i] == slot.state_page
     assert sched.stats["preemptions"] > 0        # the sweep saw pressure
     assert sched.statepool.n_held == 0
+
+
+# ---------------------------------------------------------------------------
+# split commit: commit_structural + commit_tokens == the old fused commit
+# ---------------------------------------------------------------------------
+
+def _commit_reference(sched, plan, results):
+    """The pre-split `commit()` semantics, verbatim: per-chunk register +
+    push interleaved, then the decode loop, then idle counters. The split
+    (structural effects first, token effects second) must reproduce this
+    state exactly — slot independence and first-writer-wins registration
+    are what make the reordering sound, and this reference is the
+    oracle."""
+    remaining = {i: list(toks) for i, toks in results.items()}
+    emitted = set()
+    for ch in plan.prefill:
+        i = ch.slot
+        slot = sched.slots[i]
+        if slot.request is not ch.request:
+            if ch.state_ckpt >= 0:
+                sched.statepool.free(ch.state_ckpt)
+            continue
+        post = slot.length
+        slot.length = ch.hi
+        sched._register_full_pages(i, slot)
+        slot.length = post
+        if ch.state_ckpt >= 0:
+            sched._register_state_ckpt(ch, slot)
+        if ch.hi == int(ch.request.tokens.size):
+            if ch.request.max_new_tokens == 0:
+                sched._finish(i)
+            elif ch.samples:
+                tok = remaining[i].pop(0)
+                emitted.add(i)
+                sched._push_token(i, slot, tok)
+    for entry in plan.decode:
+        i = entry.slot
+        slot = sched.slots[i]
+        if slot.request is None or not remaining.get(i):
+            continue
+        sched._register_full_pages(i, slot)
+        tok = remaining[i].pop(0)
+        emitted.add(i)
+        sched._push_token(i, slot, tok)
+    for i, slot in enumerate(sched.slots):
+        if slot.request is not None:
+            slot.idle = 0 if i in emitted else slot.idle + 1
+    return sched._drain_finished()
+
+
+_SWEEP_STATS = ("tokens_generated", "preemptions", "swap_outs", "swap_ins",
+                "swapped_tokens", "replayed_tokens", "cached_tokens",
+                "state_ckpts", "state_restores")
+
+
+def _fingerprint(sched):
+    """Everything commit touches, in comparable form (rng objects and
+    telemetry excluded)."""
+    fp = {
+        "slots": [(s.request.request_id if s.request else None, s.length,
+                   s.prefill_pos, s.next_token, tuple(s.generated),
+                   s.prompt_len, s.idle, tuple(s.pages),
+                   tuple(s.page_keys), s.cacheable, s.state_page)
+                  for s in sched.slots],
+        "queue": [r.request_id for r in sched.queue],
+        "swap_meta": sorted(sched._swap_meta),
+        "resume": sorted(sched._resume),
+        "stats": {k: sched.stats[k] for k in _SWEEP_STATS},
+    }
+    if sched.allocator is not None:
+        a = sched.allocator
+        fp["alloc"] = (a.in_use, a.n_lru, a.n_free)
+        fp["block_tables"] = sched.block_tables.tolist()
+    if sched.statepool is not None:
+        p = sched.statepool
+        fp["state"] = (p.n_held, p.n_ckpt, p.n_free)
+        fp["state_tables"] = sched.state_tables.tolist()
+    return fp
+
+
+def _sweep_sched():
+    return Scheduler(_scfg(slots=3, max_len=32, chunk=8, n_pages=8,
+                           swap_pages=6, prefix_cache=True, page_size=4,
+                           priority=True, paged=True), state_layers=1)
+
+
+def _sweep_submit(sched, step):
+    """Identical staggered submissions for both schedulers: duplicate
+    prompts arrive AFTER their first copy finished (prefix hits +
+    checkpoint restores); max_new_tokens=0/1 exercise the
+    finish-at-prefill paths."""
+    # 13 tokens = 3 full pages with an interior page-aligned chunk
+    # boundary at 8 — the deepest restorable state checkpoint, so warm
+    # admissions can actually map cached pages (a stateful match is
+    # capped at the deepest checkpointed boundary)
+    rng = np.random.default_rng(11)
+    shared = rng.integers(0, 64, 13)
+    if step == 0:
+        for k in range(5):
+            prompt = (shared if k % 3 == 0
+                      else rng.integers(0, 64, int(rng.integers(3, 15))))
+            sched.submit(prompt, max_new_tokens=(0, 1, 9, 13)[k % 4])
+    elif step == 2:
+        # the shared prompt's pages sit in the reclaimable LRU right now
+        # (its max_new_tokens=0 copy just finished): the latency tier
+        # jumps this duplicate over the backlog so it takes the warm path
+        # before pool pressure evicts them
+        sched.submit(shared, max_new_tokens=4, priority="latency")
+    elif step == 25:
+        sched.submit(shared[:10], max_new_tokens=2)
+        sched.submit(rng.integers(0, 64, 9), max_new_tokens=7)
+
+
+def test_split_commit_matches_fused_commit_over_sweep():
+    """commit_structural + commit_tokens composes to EXACTLY the fused
+    pre-split commit() state — allocator/statepool accounting, preemption
+    records, finish sets — at every step of a 200-step preemption+swap+
+    prefix workload driven identically on both schedulers."""
+    split, fused = _sweep_sched(), _sweep_sched()
+    finished_split, finished_fused = [], []
+    for step in range(200):
+        _sweep_submit(split, step)
+        _sweep_submit(fused, step)
+        if (step > 25 and not split.queue
+                and all(s.request is None for s in split.slots)):
+            break
+        plan_s = split.schedule()
+        plan_f = fused.schedule()
+        results = _fake_results(plan_s, start=100 + 7 * step)
+        assert _fake_results(plan_f, start=100 + 7 * step) == results
+        split.commit_structural(plan_s)
+        finished_split += split.commit_tokens(plan_s, results)
+        finished_fused += _commit_reference(fused, plan_f, results)
+        assert _fingerprint(split) == _fingerprint(fused), f"step {step}"
+    else:
+        raise AssertionError("sweep did not drain")
+    assert split.stats["preemptions"] > 0        # the sweep saw pressure
+    assert split.stats["swap_outs"] > 0
+    assert split.stats["cached_tokens"] > 0
+    assert [(f.request_id, f.tokens.tolist()) for f in finished_split] == \
+           [(f.request_id, f.tokens.tolist()) for f in finished_fused]
+    split.check()
+    fused.check()
+
+
+def test_commit_is_structural_then_tokens():
+    """The public commit() IS the composition — one scheduler stepped via
+    commit() must match one stepped via the two halves."""
+    a, b = _sweep_sched(), _sweep_sched()
+    for step in range(200):
+        _sweep_submit(a, step)
+        _sweep_submit(b, step)
+        if (step > 25 and not a.queue
+                and all(s.request is None for s in a.slots)):
+            break
+        plan_a, plan_b = a.schedule(), b.schedule()
+        results = _fake_results(plan_a)
+        a.commit(plan_a, results)
+        b.commit_structural(plan_b)
+        b.commit_tokens(plan_b, results)
+        assert _fingerprint(a) == _fingerprint(b)
+
+
+# ---------------------------------------------------------------------------
+# pipelined ordering: schedule-before-commit with token routing
+# ---------------------------------------------------------------------------
+
+def _fake_execute_rid(plan, ords):
+    """Runner fake with PER-REQUEST deterministic tokens (the k-th token
+    of request r is r*1000+k, mirroring per-request rng streams), honoring
+    the eos_hit same-step handoff."""
+    results: dict[int, list[int]] = {}
+    eos_hit = set()
+    for ch in plan.prefill:
+        if ch.samples:
+            rid = ch.request.request_id
+            tok = rid * 1000 + ords.get(rid, 0)
+            ords[rid] = ords.get(rid, 0) + 1
+            results.setdefault(ch.slot, []).append(tok)
+            if ch.eos_token is not None and tok == ch.eos_token:
+                eos_hit.add(ch.slot)
+    for e in plan.decode:
+        if e.slot in eos_hit:
+            continue
+        rid = e.request.request_id
+        tok = rid * 1000 + ords.get(rid, 0)
+        ords[rid] = ords.get(rid, 0) + 1
+        results.setdefault(e.slot, []).append(tok)
+    return results
+
+
+def _routing_sched():
+    sched = Scheduler(_scfg(slots=2, max_len=32, chunk=8, n_pages=8,
+                            swap_pages=6, page_size=4, paged=True))
+    rng = np.random.default_rng(5)
+    for k in range(7):
+        # odd requests stop on eos (their 4th deterministic token), so
+        # finishes land both on-slot and — under the pipelined ordering —
+        # via off-slot token routing of preempted victims
+        sched.submit(rng.integers(0, 64, int(rng.integers(3, 14))),
+                     max_new_tokens=8,
+                     eos_token=(k * 1000 + 3) if k % 2 else None)
+    return sched
+
+
+def _drive_pipelined(sched, max_steps=400):
+    """The engine's double-buffered ordering, device-free: schedule plan
+    N+1 BEFORE plan N's tokens commit, then resolve + dispatch."""
+    finished = []
+    inflight = None                    # (plan, results)
+    ords: dict[int, int] = {}
+    for _ in range(max_steps):
+        if (not sched.queue and inflight is None
+                and all(s.request is None for s in sched.slots)):
+            return finished
+        plan = sched.schedule()
+        if inflight is not None:
+            finished += sched.commit_tokens(*inflight)
+            inflight = None
+        if not (plan.admissions or plan.swap_ins or plan.reclaims
+                or plan.prefill or plan.decode):
+            continue
+        plan = sched.resolve_plan(plan)
+        results = _fake_execute_rid(plan, ords)   # "dispatch"
+        sched.commit_structural(plan)
+        inflight = (plan, results)
+    raise AssertionError("pipelined drive did not drain")
+
+
+def test_pipelined_ordering_routes_tokens_to_preempted_victims():
+    """Driving the split commit in pipelined order (plan N+1 built before
+    step N commits) over an overcommitted swap workload: every request
+    finishes with EXACTLY the token stream of the synchronous order —
+    tokens sampled for victims preempted mid-flight are credited to their
+    swap/resume records, never dropped — and pool accounting drains
+    clean."""
+    sync, pipe = _routing_sched(), _routing_sched()
+    ords: dict[int, int] = {}
+    sync_finished = []
+    for _ in range(400):
+        if not sync.queue and all(s.request is None for s in sync.slots):
+            break
+        plan = sync.schedule()
+        sync_finished += sync.commit(plan, _fake_execute_rid(plan, ords))
+    pipe_finished = _drive_pipelined(pipe)
+    assert sync.stats["preemptions"] > 0
+    assert pipe.stats["preemptions"] > 0         # pressure in both orders
+    a = {f.request_id: f.tokens.tolist() for f in sync_finished}
+    b = {f.request_id: f.tokens.tolist() for f in pipe_finished}
+    assert a == b
+    assert pipe.allocator.in_use == 0
+    assert not pipe._swap_meta and not pipe._resume
+    sync.check()
+    pipe.check()
