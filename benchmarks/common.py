@@ -211,6 +211,16 @@ def latency_samples(metrics) -> dict:
 from repro.serve.telemetry import slo_attainment  # noqa: E402,F401
 
 
+def scaling_efficiency(base_tps: float, n_tps: float, n: int) -> float:
+    """Parallel efficiency of an N-way run against the 1-way baseline:
+    (n_tps / base_tps) / n — 1.0 is perfect linear scaling, 0.5 means the
+    N devices together only doubled throughput at N=4. Used by the
+    serve_bench --mesh-model scaling rows."""
+    if base_tps <= 0 or n <= 0:
+        return 0.0
+    return (n_tps / base_tps) / n
+
+
 def preemption_attribution(metrics) -> dict:
     """Aggregate per-request preemption attribution: how many requests
     were victimized at all, and the total reclaim count by kind."""

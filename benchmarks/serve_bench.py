@@ -89,7 +89,8 @@ import jax
 import numpy as np
 
 from benchmarks.common import (causal_cfg, latency_samples, percentiles_ms,
-                               preemption_attribution, slo_attainment)
+                               preemption_attribution, scaling_efficiency,
+                               slo_attainment)
 from repro.models import model as M
 from repro.serve import AsyncEngine, Engine, ServeConfig, Telemetry
 
@@ -161,7 +162,7 @@ def _drive(eng: Engine, prompts: list[np.ndarray], *, stagger: int = 0,
 def _engine(params, cfg, *, slots: int, binary: bool, paged: bool = False,
             page_size: int = 16, n_pages: int | None = None,
             prefix_cache: bool = False, swap_pages: int = 0,
-            page_topn: int | None = None) -> Engine:
+            page_topn: int | None = None, mesh=None) -> Engine:
     tel = Telemetry(trace_file=TELEMETRY["trace_file"])
     TELEMETRY["last"] = tel
     return Engine(cfg, params, ServeConfig(max_len=MAX_LEN, batch_slots=slots,
@@ -171,21 +172,26 @@ def _engine(params, cfg, *, slots: int, binary: bool, paged: bool = False,
                                            n_pages=n_pages,
                                            prefix_cache=prefix_cache,
                                            swap_pages=swap_pages,
-                                           page_topn=page_topn),
+                                           page_topn=page_topn,
+                                           mesh=mesh),
                   telemetry=tel)
 
 
 def _kvpool_row(name: str, eng: Engine) -> str:
     """KV-pool columns: pages in use, peak watermark, preemption count,
-    max concurrent residents. Sampled after the workload drains, so
-    pages-in-use doubles as a leak check — any nonzero value means a
-    finished/preempted request failed to return pages (assert here
-    rather than letting the CSV silently absorb it)."""
+    max concurrent residents, then the pool's per-device and total cache
+    bytes (equal on one device; under --mesh-model the per-device column
+    must show the 1/N head-sharded split). Sampled after the workload
+    drains, so pages-in-use doubles as a leak check — any nonzero value
+    means a finished/preempted request failed to return pages (assert
+    here rather than letting the CSV silently absorb it)."""
     alloc = eng.allocator
     assert alloc.in_use == 0, (
         f"{alloc.in_use} pages leaked after the workload drained")
+    total_b, per_b = eng.runner.cache_device_bytes()
     return (f"{name}_kvpool,{alloc.in_use},{alloc.peak_in_use},"
-            f"{eng.stats['preemptions']},{eng.stats['max_residents']}")
+            f"{eng.stats['preemptions']},{eng.stats['max_residents']},"
+            f"{per_b},{total_b}")
 
 
 def _serve_case(params, cfg, *, slots: int, skew: str, binary: bool,
@@ -213,13 +219,18 @@ def run(print_fn=print, slot_counts=(1, 2, 4), n_req: int = 4,
         page_size: int = 16, prefix_cache: bool = False,
         swap_pages: int = 0, page_topn: int | None = None,
         hybrid: bool = False, async_mode: bool = False, seed: int = 0,
-        smoke: bool = False) -> list[str]:
+        mesh_model: int = 0, smoke: bool = False) -> list[str]:
     csv = []
     cfg = causal_cfg(d=64, layers=2, heads=4)
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     mode = f", paged (page {page_size})" if paged else ""
     print_fn(f"serving: prompts~{PROMPT_MEAN}, gen {GEN}, {n_req} requests, "
              f"prefill budget {CHUNK} tok/step{mode}")
+    # environment stamp: device count / backend / mesh shape, so scaling
+    # rows (and every other row) are self-describing in aggregated CSVs
+    mesh_shape = f"1x{mesh_model}" if mesh_model > 1 else "1x1"
+    csv.append(f"serve_env_meta,{len(jax.devices())},"
+               f"{jax.default_backend()},mesh={mesh_shape}")
     prefix = "serve_paged" if paged else "serve"
     for binary in (True, False):
         tag = "binary" if binary else "baseline"
@@ -291,7 +302,100 @@ def run(print_fn=print, slot_counts=(1, 2, 4), n_req: int = 4,
                            swap_pages=swap_pages, smoke=smoke)
         csv += _openloop_case(print_fn, params, cfg, slots=slot_counts[-1],
                               page_size=page_size, seed=seed, smoke=smoke)
+    if mesh_model > 1:
+        csv += _mesh_case(print_fn, params, cfg, slots=slot_counts[-1],
+                          n_req=n_req, page_size=page_size,
+                          mesh_model=mesh_model)
     return csv
+
+
+# nominal per-device HBM bandwidth for the bandwidth-bound decode model
+# in _mesh_case (forced host devices share one CPU, so wall-clock cannot
+# show real scaling; the model is exact arithmetic over measured traffic)
+NOMINAL_HBM_BW = 800e9
+
+
+def _mesh_case(print_fn, params, cfg, *, slots: int, n_req: int,
+               page_size: int, mesh_model: int) -> list[str]:
+    """Tensor-parallel scaling sweep: the same paged binary workload at
+    mesh model-axis sizes 1, 2, 4, ... up to --mesh-model.
+
+    The acceptance criteria live in the harness, not in eyeballs:
+
+    * sharded tokens are bit-identical to the single-device run;
+    * the aggregate decode-HBM traffic model is mesh-independent (the
+      logical work does not change), so per-device traffic is exactly
+      aggregate/N;
+    * each device holds exactly 1/N of the KV-pool bytes (kv-head
+      sharding, divisibility validated);
+    * modeled bandwidth-bound decode throughput — generated tokens over
+      (per-device traffic / NOMINAL_HBM_BW) — increases monotonically
+      with N, with scaling_efficiency reported per size.
+
+    Wall-clock tok/s is reported but NOT asserted: forced host devices
+    all live on one CPU.
+    """
+    from repro.launch.mesh import make_host_mesh
+    sweep = [m for m in (1, 2, 4, 8) if m <= mesh_model]
+    if mesh_model not in sweep:
+        sweep.append(mesh_model)
+    rng = np.random.default_rng(7)
+    prompts = _prompts(max(n_req, slots + 2), "mixed", rng)
+    print_fn(f"  mesh sweep {sweep} over {len(jax.devices())} "
+             f"{jax.default_backend()} device(s), kv_heads="
+             f"{cfg.n_kv_heads}")
+    rows: list[str] = []
+    base_tokens = base_traffic = base_total = base_modeled = None
+    prev_modeled = 0.0
+    for m in sweep:
+        mesh = make_host_mesh(data=1, model=m) if m > 1 else None
+        eng = _engine(params, cfg, slots=slots, binary=True, paged=True,
+                      page_size=page_size, mesh=mesh)
+        _drive(eng, prompts, stagger=0)      # compile outside the timing
+        eng.reset_stats()
+        gen: dict[int, list[int]] = {}
+        t0 = time.perf_counter()
+        for p in prompts:
+            gen[eng.submit(p, max_new_tokens=GEN)] = []
+        while eng.queue or any(s.request is not None for s in eng.slots):
+            for fr in eng.step():
+                gen[fr.request_id] = [int(t) for t in fr.tokens]
+        wall = time.perf_counter() - t0
+        eng.check()
+        tokens = [gen[rid] for rid in sorted(gen)]
+        ngen = sum(len(t) for t in tokens)
+        traffic = int(eng.stats["decode_hbm_bytes"])
+        total_b, per_b = eng.runner.cache_device_bytes()
+        assert per_b * m == total_b, (
+            f"m={m}: per-device pool bytes {per_b} x {m} != {total_b} — "
+            f"kv-head sharding is not an exact 1/N split")
+        modeled = ngen / ((traffic / m) / NOMINAL_HBM_BW)
+        if base_tokens is None:
+            base_tokens, base_traffic = tokens, traffic
+            base_total, base_modeled = total_b, modeled
+        else:
+            assert tokens == base_tokens, (
+                f"m={m}: sharded tokens diverge from single-device")
+            assert traffic == base_traffic, (
+                f"m={m}: aggregate HBM traffic model changed "
+                f"({traffic} != {base_traffic})")
+            assert total_b == base_total, (
+                f"m={m}: logical pool bytes changed")
+        assert modeled > prev_modeled, (
+            f"m={m}: modeled decode throughput not monotonic "
+            f"({modeled:.0f} <= {prev_modeled:.0f})")
+        prev_modeled = modeled
+        eff = scaling_efficiency(base_modeled, modeled, m)
+        us, tps = wall / ngen * 1e6, ngen / wall
+        print_fn(f"  mesh m={m}: {tps:7.1f} tok/s wall | modeled "
+                 f"{modeled / 1e6:8.1f} Mtok/s (eff {eff:.2f}) | pool "
+                 f"{per_b}/{total_b} B per-device/total | decode traffic "
+                 f"{traffic} B aggregate")
+        rows.append(f"serve_mesh_m{m},{us:.1f},{tps:.2f}")
+        rows.append(f"serve_mesh_m{m}_model,{modeled:.1f},{eff:.3f}")
+        rows.append(f"serve_mesh_m{m}_hbm,{per_b},{total_b}")
+        rows.append(_kvpool_row(f"serve_mesh_m{m}", eng))
+    return rows
 
 
 def _async_case(print_fn, params, cfg, *, slots: int, n_req: int,
@@ -771,6 +875,13 @@ if __name__ == "__main__":
                          "loop (adds tok/s + overlap-fraction CSV rows) "
                          "and the open-loop Poisson goodput-under-SLO "
                          "sweep through the asyncio front end")
+    ap.add_argument("--mesh-model", type=int, default=0,
+                    help="run the tensor-parallel scaling sweep at mesh "
+                         "model-axis sizes 1,2,..,N (implies --paged; "
+                         "needs N visible devices — force host devices "
+                         "with XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=K; asserts sharded tokens == "
+                         "unsharded and a 1/N per-device pool split)")
     ap.add_argument("--seed", type=int, default=0,
                     help="seed for the open-loop arrival process (stamped "
                          "in the serve_openloop_meta CSV row; closed-loop "
@@ -791,7 +902,7 @@ if __name__ == "__main__":
                          "pass)")
     args = ap.parse_args()
     paged = (args.paged or args.prefix_cache or bool(args.swap_pages)
-             or bool(args.page_topn))
+             or bool(args.page_topn) or bool(args.mesh_model))
     TELEMETRY["trace_file"] = args.trace_file
     if args.smoke:
         lines = run(slot_counts=(2,), n_req=2, paged=paged,
@@ -800,7 +911,9 @@ if __name__ == "__main__":
                     swap_pages=args.swap_pages,
                     page_topn=args.page_topn or None,
                     hybrid=args.hybrid, async_mode=args.async_mode,
-                    seed=args.seed, smoke=True)
+                    seed=args.seed, mesh_model=args.mesh_model,
+                    smoke=True)
+        assert any(l.startswith("serve_env_meta,") for l in lines), lines
         assert any("_ttft_p99," in l for l in lines), lines
         assert any("_queue_p99," in l for l in lines), lines
         assert any("_stats," in l for l in lines), lines
@@ -837,6 +950,18 @@ if __name__ == "__main__":
             if args.swap_pages:
                 assert any(l.startswith("serve_hybrid_swap_")
                            for l in lines), lines
+        if args.mesh_model:
+            # scaling sweep ran at every size, and the kvpool watermark
+            # row at the largest size shows a NON-trivial per-device
+            # split: per_device x N == total with per_device < total
+            assert any(l.startswith("serve_mesh_m1,") for l in lines), lines
+            assert any(l.startswith(f"serve_mesh_m{args.mesh_model},")
+                       for l in lines), lines
+            row = next(l for l in lines if l.startswith(
+                f"serve_mesh_m{args.mesh_model}_kvpool,"))
+            per_b, total_b = (int(x) for x in row.split(",")[-2:])
+            assert per_b * args.mesh_model == total_b and per_b < total_b, row
+            print(f"mesh smoke ok: {row}")
         if args.async_mode:
             assert any(l.startswith("serve_async_pipe_") and "_overlap,"
                        in l for l in lines), lines
@@ -876,6 +1001,7 @@ if __name__ == "__main__":
         run(paged=paged, page_size=args.page_size,
             prefix_cache=args.prefix_cache, swap_pages=args.swap_pages,
             page_topn=args.page_topn or None, hybrid=args.hybrid,
-            async_mode=args.async_mode, seed=args.seed)
+            async_mode=args.async_mode, seed=args.seed,
+            mesh_model=args.mesh_model)
         if args.metrics:
             print(TELEMETRY["last"].registry.render())

@@ -199,3 +199,94 @@ def cache_shardings(caches: Any, mesh: Mesh, *, global_batch: int) -> Any:
 
 def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# tensor-parallel serving (ModelRunner shard_map)
+# ---------------------------------------------------------------------------
+#
+# Serving shards differently from training: the goal is *bit-identical*
+# outputs to the single-device runner (the serving parity pins), so the
+# layout must never change any FP accumulation order.
+#
+# * wq/wk/wv: head-output dim (last) over "model" — each device projects
+#   only its local heads. Contiguous shards cover whole GQA groups because
+#   validate_serve_mesh pins n_kv_heads % tp == 0.
+# * wo: REPLICATED. The per-layer collective is a tiled all_gather of the
+#   attention context over heads *before* the wo matmul, which reproduces
+#   the exact single-device contraction order (a Megatron-style psum of
+#   partial wo products would not be bit-exact).
+# * FFN / MoE / SSM / norms / embed: replicated — redundant compute, zero
+#   extra collectives, exact.
+# * lm_head: vocab(last)-sharded when untied and divisible (the contraction
+#   dim D stays unsplit, so local columns are exact dot products and the
+#   final tiled all_gather of logits is exact); otherwise replicated.
+# * Cache pools: leaves named k_bits/k/v shard the kv-head dim (axis 2,
+#   after the leading n_groups axis) over "model"; SSM/conv state and
+#   everything else is replicated. Block tables and plan arrays are always
+#   replicated — the Scheduler stays device-free.
+
+_SERVE_HEAD_SHARDED = ("wq", "wk", "wv")
+_POOL_HEAD_LEAVES = ("k_bits", "k", "v")
+
+
+def serve_param_spec(path, leaf, mesh: Mesh) -> P:
+    """Exact-parity TP spec for one serving parameter leaf."""
+    name = _path_names(path)[-1]
+    tp = axis_size(mesh, "model")
+    if tp <= 1 or leaf.ndim == 0:
+        return P()
+    if name in _SERVE_HEAD_SHARDED:
+        if leaf.shape[-1] % tp != 0:
+            raise ValueError(
+                f"serving TP: {name} head-output dim {leaf.shape[-1]} not "
+                f"divisible by mesh model axis {tp}")
+        return P(*([None] * (leaf.ndim - 1)), "model")
+    if name == "lm_head" and leaf.shape[-1] % tp == 0:
+        return P(*([None] * (leaf.ndim - 1)), "model")
+    return P()
+
+
+def serve_param_pspecs(params: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: serve_param_spec(path, leaf, mesh), params)
+
+
+def serve_param_shardings(params: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, serve_param_spec(path, leaf, mesh)), params)
+
+
+def serve_cache_spec(path, leaf, mesh: Mesh) -> P:
+    """Head-sharded pool spec for one serving cache leaf.
+
+    Pool/cache layouts put the kv-head dim at axis 2 in every case —
+    paged `k_bits [G, n_pages, hk, w, page]` / `v|k [G, n_pages, hk, ..]`,
+    dense `k_bits [G, B, hk, w, T]` / `v|k [G, B, hk, T, dh]`, and the
+    pooled cross caches (same with B = pool entries).
+    """
+    name = _path_names(path)[-1]
+    tp = axis_size(mesh, "model")
+    if tp <= 1 or name not in _POOL_HEAD_LEAVES:
+        return P()
+    if leaf.ndim < 3 or leaf.shape[2] % tp != 0:
+        raise ValueError(
+            f"serving TP: cache leaf {name} shape {leaf.shape} has no "
+            f"kv-head axis divisible by mesh model axis {tp}")
+    # no trailing Nones: jit normalizes output specs to the shortest
+    # form, and a hash-unequal (if semantically equal) input spec would
+    # re-specialize the step on its second call — breaking the
+    # 1-prefill + 1-decode trace pin
+    return P(None, None, "model")
+
+
+def serve_cache_pspecs(caches: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: serve_cache_spec(path, leaf, mesh), caches)
+
+
+def serve_cache_shardings(caches: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, serve_cache_spec(path, leaf, mesh)), caches)

@@ -142,6 +142,10 @@ def select_pages(scores: Array, block_tables: Array, lengths: Array, *,
     -BIG, and any that still get picked (fewer resident blocks than
     n_sel) keep count 0 and a clamped in-range page id — compacted
     tables never contain the -1 / out-of-bounds drop sentinel.
+
+    Rows are independent, so under tensor-parallel serving the R =
+    B x local-kv-heads rows of each shard compact their own tables with
+    no collective — selection is per (slot, LOCAL kv-head) by design.
     """
     r, nb = scores.shape
     n_sel = min(n_sel, nb)
@@ -183,11 +187,21 @@ def paged_decode_attention(q_bits: Array, k_pool: Array, v_pool: Array,
     O(page_topn * page). At page_topn >= max_blocks the dense walk runs
     unchanged; at page_topn >= resident pages the result is
     bit-identical to dense (all resident pages selected, same order).
+
+    Head-shardable by construction: every row of the flattened
+    (slot, kv-head) grid — scoring, `select_pages` compaction, and the
+    decode walk — depends only on its own kv head's pool slice and the
+    replicated block table. Tensor-parallel serving calls this unchanged
+    inside shard_map on local head slices (q_bits [B, H/tp, W], pools
+    sharded on their kv-head axis) with zero cross-device traffic; the
+    group structure must survive the split, i.e. Hk % tp == 0 (enforced
+    by serve/validate.py) so h/hk stays the global group size g.
     """
     interpret = default_interpret() if interpret is None else interpret
     b, h, w = q_bits.shape
     _, hk, w2, page = k_pool.shape
     assert w == w2
+    assert h % hk == 0, (h, hk)   # whole GQA groups (global or TP-local)
     g = h // hk
     dv = v_pool.shape[-1]
     nb = block_tables.shape[1]

@@ -18,7 +18,24 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_host_mesh(*, data: int | None = None, model: int = 1):
-    """Small mesh over the actually-present devices (tests/examples)."""
+    """Small mesh over the actually-present devices (tests/examples).
+
+    Validates the requested shape against the visible device count so a
+    bad --mesh-model fails with an actionable message instead of
+    jax.make_mesh's opaque reshape error.
+    """
     n = len(jax.devices())
-    data = n // model if data is None else data
+    if model < 1:
+        raise ValueError(f"mesh model axis must be >= 1, got {model}")
+    if data is None:
+        data = max(n // model, 1)
+    if data < 1:
+        raise ValueError(f"mesh data axis must be >= 1, got {data}")
+    if data * model > n:
+        raise ValueError(
+            f"mesh ({data} data x {model} model = {data * model} devices) "
+            f"exceeds the {n} visible {jax.default_backend()} device(s); "
+            f"shrink the mesh, or force host devices with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N (set "
+            f"before jax initializes)")
     return jax.make_mesh((data, model), ("data", "model"))

@@ -112,6 +112,14 @@ def main():
                     help="block on the cache pools between execute and "
                          "commit so per-step execute timings measure "
                          "device time, not dispatch time (with telemetry)")
+    ap.add_argument("--mesh-model", type=int, default=1,
+                    help="tensor-parallel serving: shard the runner's step "
+                         "over a 1 x N device mesh's model axis (params "
+                         "head-sharded, KV pools sharded over kv heads, "
+                         "outputs bit-identical to N=1). N must divide "
+                         "n_kv_heads and fit the visible devices "
+                         "(XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=K forces K host devices)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -133,6 +141,12 @@ def main():
     telemetry = (Telemetry(trace_file=args.trace_file, fence=args.fence)
                  if (args.trace_file or args.metrics or args.fence or slo)
                  else None)
+    mesh = None
+    if args.mesh_model > 1:
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(data=1, model=args.mesh_model)
+        print(f"mesh: 1 data x {args.mesh_model} model over "
+              f"{len(jax.devices())} {jax.default_backend()} device(s)")
     eng = Engine(cfg, params, ServeConfig(max_len=max_len,
                                           batch_slots=args.slots,
                                           prefill_chunk=args.prefill_chunk,
@@ -143,8 +157,12 @@ def main():
                                           prefix_cache=args.prefix_cache,
                                           swap_pages=args.swap_pages,
                                           victim_policy=args.victim_policy,
-                                          page_topn=args.page_topn or None),
+                                          page_topn=args.page_topn or None,
+                                          mesh=mesh),
                  telemetry=telemetry)
+    if mesh is not None:
+        total_b, per_b = eng.runner.cache_device_bytes()
+        print(f"  kv pools: {total_b} bytes total, {per_b} per device")
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, seed=args.seed)
 

@@ -66,7 +66,14 @@ def _rope(q: Array, k: Array, q_pos: Array, k_pos: Array, cfg: ModelConfig):
     return q, k
 
 
-def _out(p: dict, ctx: Array, cfg: ModelConfig) -> Array:
+def _out(p: dict, ctx: Array, cfg: ModelConfig,
+         axis_name: str | None = None) -> Array:
+    # Tensor-parallel serving: ctx holds the LOCAL head slice and wo is
+    # replicated, so gather the full head axis first — this reproduces the
+    # exact single-device contraction order (bit-identical, unlike a psum
+    # of partial wo products).
+    if axis_name is not None:
+        ctx = jax.lax.all_gather(ctx, axis_name, axis=1, tiled=True)
     b, h, s, dh = ctx.shape
     y = ctx.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
     return y.astype(p["wo"].dtype) @ p["wo"]
@@ -411,7 +418,8 @@ def attn_serve(p: dict, x: Array, *, cfg: ModelConfig, cache: dict,
                n_valid: Array | None = None,
                block_tables: Array | None = None,
                active: Array | None = None,
-               page_topn: int | None = None) -> tuple[Array, dict]:
+               page_topn: int | None = None,
+               axis_name: str | None = None) -> tuple[Array, dict]:
     """Prefill (S>1) or decode (S=1) step against a KV cache.
 
     x: [B, S, D]; pos: scalar int32 (uniform batch) or [B] int32 vector of
@@ -445,6 +453,14 @@ def attn_serve(p: dict, x: Array, *, cfg: ModelConfig, cache: dict,
     At page_topn >= resident pages every path is bit-identical to its
     dense twin. Ignored for prefill chunks (s > 1) and cross layers, so
     threading it unconditionally preserves the one-prefill-trace pin.
+
+    axis_name (STATIC str, optional): tensor-parallel serving under
+    shard_map — cfg describes the LOCAL head slice (n_heads/n_kv_heads
+    divided by the mesh model axis), p/cache carry local shards, and the
+    only collectives are the context all_gather in `_out` plus a pmax on
+    the per-slot page scores of the jnp page-sparse paths (max is exactly
+    associative, so the global top-N page pick stays bit-identical; the
+    kernel path selects per (slot, LOCAL kv-head) and needs no traffic).
     """
     b, s, _ = x.shape
     dh = cfg.dh
@@ -529,8 +545,14 @@ def attn_serve(p: dict, x: Array, *, cfg: ModelConfig, cache: dict,
                     sc = pscore.page_score_bounds(
                         qb[:, :, 0].reshape(b, hk, h // hk, -1), k_bits_bp,
                         kv_len_b, d=dh, page=page)      # [B, Hk, nb]
+                    slot_sc = jnp.max(sc, axis=1)
+                    if axis_name is not None:
+                        # per-slot selection needs the max over ALL kv
+                        # heads, not just this shard's — exact (max is
+                        # associative), tiny ([B, nb] ints)
+                        slot_sc = jax.lax.pmax(slot_sc, axis_name)
                     kv_valid = jnp.logical_and(
-                        kv_valid, _page_topn_keep(jnp.max(sc, axis=1),
+                        kv_valid, _page_topn_keep(slot_sc,
                                                   kv_len_b, page=page,
                                                   n_sel=page_topn))
                 y = A.had_infer_attention(qb, kb_rows, v_rows, d=dh, n=n,
@@ -565,13 +587,15 @@ def attn_serve(p: dict, x: Array, *, cfg: ModelConfig, cache: dict,
             logits = jnp.where(kv_valid[:, None, None], logits, -jnp.inf)
             sc = jnp.max(logits.reshape(b, hk, h // hk, t_max // page, page),
                          axis=(1, 2, 4))                    # [B, nb]
+            if axis_name is not None:
+                sc = jax.lax.pmax(sc, axis_name)   # max over ALL heads
             kv_valid = jnp.logical_and(
                 kv_valid, _page_topn_keep(sc, kv_len_b, page=page,
                                           n_sel=page_topn))
         y = A.standard_attention(q, k_rows, v_rows, scale=scale_t,
                                  causal=cfg.causal and not cross,
                                  q_offset=pos, kv_valid=kv_valid)
-    return _out(p, y, cfg), cache
+    return _out(p, y, cfg, axis_name=axis_name), cache
 
 
 def fill_cross_cache(p: dict, image_embeds: Array, *, cfg: ModelConfig,

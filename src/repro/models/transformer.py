@@ -359,7 +359,8 @@ def serve_step(params: dict, batch: dict, caches: dict, *, cfg: ModelConfig,
                n_valid: Array | None = None,
                block_tables: Array | None = None,
                page_topn: int | None = None,
-               state_tables: Array | None = None) -> tuple[Array, dict]:
+               state_tables: Array | None = None,
+               axis_name: str | None = None) -> tuple[Array, dict]:
     """Prefill (tokens [B, S>1]) or decode (tokens [B, 1]) against caches.
 
     Returns (logits [B, S, V], updated caches). `pos` is the index of the
@@ -403,6 +404,14 @@ def serve_step(params: dict, batch: dict, caches: dict, *, cfg: ModelConfig,
     never recompiles. Scatters drop inactive rows, mirroring the paged
     KV write masking, so the per-slot ``active`` select below bypasses
     pooled state leaves too.
+
+    `axis_name` (STATIC str, optional): tensor-parallel serving — this
+    call runs inside shard_map with cfg describing the LOCAL head slice,
+    attention params/caches sharded over heads, everything else (FFN,
+    SSM, norms, embed) replicated. Collectives: one context all_gather
+    per attention layer (inside attn_serve's `_out`), a pmax on jnp
+    page-sparse scores, and a final tiled all_gather of the logits when
+    the lm_head is vocab-sharded.
     """
     x = constrain(_embed_inputs(params, batch, cfg), "b..")
     img = _image_context(params, batch, cfg)
@@ -459,7 +468,7 @@ def serve_step(params: dict, batch: dict, caches: dict, *, cfg: ModelConfig,
                     p_i["mixer"], img, cfg=cfg, binary=binary)
                 mix, nc = AB.attn_serve(p_i["mixer"], h, cfg=cfg, cache=c_i,
                                         pos=pos, n=n, binary=binary,
-                                        cross=True)
+                                        cross=True, axis_name=axis_name)
                 nc = c_i
                 if pooled:
                     # Decode never refills the cross cache (no image
@@ -473,7 +482,8 @@ def serve_step(params: dict, batch: dict, caches: dict, *, cfg: ModelConfig,
                                         n_valid=n_valid,
                                         block_tables=block_tables,
                                         active=active,
-                                        page_topn=page_topn)
+                                        page_topn=page_topn,
+                                        axis_name=axis_name)
             x = x + mix
             if cfg.d_ff > 0:
                 h2 = common.rmsnorm(p_i["norm2"], x, eps=cfg.norm_eps)
@@ -512,4 +522,10 @@ def serve_step(params: dict, batch: dict, caches: dict, *, cfg: ModelConfig,
     x = common.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = constrain(common.unembed(x, head), "b.m")
+    if axis_name is not None and logits.shape[-1] != cfg.padded_vocab:
+        # vocab-sharded lm_head: local columns are exact dot products
+        # (the contraction dim is unsplit), so a tiled gather in device
+        # order reassembles the exact single-device logits
+        logits = jax.lax.all_gather(logits, axis_name,
+                                    axis=logits.ndim - 1, tiled=True)
     return logits, new_caches

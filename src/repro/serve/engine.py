@@ -66,7 +66,8 @@ from repro.serve.scheduler import (FinishedRequest, Request, SamplingParams,
 from repro.serve.statepool import StatePool
 from repro.serve.telemetry import RequestMetrics, Telemetry  # noqa: F401
 from repro.serve.validate import (state_layer_positions,
-                                  validate_serve_features)
+                                  validate_serve_features,
+                                  validate_serve_mesh)
 
 __all__ = ["Engine", "FinishedRequest", "Request", "RequestMetrics",
            "SamplingParams", "SchedulePlan", "Scheduler", "ModelRunner",
@@ -94,6 +95,9 @@ class Engine:
         # model-pattern x feature coherence lives in ONE shared helper
         # (serve/validate.py) — the runner re-checks the same rules
         validate_serve_features(cfg.layer_pattern, scfg)
+        # tensor-parallel coherence (ServeConfig.mesh): fail before the
+        # runner builds a shard_map over an indivisible head count
+        validate_serve_mesh(cfg, scfg)
         state_layers = (len(state_layer_positions(cfg.layer_pattern))
                         if scfg.paged else 0)
         # when a telemetry hub is attached, its registry IS the engine's

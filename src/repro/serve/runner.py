@@ -60,13 +60,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hamming
+from repro.distributed import sharding as shd
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.serve.paged import pages_needed
 from repro.serve.scheduler import SamplingParams, SchedulePlan, ServeConfig
 from repro.serve.telemetry import SERVE_COUNTERS, MetricsRegistry
-from repro.serve.validate import (resolve_state_pages, state_layer_positions,
-                                  validate_serve_features)
+from repro.serve.validate import (mesh_model_size, resolve_state_pages,
+                                  state_layer_positions,
+                                  validate_serve_features,
+                                  validate_serve_mesh)
 
 Array = jax.Array
 
@@ -150,6 +153,15 @@ class ModelRunner:
         # optional observability hub (set by the Engine)
         self.telemetry = None
         validate_serve_features(cfg.layer_pattern, scfg)
+        validate_serve_mesh(cfg, scfg)
+        # tensor-parallel serving (ServeConfig.mesh, model axis > 1): the
+        # jitted step runs under shard_map with params head-sharded and
+        # the KV pools sharded over the kv-head dim; everything host-side
+        # (scheduler, swap accounting, telemetry, this runner's plan
+        # bookkeeping) stays mesh-oblivious, and all counters stay
+        # LOGICAL/aggregate so stats are identical across mesh sizes.
+        self.mesh = getattr(scfg, "mesh", None)
+        self._tp = mesh_model_size(scfg)
         self.n = scfg.topn if scfg.topn is not None else cfg.had.topn(scfg.max_len)
         self.chunk = max(1, min(scfg.prefill_chunk, scfg.max_len))
         self.page = scfg.page_size
@@ -185,28 +197,106 @@ class ModelRunner:
         # with an async D2H in flight (finalized to numpy at wait()/sync())
         self._pending_swaps: list[int] = []
 
+        if self._tp > 1:
+            self._step = self._build_sharded_step()
+        else:
+            @functools.partial(jax.jit, static_argnames=("n", "binary",
+                                                         "page_topn"))
+            def _step(params, batch, caches, pos, active, n_valid,
+                      block_tables, state_tables, *, n, binary, page_topn):
+                return M.serve_step(params, batch, caches, cfg=cfg, pos=pos,
+                                    n=n, binary=binary, logits_mode="last",
+                                    active=active, n_valid=n_valid,
+                                    block_tables=block_tables,
+                                    page_topn=page_topn,
+                                    state_tables=state_tables)
+            self._step = _step
+
+    def _build_sharded_step(self):
+        """shard_map'd twin of the jitted step (exact-parity TP).
+
+        The body sees LOCAL shards: a cfg with n_heads/n_kv_heads divided
+        by the mesh model axis (head_dim pinned first — `dh` derives from
+        d_model/n_heads when unset, which must not change), head-sharded
+        wq/wk/wv + kv-head-sharded pool slices, and everything else
+        replicated. Collectives are confined to serve_step (one context
+        all_gather per attention layer, a page-score pmax, the final
+        logits gather) so outputs stay bit-identical to the single-device
+        step. Same static argnames -> the 1-prefill + 1-decode trace pin
+        holds per mesh size.
+        """
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec
+
+        cfg, mesh, tp = self.cfg, self.mesh, self._tp
+        self.params = jax.device_put(
+            self.params, shd.serve_param_shardings(self.params, mesh))
+        local_cfg = dataclasses.replace(
+            cfg, head_dim=cfg.dh,
+            n_heads=cfg.n_heads // tp,
+            n_kv_heads=cfg.n_kv_heads // tp)
+        param_ps = shd.serve_param_pspecs(self.params, mesh)
+        cache_ps = shd.serve_cache_pspecs(self.caches, mesh)
+        rep = PartitionSpec()
+
         @functools.partial(jax.jit, static_argnames=("n", "binary",
                                                      "page_topn"))
-        def _step(params, batch, caches, pos, active, n_valid, block_tables,
-                  state_tables, *, n, binary, page_topn):
-            return M.serve_step(params, batch, caches, cfg=cfg, pos=pos,
-                                n=n, binary=binary, logits_mode="last",
-                                active=active, n_valid=n_valid,
-                                block_tables=block_tables,
-                                page_topn=page_topn,
-                                state_tables=state_tables)
-        self._step = _step
+        def _step(params, batch, caches, pos, active, n_valid,
+                  block_tables, state_tables, *, n, binary, page_topn):
+            def body(params, batch, caches, pos, active, n_valid,
+                     block_tables, state_tables):
+                return M.serve_step(params, batch, caches, cfg=local_cfg,
+                                    pos=pos, n=n, binary=binary,
+                                    logits_mode="last", active=active,
+                                    n_valid=n_valid,
+                                    block_tables=block_tables,
+                                    page_topn=page_topn,
+                                    state_tables=state_tables,
+                                    axis_name="model")
+            fn = shard_map(body, mesh=mesh,
+                           in_specs=(param_ps, rep, cache_ps, rep, rep,
+                                     rep, rep, rep),
+                           out_specs=(rep, cache_ps),
+                           check_rep=False)
+            return fn(params, batch, caches, pos, active, n_valid,
+                      block_tables, state_tables)
+        return _step
+
+    def cache_device_bytes(self) -> tuple[int, int]:
+        """(logical_total, per_device) bytes of the attention KV caches.
+
+        Under tensor-parallel serving each pool leaf's per-device
+        footprint comes from its sharding's `shard_shape` — the kv-head
+        dim shrinks 1/tp exactly (divisibility is validated), while block
+        tables and every plan array stay replicated. Single-device the
+        two numbers are equal."""
+        total = per = 0
+        for key in self._pool_keys():
+            for leaf in self.caches[key].values():
+                total += int(leaf.nbytes)
+                shard = leaf.sharding.shard_shape(leaf.shape)
+                per += int(np.prod(shard)) * leaf.dtype.itemsize
+        return total, per
 
     def _init_caches(self) -> dict:
         scfg = self.scfg
         state_pages = self.n_state_pages if self._state_positions else None
         if scfg.paged:
-            return M.init_caches(self.cfg, scfg.batch_slots, scfg.max_len,
-                                 binary=scfg.binary, paged=True,
-                                 n_pages=self.n_pages, page_size=self.page,
-                                 state_pages=state_pages)
-        return M.init_caches(self.cfg, scfg.batch_slots, scfg.max_len,
-                             binary=scfg.binary)
+            caches = M.init_caches(self.cfg, scfg.batch_slots, scfg.max_len,
+                                   binary=scfg.binary, paged=True,
+                                   n_pages=self.n_pages, page_size=self.page,
+                                   state_pages=state_pages)
+        else:
+            caches = M.init_caches(self.cfg, scfg.batch_slots, scfg.max_len,
+                                   binary=scfg.binary)
+        if self._tp > 1:
+            # head-shard the pools up front so the first step pays no
+            # resharding transfer; eager swap-in scatters / state-entry
+            # `.at[].set`s leave layouts for jit to restore, which it does
+            # against these same specs
+            caches = jax.device_put(
+                caches, shd.serve_cache_shardings(caches, self.mesh))
+        return caches
 
     def reset_caches(self) -> None:
         """Rebuild the cache pools from zeros (lockstep prefill contract)

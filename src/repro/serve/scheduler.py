@@ -137,6 +137,13 @@ class ServeConfig:
     # victim (multi-tenant SLO protection). Victim_policy then ranks
     # within the chosen tier.
     priority: bool = False
+    # Tensor-parallel serving: a jax Mesh with a "model" axis (see
+    # launch.mesh.make_host_mesh). The ModelRunner shard_maps its jitted
+    # step over it — params head-sharded, page pools sharded over the
+    # kv-head dim, block tables replicated. OPAQUE here: the scheduler
+    # never touches it (and this module must keep importing no jax);
+    # validation lives in serve/validate.py, execution in runner.py.
+    mesh: Any = None
 
 
 @dataclasses.dataclass

@@ -60,3 +60,44 @@ def validate_serve_features(layer_pattern: str, scfg) -> None:
         raise ValueError(
             "page_topn requires self-attention layers "
             f"(pattern {layer_pattern!r} has no 'A')")
+
+
+def mesh_model_size(scfg) -> int:
+    """Size of ``ServeConfig.mesh``'s "model" axis (1 when unset).
+
+    Duck-typed on ``mesh.shape`` (a mapping of axis name -> size) so this
+    module — like the scheduler — never imports jax.
+    """
+    mesh = getattr(scfg, "mesh", None)
+    if mesh is None:
+        return 1
+    try:
+        return int(dict(mesh.shape).get("model", 1))
+    except (TypeError, ValueError, AttributeError):
+        raise ValueError(
+            f"ServeConfig.mesh must expose a mapping-like .shape with a "
+            f"'model' axis (got {mesh!r})") from None
+
+
+def validate_serve_mesh(cfg, scfg) -> None:
+    """Raise ValueError when the mesh cannot shard this model's heads.
+
+    Serving TP shards the KV pools (and wq/wk/wv) over whole GQA kv-head
+    groups, so the mesh's model axis must divide ``ModelConfig.n_kv_heads``
+    exactly — GSPMD-style padding would break the bit-identical parity
+    pins. Pure-SSM patterns (no attention layers) have nothing to shard
+    and run replicated under any mesh.
+    """
+    tp = mesh_model_size(scfg)
+    if tp <= 1:
+        return
+    hk = int(getattr(cfg, "n_kv_heads", 0) or 0)
+    if "A" not in cfg.layer_pattern and "C" not in cfg.layer_pattern:
+        return
+    if hk % tp != 0:
+        raise ValueError(
+            f"mesh model axis ({tp}) must divide ModelConfig.n_kv_heads "
+            f"({hk}): serving shards the KV pools over whole GQA kv-head "
+            f"groups. Pick a --mesh-model / ServeConfig.mesh model-axis "
+            f"size from the divisors of n_kv_heads, or repack the model's "
+            f"heads.")

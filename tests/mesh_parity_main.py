@@ -1,0 +1,145 @@
+"""Multi-device tensor-parallel serving parity suite (subprocess driver).
+
+NOT collected by pytest (no test_ prefix): the tier-1 suite runs in one
+process whose jax is already initialized with a single device, so
+tests/test_mesh_serving.py launches this script in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 set BEFORE jax init.
+
+Every case runs the identical workload on an unsharded engine and a
+shard_map'd one (ServeConfig.mesh, model axis 2 — plus one model-axis-4
+config) and asserts the generated tokens are BIT-IDENTICAL, across:
+
+  binary-jnp / Pallas-kernel / fp paths, plain paged serving, dense
+  (non-paged) serving, prefix-cache-warm passes, swap-restored
+  overcommit, top-N page-sparse decode, and the pipelined async loop —
+  with the 1-prefill + 1-decode trace pin intact under shard_map and the
+  pool leaves actually spanning the mesh devices.
+
+Any assertion failure makes the script exit nonzero, failing the
+wrapping test.
+"""
+import dataclasses
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+assert "--xla_force_host_platform_device_count" in os.environ.get(
+    "XLA_FLAGS", ""), "run me via tests/test_mesh_serving.py"
+
+import jax                                                   # noqa: E402
+import numpy as np                                           # noqa: E402
+
+from repro.launch.mesh import make_host_mesh                 # noqa: E402
+from repro.models import ModelConfig                         # noqa: E402
+from repro.models import model as M                          # noqa: E402
+from repro.models.config import HADConfig                    # noqa: E402
+from repro.serve import Engine, ServeConfig                  # noqa: E402
+
+assert len(jax.devices()) >= 4, (
+    f"forced host devices missing: {len(jax.devices())}")
+
+CFG = ModelConfig(name="mesh", family="dense", n_layers=2, d_model=32,
+                  n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64,
+                  head_dim=16, param_dtype="float32", q_block=16,
+                  remat=False)
+KCFG = dataclasses.replace(CFG, had=HADConfig(use_kernels=True,
+                                              kernel_block_q=8,
+                                              kernel_block_t=16))
+# n_kv_heads=4 -> exercises a model-axis-4 mesh (1 kv head per device)
+CFG4 = dataclasses.replace(CFG, n_kv_heads=4)
+KCFG4 = dataclasses.replace(CFG4, had=KCFG.had)
+
+PARAMS = {id(CFG): M.init_params(jax.random.PRNGKey(0), CFG)}
+PARAMS[id(KCFG)] = PARAMS[id(CFG)]
+PARAMS[id(CFG4)] = M.init_params(jax.random.PRNGKey(1), CFG4)
+PARAMS[id(KCFG4)] = PARAMS[id(CFG4)]
+
+RNG = np.random.default_rng(3)
+PROMPTS = [RNG.integers(0, CFG.vocab_size, size=s) for s in (11, 7, 14, 9)]
+GEN = 5
+
+
+def scfg(binary, mesh=None, **kw):
+    kw.setdefault("paged", True)
+    kw.setdefault("page_size", 8)
+    return ServeConfig(max_len=48, batch_slots=2, binary=binary, topn=6,
+                       prefill_chunk=8, mesh=mesh, **kw)
+
+
+def drive(cfg, sc, *, pipelined=False, warm_pass=False):
+    """Run PROMPTS to completion; returns (tokens per request, engine).
+
+    warm_pass: run the workload twice and return the SECOND pass's
+    tokens (the prefix-cache-warm regime — pass 1 populates the index).
+    """
+    eng = Engine(cfg, PARAMS[id(cfg)], sc)
+    for rounds in range(2 if warm_pass else 1):
+        ids = [eng.submit(p, max_new_tokens=GEN) for p in PROMPTS]
+        out = eng.run_pipelined() if pipelined else eng.run()
+    eng.check()
+    return [out[i].tolist() for i in ids], eng
+
+
+def case(name, cfg, mk, *, model=2, pipelined=False, warm_pass=False):
+    want, _ = drive(cfg, mk(None), pipelined=pipelined, warm_pass=warm_pass)
+    mesh = make_host_mesh(data=1, model=model)
+    got, eng = drive(cfg, mk(mesh), pipelined=pipelined, warm_pass=warm_pass)
+    assert got == want, (f"{name}: sharded tokens diverge\n"
+                         f"  want {want}\n  got  {got}")
+    print(f"ok: {name} (model={model})")
+    return eng
+
+
+# --- binary jnp / kernel / fp, plain paged ---------------------------------
+eng = case("binary-jnp paged", CFG, lambda m: scfg(True, m))
+
+# trace pin: one prefill-chunk trace + one decode trace under shard_map
+assert eng._step._cache_size() == 2, eng._step._cache_size()
+print("ok: 1-prefill + 1-decode trace pin under shard_map")
+
+# the pools are actually head-sharded across the mesh devices
+leaf = eng.runner.caches["pos0"]["v"]
+assert len(leaf.sharding.device_set) == 2, leaf.sharding
+total_b, per_b = eng.runner.cache_device_bytes()
+assert per_b * 2 == total_b and per_b < total_b, (per_b, total_b)
+print("ok: pool leaves span the mesh, per-device bytes = total/2")
+
+case("kernel paged", KCFG, lambda m: scfg(True, m))
+case("fp paged", CFG, lambda m: scfg(False, m))
+
+# --- dense (non-paged) caches shard the same way ---------------------------
+case("binary-jnp dense", CFG, lambda m: scfg(True, m, paged=False))
+
+# --- prefix-cache-warm: warm pass tokens (and cache hits) identical --------
+eng = case("prefix-warm binary", CFG,
+           lambda m: scfg(True, m, prefix_cache=True), warm_pass=True)
+assert eng.stats["cached_tokens"] > 0, "warm pass never hit the prefix cache"
+case("prefix-warm kernel", KCFG,
+     lambda m: scfg(True, m, prefix_cache=True), warm_pass=True)
+
+# --- swap-restored: overcommitted pool forces swap-out + restore -----------
+def swap_scfg(binary):
+    def mk(m):
+        return scfg(binary, m, n_pages=4, swap_pages=32)
+    return mk
+
+eng = case("swap-restored binary", CFG, swap_scfg(True))
+assert eng.stats["swap_outs"] > 0, "overcommit never swapped"
+case("swap-restored fp", CFG, swap_scfg(False))
+
+# --- page-sparse decode: jnp pmax + kernel per-row selection ---------------
+case("page-sparse binary-jnp", CFG, lambda m: scfg(True, m, page_topn=2))
+case("page-sparse kernel", KCFG, lambda m: scfg(True, m, page_topn=2))
+case("page-sparse fp", CFG, lambda m: scfg(False, m, page_topn=2))
+
+# --- pipelined async double-buffered loop ----------------------------------
+eng = case("pipelined binary", CFG,
+           lambda m: scfg(True, m, prefix_cache=True, swap_pages=32),
+           pipelined=True)
+assert eng._step._cache_size() == 2, eng._step._cache_size()
+
+# --- model-axis 4 (1 kv head per device) -----------------------------------
+case("binary-jnp paged x4", CFG4, lambda m: scfg(True, m), model=4)
+case("kernel paged x4", KCFG4, lambda m: scfg(True, m), model=4)
+case("page-sparse x4", CFG4, lambda m: scfg(True, m, page_topn=2), model=4)
+
+print("ALL MESH PARITY CASES PASSED")
